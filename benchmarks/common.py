@@ -1,0 +1,46 @@
+"""Shared benchmark helpers: synthetic pool + oracle-attached server."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.data.synthetic import image_pool
+from repro.service.config import ALServiceConfig
+from repro.service.server import ALServer
+
+POOL_N = 800
+EVAL_N = 400
+NOISE = 0.3     # calibrated so the warm-start model has real headroom
+
+
+def make_pool(seed: int = 0, n: int = POOL_N, noise: float = NOISE):
+    X, Y = image_pool(n, seed=seed, noise=noise)
+    EX, EY = image_pool(EVAL_N, seed=seed + 1, noise=noise)
+    return X, Y, EX, EY
+
+
+def make_server(X, Y, EX, EY, *, batch_size: int = 32,
+                fetch_latency_s: float = 0.0, push: bool = True):
+    srv = ALServer(ALServiceConfig(batch_size=batch_size),
+                   fetch_latency_s=fetch_latency_s)
+    key2y = {}
+    if push:
+        keys = srv.push_data(list(X))
+        key2y = dict(zip(keys, Y))
+        srv.attach_oracle(lambda ks: [key2y[k] for k in ks], EX, EY)
+    return srv, key2y
+
+
+def warm_start(srv, key2y, n: int = 30, seed: int = 123):
+    """Paper §4.2: the initial model is trained on randomly-selected labeled
+    data BEFORE AL scores the pool (uncertainty from an untrained head is
+    noise — the cold-start effect of the paper's own ref [18])."""
+    rng = np.random.default_rng(seed)
+    keys = list(key2y)
+    sel = rng.choice(len(keys), size=min(n, len(keys)), replace=False)
+    chosen = [keys[i] for i in sel]
+    srv.label(chosen, [key2y[k] for k in chosen])
+    return srv.train_and_eval()
+
+
+def row(name: str, us_per_call: float, derived: str) -> str:
+    return f"{name},{us_per_call:.1f},{derived}"

@@ -1,0 +1,40 @@
+"""Paper Fig. 4a — one-round accuracy per AL strategy, with the paper's
+lower bound (random) and upper bound (train on the full pool)."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import make_pool, make_server, row, warm_start
+
+STRATEGIES = ["random", "lc", "mc", "rc", "es", "kcg", "coreset", "dbal"]
+
+
+SEEDS = (0, 7, 13)
+
+
+def run() -> list:
+    out = []
+    init_accs = []
+    accs = {s: [] for s in STRATEGIES}
+    for seed in SEEDS:
+        X, Y, EX, EY = make_pool(seed=seed)
+        for strategy in STRATEGIES:
+            srv, key2y = make_server(X, Y, EX, EY)
+            init_accs.append(warm_start(srv, key2y, seed=seed + 99))
+            res = srv.query(budget=100, strategy=strategy, rng_seed=seed)
+            srv.label(res["keys"], [key2y[k] for k in res["keys"]])
+            accs[strategy].append(srv.train_and_eval())
+    for strategy in STRATEGIES:
+        a = np.asarray(accs[strategy])
+        out.append(row(f"fig4a/{strategy}", 0.0,
+                       f"top1_acc={a.mean():.3f}+-{a.std():.3f}"))
+    out.append(row("fig4a/initial_model", 0.0,
+                   f"top1_acc={np.mean(init_accs):.3f}"))
+    # upper bound: label everything (first seed)
+    X, Y, EX, EY = make_pool(seed=SEEDS[0])
+    srv, key2y = make_server(X, Y, EX, EY)
+    all_keys = list(key2y)
+    srv.label(all_keys, [key2y[k] for k in all_keys])
+    acc = srv.train_and_eval()
+    out.append(row("fig4a/full_data_upper_bound", 0.0, f"top1_acc={acc:.3f}"))
+    return out

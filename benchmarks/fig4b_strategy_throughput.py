@@ -1,0 +1,29 @@
+"""Paper Fig. 4b — selection throughput (images/s through the query path)
+per strategy; uncertainty strategies are near-free while Core-Set's greedy
+min-dist loop is the heavy one, matching the paper's ordering."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import make_pool, make_server, row
+
+STRATEGIES = ["random", "lc", "mc", "rc", "es", "kcg", "coreset", "dbal"]
+
+
+def run() -> list:
+    X, Y, EX, EY = make_pool()
+    srv, key2y = make_server(X, Y, EX, EY)
+    out = []
+    for strategy in STRATEGIES:
+        srv.query(budget=100, strategy=strategy)          # warm up jits
+        t0 = time.perf_counter()
+        reps = 3
+        for r in range(reps):
+            srv.query(budget=100, strategy=strategy, rng_seed=r)
+        dt = (time.perf_counter() - t0) / reps
+        thr = len(X) / dt
+        out.append(row(f"fig4b/{strategy}", dt * 1e6,
+                       f"throughput_img_s={thr:.0f}"))
+    return out

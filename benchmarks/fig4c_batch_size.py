@@ -1,0 +1,27 @@
+"""Paper Fig. 4c — end-to-end AL throughput vs inference batch size.
+
+Reproduces the paper's observed regimes: flat at tiny batches (transfer
+dominated), steep gains in the middle, saturation once compute capacity is
+reached."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import make_pool, make_server, row
+
+
+def run() -> list:
+    X, Y, EX, EY = make_pool(n=512)
+    out = []
+    for bs in (1, 2, 4, 8, 16, 32, 64):
+        srv, _ = make_server(X, Y, EX, EY, batch_size=bs,
+                             fetch_latency_s=0.005, push=False)
+        t0 = time.perf_counter()
+        srv.push_data(list(X), pipelined=True)
+        dt = time.perf_counter() - t0
+        thr = len(X) / dt
+        out.append(row(f"fig4c/bs{bs}", dt * 1e6 / len(X),
+                       f"throughput_img_s={thr:.1f}"))
+    return out

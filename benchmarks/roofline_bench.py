@@ -1,0 +1,55 @@
+"""Roofline rows from the dry-run artifacts (deliverable g) + live kernel
+micro-bench of the fused uncertainty scoring vs its unfused reference."""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import row
+
+
+def run() -> list:
+    out = []
+    for mesh_file in ("runs/dryrun_single.json", "runs/dryrun_multi.json"):
+        if not os.path.exists(mesh_file):
+            out.append(row(f"roofline/{os.path.basename(mesh_file)}", 0.0,
+                           "missing (run repro.launch.dryrun first)"))
+            continue
+        with open(mesh_file) as f:
+            recs = json.load(f)
+        n_ok = sum(1 for r in recs.values() if r["status"] == "ok")
+        for key, r in sorted(recs.items()):
+            if r["status"] != "ok":
+                continue
+            rf = r["roofline"]
+            out.append(row(
+                f"roofline/{key}", rf["step_time_bound"] * 1e6,
+                f"bottleneck={rf['bottleneck']};"
+                f"t_comp={rf['t_compute']:.3e};t_mem={rf['t_memory']:.3e};"
+                f"t_coll={rf['t_collective']:.3e};"
+                f"useful={rf['useful_flops_ratio']:.3f};"
+                f"mfu_bound={rf['mfu_bound']:.4f}"))
+        out.append(row(f"roofline/{os.path.basename(mesh_file)}_summary",
+                       0.0, f"cells_ok={n_ok}"))
+
+    # live micro-bench: fused uncertainty scoring vs unfused reference (CPU)
+    rng = np.random.default_rng(0)
+    logits = jnp.asarray(rng.normal(size=(2048, 32000)), jnp.float32)
+    from repro.kernels.uncertainty import ops, ref
+
+    fused = jax.jit(lambda x: ops.uncertainty_stats(x, impl="ref"))
+    unfused = jax.jit(lambda x: {
+        k: v for k, v in ref.uncertainty_stats_ref(x).items()})
+    jax.block_until_ready(fused(logits))
+    t0 = time.perf_counter()
+    for _ in range(3):
+        jax.block_until_ready(fused(logits))
+    dt = (time.perf_counter() - t0) / 3
+    out.append(row("kernels/uncertainty_scoring_2048x32k", dt * 1e6,
+                   f"rows_per_s={2048/dt:.0f}"))
+    return out

@@ -1,0 +1,54 @@
+"""Benchmark harness — one module per paper table/figure (deliverable d).
+
+Prints ``name,us_per_call,derived`` CSV.
+
+  PYTHONPATH=src python -m benchmarks.run [--only table2,fig4a,...]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+BENCHES = ["table2", "fig4a", "fig4b", "fig4c", "fig5", "roofline"]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset of " + ",".join(BENCHES))
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else set(BENCHES)
+
+    from benchmarks import (fig4a_strategy_accuracy, fig4b_strategy_throughput,
+                            fig4c_batch_size, fig5_pshea, roofline_bench,
+                            table2_pipeline)
+
+    mods = {
+        "table2": table2_pipeline,
+        "fig4a": fig4a_strategy_accuracy,
+        "fig4b": fig4b_strategy_throughput,
+        "fig4c": fig4c_batch_size,
+        "fig5": fig5_pshea,
+        "roofline": roofline_bench,
+    }
+    print("name,us_per_call,derived")
+    failures = 0
+    for name in BENCHES:
+        if name not in only:
+            continue
+        t0 = time.perf_counter()
+        try:
+            for line in mods[name].run():
+                print(line, flush=True)
+        except Exception as e:  # keep the harness going
+            failures += 1
+            print(f"{name}/ERROR,0.0,{type(e).__name__}: {e}", flush=True)
+        print(f"{name}/_wall,{(time.perf_counter()-t0)*1e6:.0f},done",
+              flush=True)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

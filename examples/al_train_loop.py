@@ -1,0 +1,92 @@
+"""End-to-end driver: multi-round active learning over an LM token pool,
+with real fine-tuning between rounds (the 'data-centric LLM' workflow this
+framework scales to pods).
+
+Each round: score the unlabeled pool with the current model (fused
+uncertainty on last-token logits + pooled embeddings), select with a zoo
+strategy, 'label' the selected sequences (synthetic oracle = their true
+continuation), fine-tune the LM on the labeled set, evaluate held-out loss.
+Compares an uncertainty strategy against random selection.
+
+Run: PYTHONPATH=src python examples/al_train_loop.py  (CPU, ~2-4 min)
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.core.strategies.zoo import get_strategy
+from repro.data.synthetic import lm_pool
+from repro.kernels.uncertainty import ops as unc_ops
+from repro.models.transformer import Model
+from repro.optim.optimizer import make_optimizer
+
+ARCH = "qwen1.5-4b"
+POOL, SEQ, ROUNDS, BUDGET, FT_STEPS = 256, 48, 3, 32, 30
+
+
+def main():
+    cfg = get_smoke_config(ARCH)
+    model = Model(cfg)
+    opt = make_optimizer("adamw")
+    tokens, _ = lm_pool(POOL, SEQ + 1, cfg.vocab, seed=0)
+    eval_tokens, _ = lm_pool(64, SEQ + 1, cfg.vocab, seed=99)
+    eval_batch = {"tokens": jnp.asarray(eval_tokens[:, :-1]),
+                  "labels": jnp.asarray(eval_tokens[:, 1:])}
+
+    loss_fn = jax.jit(model.loss)
+    logits_fn = jax.jit(model.last_logits)
+    embed_fn = jax.jit(model.embed_pool)
+
+    @jax.jit
+    def train_step(params, opt_state, batch):
+        (loss, _), grads = jax.value_and_grad(model.loss, has_aux=True)(
+            params, batch)
+        p, s, _ = opt.update(grads, opt_state, params)
+        return p, s, loss
+
+    def run(strategy_name: str):
+        params = model.init(jax.random.PRNGKey(0))
+        opt_state = opt.init(params)
+        strat = get_strategy(strategy_name)
+        labeled = np.zeros(POOL, bool)
+        evals = []
+        for rnd in range(ROUNDS):
+            pool_idx = np.where(~labeled)[0]
+            pool_batch = {"tokens": jnp.asarray(tokens[pool_idx, :SEQ])}
+            logits = logits_fn(params, pool_batch)
+            probs = jax.nn.softmax(logits, axis=-1)
+            emb = embed_fn(params, pool_batch) if "embeddings" in strat.needs \
+                else None
+            sel = strat.select(
+                jax.random.PRNGKey(rnd), min(BUDGET, len(pool_idx)),
+                probs=probs if "probs" in strat.needs else None,
+                embeddings=emb,
+                labeled_embeddings=None)
+            labeled[pool_idx[np.asarray(sel)]] = True
+            lab_idx = np.where(labeled)[0]
+            for step in range(FT_STEPS):
+                take = np.random.default_rng(rnd * 1000 + step).choice(
+                    lab_idx, size=min(8, len(lab_idx)), replace=False)
+                batch = {"tokens": jnp.asarray(tokens[take, :-1]),
+                         "labels": jnp.asarray(tokens[take, 1:])}
+                params, opt_state, _ = train_step(params, opt_state, batch)
+            ev = float(loss_fn(params, eval_batch)[0])
+            evals.append(ev)
+            print(f"  [{strategy_name}] round {rnd}: labeled "
+                  f"{labeled.sum():3d}/{POOL}, eval loss {ev:.4f}")
+        return evals
+
+    t0 = time.perf_counter()
+    print("strategy: entropy sampling (es)")
+    es = run("es")
+    print("strategy: random")
+    rnd = run("random")
+    print(f"\nfinal eval loss  es={es[-1]:.4f}  random={rnd[-1]:.4f} "
+          f" ({time.perf_counter()-t0:.0f}s total)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,20 @@
+"""Fill EXPERIMENTS.md roofline table placeholders from runs/*.json."""
+import re
+import sys
+
+sys.path.insert(0, "src")
+from repro.roofline.render import render  # noqa: E402
+
+with open("EXPERIMENTS.md") as f:
+    text = f.read()
+
+main_table = render(["runs/dryrun_single.json", "runs/dryrun_multi.json"])
+tppad_table = render(["runs/dryrun_tppad.json"])
+
+text = text.replace("<!-- ROOFLINE_TABLE -->", main_table)
+text = text.replace("<!-- TPPAD_TABLE -->", tppad_table)
+
+with open("EXPERIMENTS.md", "w") as f:
+    f.write(text)
+print("tables filled:",
+      main_table.count("\n") - 1, "+", tppad_table.count("\n") - 1, "rows")

@@ -1,0 +1,177 @@
+"""Sharded, atomic, async checkpointing with elastic restore.
+
+Layout per step:  <dir>/step_<n>/
+    manifest.msgpack   tree structure, shapes, dtypes, step, metadata
+    arr_<i>.npy[.zst]  one file per leaf (real multi-host would write one
+                       file per shard; single-process writes the full leaf)
+
+Guarantees:
+  * atomic — written to a tmpdir, fsynced, then renamed; a crash mid-save
+    never corrupts the latest checkpoint (restore scans for complete dirs).
+  * async — ``save_async`` snapshots to host memory synchronously and
+    writes on a background thread, so the train loop only blocks for the
+    device->host copy.
+  * elastic — ``restore`` takes target shardings; leaves are device_put
+    against the *new* mesh, so restoring onto a different device count
+    (scale up/down) or different sharding rules just works.
+"""
+from __future__ import annotations
+
+import os
+import shutil
+import threading
+from typing import Any, Optional
+
+import jax
+import msgpack
+import numpy as np
+
+try:
+    import zstandard as zstd
+except ImportError:  # pragma: no cover
+    zstd = None
+
+try:
+    import ml_dtypes
+    _EXTRA_DTYPES = {"bfloat16": np.dtype(ml_dtypes.bfloat16)}
+    for _n in ("float8_e4m3fn", "float8_e5m2"):
+        if hasattr(ml_dtypes, _n):
+            _EXTRA_DTYPES[_n] = np.dtype(getattr(ml_dtypes, _n))
+except ImportError:  # pragma: no cover
+    _EXTRA_DTYPES = {}
+
+
+def _np_dtype(name: str) -> np.dtype:
+    if name in _EXTRA_DTYPES:
+        return _EXTRA_DTYPES[name]
+    return np.dtype(name)
+
+
+def _leaf_paths(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    paths = ["/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                      for k in path) for path, _ in flat]
+    leaves = [leaf for _, leaf in flat]
+    return paths, leaves, treedef
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3, compress: bool = False):
+        self.dir = directory
+        self.keep = keep
+        self.compress = compress and zstd is not None
+        os.makedirs(directory, exist_ok=True)
+        self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+
+    # ----------------------------------------------------------- save ----
+    def save(self, step: int, tree: Any, metadata: Optional[dict] = None):
+        host_tree = jax.tree.map(lambda x: np.asarray(x), tree)
+        self._write(step, host_tree, metadata or {})
+
+    def save_async(self, step: int, tree: Any,
+                   metadata: Optional[dict] = None):
+        self.wait()
+        host_tree = jax.tree.map(lambda x: np.asarray(x), tree)  # sync copy
+
+        def work():
+            try:
+                self._write(step, host_tree, metadata or {})
+            except BaseException as e:  # surfaced on next wait()
+                self._error = e
+
+        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread.start()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err
+
+    def _write(self, step: int, host_tree, metadata: dict):
+        paths, leaves, _ = _leaf_paths(host_tree)
+        final = os.path.join(self.dir, f"step_{step:012d}")
+        tmp = final + ".tmp"
+        if os.path.exists(tmp):
+            shutil.rmtree(tmp)
+        os.makedirs(tmp)
+        entries = []
+        for i, (p, leaf) in enumerate(zip(paths, leaves)):
+            arr = np.asarray(leaf)
+            if arr.ndim and not arr.flags["C_CONTIGUOUS"]:
+                arr = np.ascontiguousarray(arr)
+            fname = f"arr_{i}.bin" + (".zst" if self.compress else "")
+            blob = arr.tobytes()
+            if self.compress:
+                blob = zstd.ZstdCompressor(level=3).compress(blob)
+            with open(os.path.join(tmp, fname), "wb") as f:
+                f.write(blob)
+            entries.append({"path": p, "file": fname,
+                            "dtype": str(arr.dtype),
+                            "shape": list(arr.shape)})
+        manifest = {"step": step, "entries": entries, "metadata": metadata,
+                    "complete": True}
+        with open(os.path.join(tmp, "manifest.msgpack"), "wb") as f:
+            f.write(msgpack.packb(manifest))
+            f.flush()
+            os.fsync(f.fileno())
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+        self._gc()
+
+    def _gc(self):
+        steps = self.all_steps()
+        for s in steps[: -self.keep]:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s:012d}"),
+                          ignore_errors=True)
+
+    # -------------------------------------------------------- restore ----
+    def all_steps(self):
+        out = []
+        for name in sorted(os.listdir(self.dir)):
+            if not name.startswith("step_") or name.endswith(".tmp"):
+                continue
+            if not os.path.exists(os.path.join(self.dir, name,
+                                               "manifest.msgpack")):
+                continue
+            out.append(int(name[5:]))
+        return out
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, template: Any, step: Optional[int] = None,
+                shardings: Any = None) -> tuple:
+        """Returns (tree, step, metadata). ``template`` fixes the pytree
+        structure; ``shardings`` (optional matching tree) resharding onto
+        the current mesh (elastic restore)."""
+        step = step if step is not None else self.latest_step()
+        assert step is not None, f"no checkpoints in {self.dir}"
+        d = os.path.join(self.dir, f"step_{step:012d}")
+        with open(os.path.join(d, "manifest.msgpack"), "rb") as f:
+            manifest = msgpack.unpackb(f.read(), raw=False)
+        by_path = {e["path"]: e for e in manifest["entries"]}
+        paths, leaves, treedef = _leaf_paths(template)
+        shard_leaves = (jax.tree.leaves(shardings) if shardings is not None
+                        else [None] * len(leaves))
+        out = []
+        for p, tmpl, sh in zip(paths, leaves, shard_leaves):
+            e = by_path[p]
+            fpath = os.path.join(d, e["file"])
+            with open(fpath, "rb") as f:
+                blob = f.read()
+            if e["file"].endswith(".zst"):
+                blob = zstd.ZstdDecompressor().decompress(blob)
+            arr = np.frombuffer(blob, dtype=_np_dtype(e["dtype"])).reshape(
+                e["shape"]).copy()
+            if sh is not None:
+                out.append(jax.device_put(arr, sh))
+            else:
+                out.append(jax.numpy.asarray(arr))
+        tree = jax.tree_util.tree_unflatten(treedef, out)
+        return tree, manifest["step"], manifest["metadata"]

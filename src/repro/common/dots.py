@@ -1,0 +1,28 @@
+"""Mixed-precision matmul helper.
+
+TPU target: bf16 operands feed the MXU directly with an f32 accumulator
+(``preferred_element_type``) — no materialized converts, which matters
+because XLA hoists a whole-cache ``convert`` out of the layer scan when the
+model casts explicitly (EXPERIMENTS.md §Perf A1).
+
+CPU runtime (smoke tests, examples): the XLA:CPU DotThunk cannot execute
+BF16xBF16=F32, so operands are cast to f32. The roofline analyzer treats
+those converts as transparent (they do not exist in the TPU lowering), so
+the accounting stays target-faithful either way.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+def einsum_f32(spec: str, lhs, rhs):
+    """einsum with f32 accumulation; operands stay in storage dtype on TPU."""
+    if _cpu():
+        return jnp.einsum(spec, lhs.astype(jnp.float32),
+                          rhs.astype(jnp.float32))
+    return jnp.einsum(spec, lhs, rhs, preferred_element_type=jnp.float32)

@@ -1,0 +1,109 @@
+"""Parameter declaration system.
+
+Models declare parameters as ``ParamDecl`` pytrees (shape + logical axes +
+init recipe). The same declaration tree is used three ways:
+
+  * ``init_params``      -> materialized arrays (smoke tests, examples)
+  * ``param_shapes``     -> ShapeDtypeStruct tree (dry-run lowering, no alloc)
+  * ``partition.tree_pspecs`` -> PartitionSpec tree (pjit shardings)
+
+Logical axis names are resolved to mesh axes by ``repro.distributed.partition``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamDecl:
+    """Declaration of a single parameter tensor."""
+
+    shape: Tuple[int, ...]
+    logical: Tuple[Optional[str], ...]
+    dtype: Any = jnp.bfloat16
+    init: str = "normal"          # normal | zeros | ones | embed | uniform
+    scale: Optional[float] = None  # stddev override; default 1/sqrt(fan_in)
+    fan_in_axes: Optional[Tuple[int, ...]] = None  # axes counted as fan-in
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.logical), (self.shape, self.logical)
+
+    @property
+    def sds(self) -> jax.ShapeDtypeStruct:
+        return jax.ShapeDtypeStruct(self.shape, self.dtype)
+
+
+def is_decl(x) -> bool:
+    return isinstance(x, ParamDecl)
+
+
+def _fan_in(decl: ParamDecl) -> float:
+    if decl.fan_in_axes is not None:
+        axes = decl.fan_in_axes
+    elif len(decl.shape) <= 1:
+        axes = ()
+    else:
+        # By convention the last axis is the output axis; "layer"-stacked
+        # leading axes are excluded from fan-in.
+        axes = tuple(
+            i for i, name in enumerate(decl.logical[:-1]) if name != "layer"
+        )
+    fan = 1.0
+    for a in axes:
+        fan *= decl.shape[a]
+    return max(fan, 1.0)
+
+
+def init_one(decl: ParamDecl, key: jax.Array) -> jax.Array:
+    if decl.init == "zeros":
+        return jnp.zeros(decl.shape, decl.dtype)
+    if decl.init == "ones":
+        return jnp.ones(decl.shape, decl.dtype)
+    scale = decl.scale
+    if decl.init == "embed":
+        scale = scale if scale is not None else 0.02
+        x = jax.random.normal(key, decl.shape, jnp.float32) * scale
+        return x.astype(decl.dtype)
+    if decl.init == "uniform":
+        lim = scale if scale is not None else float(np.sqrt(1.0 / _fan_in(decl)))
+        x = jax.random.uniform(key, decl.shape, jnp.float32, -lim, lim)
+        return x.astype(decl.dtype)
+    # default: truncated-normal-ish scaled normal
+    std = scale if scale is not None else float(1.0 / np.sqrt(_fan_in(decl)))
+    x = jax.random.normal(key, decl.shape, jnp.float32) * std
+    return x.astype(decl.dtype)
+
+
+def init_params(decls, rng: jax.Array):
+    """Materialize a ParamDecl pytree into arrays (deterministic in rng)."""
+    leaves, treedef = jax.tree.flatten(decls, is_leaf=is_decl)
+    keys = jax.random.split(rng, max(len(leaves), 1))
+    arrs = [init_one(d, k) for d, k in zip(leaves, keys)]
+    return jax.tree.unflatten(treedef, arrs)
+
+
+def param_shapes(decls):
+    """ShapeDtypeStruct tree for lowering without allocation."""
+    return jax.tree.map(lambda d: d.sds, decls, is_leaf=is_decl)
+
+
+def logical_tree(decls):
+    """Tree of logical-axis tuples (same structure as params)."""
+    return jax.tree.map(lambda d: d.logical, decls, is_leaf=is_decl)
+
+
+def count_params(decls) -> int:
+    leaves = jax.tree.leaves(decls, is_leaf=is_decl)
+    return int(sum(int(np.prod(d.shape)) for d in leaves))
+
+
+def param_bytes(decls) -> int:
+    leaves = jax.tree.leaves(decls, is_leaf=is_decl)
+    return int(
+        sum(int(np.prod(d.shape)) * jnp.dtype(d.dtype).itemsize for d in leaves)
+    )

@@ -1,0 +1,55 @@
+"""Arch config registry: ``get_config(name)`` / ``get_smoke_config(name)``."""
+from __future__ import annotations
+
+import importlib
+
+from repro.configs.base import (  # noqa: F401
+    ArchConfig,
+    GriffinConfig,
+    MLAConfig,
+    MoEConfig,
+    RWKVConfig,
+    ShapeConfig,
+    SHAPES,
+    shape_applicable,
+)
+
+ARCH_IDS = [
+    "phi3_medium_14b",
+    "qwen15_4b",
+    "qwen3_8b",
+    "internlm2_20b",
+    "whisper_medium",
+    "deepseek_moe_16b",
+    "deepseek_v3_671b",
+    "recurrentgemma_2b",
+    "rwkv6_3b",
+    "llava_next_34b",
+]
+
+# canonical ids from the assignment -> module names
+ALIASES = {
+    "phi3-medium-14b": "phi3_medium_14b",
+    "qwen1.5-4b": "qwen15_4b",
+    "qwen3-8b": "qwen3_8b",
+    "internlm2-20b": "internlm2_20b",
+    "whisper-medium": "whisper_medium",
+    "deepseek-moe-16b": "deepseek_moe_16b",
+    "deepseek-v3-671b": "deepseek_v3_671b",
+    "recurrentgemma-2b": "recurrentgemma_2b",
+    "rwkv6-3b": "rwkv6_3b",
+    "llava-next-34b": "llava_next_34b",
+}
+
+
+def _module(name: str):
+    name = ALIASES.get(name, name).replace("-", "_")
+    return importlib.import_module(f"repro.configs.{name}")
+
+
+def get_config(name: str) -> ArchConfig:
+    return _module(name).CONFIG
+
+
+def get_smoke_config(name: str) -> ArchConfig:
+    return _module(name).smoke_config()

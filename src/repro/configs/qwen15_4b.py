@@ -1,0 +1,23 @@
+"""qwen1.5-4b — dense, QKV bias. [hf:Qwen/Qwen1.5-0.5B; hf]"""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="qwen1.5-4b",
+    family="dense",
+    n_layers=40,
+    d_model=2560,
+    n_heads=20,
+    n_kv_heads=20,
+    d_ff=6912,
+    vocab=151936,
+    qkv_bias=True,
+    rope_theta=1000000.0,
+)
+
+
+def smoke_config() -> ArchConfig:
+    import dataclasses
+    return dataclasses.replace(
+        CONFIG, name="qwen15-smoke", n_layers=2, d_model=64, n_heads=4,
+        n_kv_heads=4, d_ff=128, vocab=256, q_chunk=16, kv_chunk=16,
+    )

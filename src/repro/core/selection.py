@@ -1,0 +1,133 @@
+"""Distributed AL selection over a device mesh (pod-scale data selection).
+
+The paper's stage-level parallelism scales out here: every data shard scores
+its slice of the pool locally, then
+
+  * ``distributed_top_k``  — budget-B selection via local top-B + all_gather
+    merge (log-depth reduction semantics; each device ships only B
+    candidates, not its whole shard), and
+  * ``distributed_k_center`` — greedy k-center where each round does a local
+    argmax + a tiny all_gather of (dist, index, vector) candidates,
+
+both as ``shard_map`` programs over the ``data`` axis with ``jax.lax``
+collectives. Selection cost per round is O(pool/n_devices) compute +
+O(n_devices x d) comm — independent of global pool size.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map as _shard_map
+from jax.sharding import Mesh, PartitionSpec as P
+
+
+def shard_map(f, **kw):
+    """shard_map with the static-replication check disabled (outputs are
+    made replicated *dynamically* by the trailing all_gathers)."""
+    try:
+        return _shard_map(f, check_vma=False, **kw)
+    except TypeError:  # older jax spelling
+        return _shard_map(f, check_rep=False, **kw)
+
+
+def distributed_top_k(scores: jax.Array, budget: int, mesh: Mesh,
+                      axis: str = "data") -> jax.Array:
+    """Global top-``budget`` indices of a data-sharded score vector.
+
+    scores: (N,) sharded over ``axis``. Returns (budget,) global indices,
+    replicated.
+    """
+    n_dev = mesh.shape[axis]
+    N = scores.shape[0]
+    shard = N // n_dev
+
+    def local(s):
+        s = s.reshape(-1)
+        b = min(budget, s.shape[0])
+        v, i = jax.lax.top_k(s, b)
+        if b < budget:
+            v = jnp.pad(v, (0, budget - b), constant_values=-jnp.inf)
+            i = jnp.pad(i, (0, budget - b))
+        base = jax.lax.axis_index(axis) * shard
+        gi = i + base
+        # merge: gather every device's candidates, take global top-B
+        av = jax.lax.all_gather(v, axis)            # (n_dev, B)
+        ai = jax.lax.all_gather(gi, axis)
+        fv, fi = jax.lax.top_k(av.reshape(-1), budget)
+        return ai.reshape(-1)[fi].astype(jnp.int32)
+
+    fn = shard_map(local, mesh=mesh, in_specs=P(axis),
+                   out_specs=P())
+    return fn(scores)
+
+
+def distributed_k_center(embeddings: jax.Array, budget: int, mesh: Mesh,
+                         axis: str = "data",
+                         init_center: Optional[jax.Array] = None) -> jax.Array:
+    """Greedy k-center over a data-sharded (N, d) embedding pool.
+
+    Per round: local min-dist argmax -> all_gather (value, global index,
+    vector) -> replicated argmax picks the winner -> everyone updates local
+    min-dists against the winning vector. Returns (budget,) global indices.
+    """
+    n_dev = mesh.shape[axis]
+    N, d = embeddings.shape
+    shard = N // n_dev
+
+    def local(emb):
+        emb = emb.reshape(shard, d).astype(jnp.float32)
+        base = jax.lax.axis_index(axis) * shard
+        sel = jnp.zeros((budget,), jnp.int32)
+        start = 0
+        if init_center is None:
+            # seed = global point 0; it IS the first returned center
+            # (sel[0] stays 0 == the seed's global index)
+            c0 = jax.lax.all_gather(emb[:1], axis)[0, 0]
+            start = 1
+        else:
+            c0 = init_center.astype(jnp.float32)
+        mind = jnp.sum((emb - c0) ** 2, axis=-1)
+        if init_center is None:
+            on_shard0 = jax.lax.axis_index(axis) == 0
+            mind = jnp.where((jnp.arange(shard) == 0) & on_shard0, -1.0, mind)
+
+        def body(i, carry):
+            mind, sel = carry
+            li = jnp.argmax(mind)
+            lv = mind[li]
+            cand_v = jax.lax.all_gather(lv, axis)          # (n_dev,)
+            cand_i = jax.lax.all_gather(li + base, axis)
+            cand_e = jax.lax.all_gather(emb[li], axis)     # (n_dev, d)
+            w = jnp.argmax(cand_v)
+            sel = sel.at[i].set(cand_i[w].astype(jnp.int32))
+            center = cand_e[w]
+            nd = jnp.sum((emb - center) ** 2, axis=-1)
+            mind = jnp.minimum(mind, nd)
+            # never re-pick the winner on its home shard
+            is_mine = (cand_i[w] >= base) & (cand_i[w] < base + shard)
+            mind = jnp.where(
+                (jnp.arange(shard) == (cand_i[w] - base)) & is_mine,
+                -1.0, mind)
+            return mind, sel
+
+        _, sel = jax.lax.fori_loop(start, budget, body, (mind, sel))
+        return sel
+
+    fn = shard_map(local, mesh=mesh, in_specs=P(axis), out_specs=P())
+    return fn(embeddings)
+
+
+def sharded_scores(logits: jax.Array, kind: str, mesh: Mesh,
+                   axis: str = "data") -> jax.Array:
+    """Data-parallel fused uncertainty scoring (stays sharded)."""
+    from repro.kernels.uncertainty import ops
+
+    def local(lg):
+        return ops.uncertainty_scores(lg, kind)
+
+    fn = shard_map(local, mesh=mesh, in_specs=P(axis, None),
+                   out_specs=P(axis))
+    return fn(logits)

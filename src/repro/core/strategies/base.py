@@ -1,0 +1,40 @@
+"""AL strategy API.
+
+A strategy consumes model artifacts for the *unlabeled pool* — class
+probabilities (uncertainty family) and/or penultimate embeddings (diversity
+family) — and returns exactly ``budget`` unique pool indices. All strategies
+are pure-JAX (jit-able, shard_map-able); the service layer feeds them from
+the distributed scorer.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class Strategy:
+    name: str
+    needs: Sequence[str]          # subset of {"probs", "embeddings"}
+    select_fn: Callable           # (rng, budget, **artifacts) -> (budget,) i32
+
+    def select(self, rng, budget: int, *, probs=None, embeddings=None,
+               labeled_embeddings=None) -> jax.Array:
+        kw = {}
+        if "probs" in self.needs:
+            assert probs is not None, f"{self.name} needs probs"
+            kw["probs"] = probs
+        if "embeddings" in self.needs:
+            assert embeddings is not None, f"{self.name} needs embeddings"
+            kw["embeddings"] = embeddings
+            kw["labeled_embeddings"] = labeled_embeddings
+        return self.select_fn(rng, budget, **kw)
+
+
+def top_k_select(scores: jax.Array, budget: int) -> jax.Array:
+    """Indices of the ``budget`` highest scores (higher = more informative)."""
+    _, idx = jax.lax.top_k(scores, budget)
+    return idx.astype(jnp.int32)

@@ -1,0 +1,130 @@
+"""Diversity-based strategies: KCG, Core-Set, DBAL (+ Random baseline).
+
+K-center greedy is the paper's heaviest strategy (Fig. 4b: lowest
+throughput); the inner ``min(dist(pool, new_center))`` update is the fused
+Pallas kernel in repro/kernels/pairwise.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.strategies.base import Strategy
+from repro.core.strategies.uncertainty import lc_scores
+
+
+def _min_dist_update(embeddings, center, mindist):
+    from repro.kernels.pairwise import ops
+    d = ops.sq_dist_to_center(embeddings, center)
+    return jnp.minimum(mindist, d)
+
+
+def k_center_greedy(rng, budget: int, embeddings, init_centers=None):
+    """2-approx k-center: repeatedly take the point farthest from all
+    centers. init_centers: (M,d) existing (labeled) centers or None."""
+    N, _ = embeddings.shape
+    emb = embeddings.astype(jnp.float32)
+    selected = jnp.zeros((budget,), jnp.int32)
+    start = 0
+    if init_centers is not None and init_centers.shape[0] > 0:
+        from repro.kernels.pairwise import ops
+        mindist = ops.pairwise_min_dist(emb, init_centers.astype(jnp.float32))
+    else:
+        # the seed IS the first returned center (otherwise its cluster can
+        # be silently dropped from the returned set)
+        first = jax.random.randint(rng, (), 0, N).astype(jnp.int32)
+        selected = selected.at[0].set(first)
+        mindist = jnp.sum((emb - emb[first]) ** 2, axis=-1).at[first].set(-1.0)
+        start = 1
+
+    def body(i, carry):
+        mindist, selected = carry
+        idx = jnp.argmax(mindist).astype(jnp.int32)
+        selected = selected.at[i].set(idx)
+        mindist = _min_dist_update(emb, emb[idx], mindist)
+        mindist = mindist.at[idx].set(-1.0)   # never re-pick
+        return mindist, selected
+
+    _, selected = jax.lax.fori_loop(start, budget, body, (mindist, selected))
+    return selected
+
+
+def _kcg_select(rng, budget, *, embeddings, labeled_embeddings=None):
+    return k_center_greedy(rng, budget, embeddings, init_centers=None)
+
+
+def _coreset_select(rng, budget, *, embeddings, labeled_embeddings=None):
+    return k_center_greedy(rng, budget, embeddings,
+                           init_centers=labeled_embeddings)
+
+
+def _kmeans(rng, x, k: int, iters: int = 10, weights=None):
+    """Weighted Lloyd's with kmeans++-style seeding. x: (N,d) f32."""
+    N, d = x.shape
+    w = jnp.ones((N,), jnp.float32) if weights is None else weights
+    keys = jax.random.split(rng, 2)
+    # seeding: weighted random first, then farthest-point (cheap ++ variant)
+    first = jax.random.categorical(keys[0], jnp.log(w + 1e-9))
+    cent0 = jnp.zeros((k, d), jnp.float32).at[0].set(x[first])
+
+    def seed_body(i, cent):
+        from repro.kernels.pairwise import ops
+        md = ops.pairwise_min_dist(x, cent) * w
+        md = jnp.where(jnp.arange(N) < 0, 0.0, md)
+        idx = jnp.argmax(md)
+        return cent.at[i].set(x[idx])
+
+    cents = jax.lax.fori_loop(1, k, seed_body, cent0)
+
+    def lloyd(_, cents):
+        from repro.kernels.pairwise import ops
+        assign = ops.pairwise_argmin(x, cents)           # (N,)
+        one = jax.nn.one_hot(assign, k, dtype=jnp.float32) * w[:, None]
+        num = one.T @ x                                   # (k,d)
+        den = jnp.maximum(one.sum(0)[:, None], 1e-9)
+        return num / den
+
+    cents = jax.lax.fori_loop(0, iters, lloyd, cents)
+    return cents
+
+
+def diverse_mini_batch(rng, budget: int, probs, embeddings, beta: int = 10):
+    """DBAL [55]: prefilter beta*budget by LC, weighted k-means, then pick
+    the nearest pool point to each centroid (unique via masking)."""
+    from repro.kernels.pairwise import ops
+    scores = lc_scores(probs)
+    m = min(beta * budget, scores.shape[0])
+    top_scores, top_idx = jax.lax.top_k(scores, m)
+    x = embeddings[top_idx].astype(jnp.float32)
+    cents = _kmeans(rng, x, budget, weights=jnp.maximum(top_scores, 1e-6))
+
+    # nearest point to each centroid without duplicates
+    d2 = ops.pairwise_sq_dists(cents, x)                  # (k, m)
+
+    def body(i, carry):
+        taken_mask, sel = carry
+        row = jnp.where(taken_mask, jnp.inf, d2[i])
+        j = jnp.argmin(row)
+        return taken_mask.at[j].set(True), sel.at[i].set(top_idx[j])
+
+    sel = jnp.zeros((budget,), jnp.int32)
+    _, sel = jax.lax.fori_loop(0, budget, body,
+                               (jnp.zeros((m,), bool), sel))
+    return sel
+
+
+def _dbal_select(rng, budget, *, probs, embeddings, labeled_embeddings=None):
+    return diverse_mini_batch(rng, budget, probs, embeddings)
+
+
+def _random_select(rng, budget, *, probs=None):
+    n = probs.shape[0]
+    return jax.random.permutation(rng, n)[:budget].astype(jnp.int32)
+
+
+k_center = Strategy("kcg", ("embeddings",), _kcg_select)
+core_set = Strategy("coreset", ("embeddings",), _coreset_select)
+dbal = Strategy("dbal", ("probs", "embeddings"), _dbal_select)
+random_sampling = Strategy("random", ("probs",), _random_select)

@@ -1,0 +1,61 @@
+"""Hybrid strategies (uncertainty x diversity) — beyond the paper's zoo.
+
+BADGE-lite: k-means++ sampling over uncertainty-scaled embeddings — the
+gradient-embedding magnitude of BADGE [2] collapses to (1 - p_max) * h for
+the last-layer bias-free case, which keeps the embedding dimension at d
+instead of V*d (V up to 256k here).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.strategies.base import Strategy
+from repro.core.strategies.uncertainty import lc_scores, mc_scores
+
+
+def kmeans_pp_sample(rng, x, k: int):
+    """k-means++ seeding AS the selection (BADGE's sampler). x: (N,d)."""
+    N, _ = x.shape
+    keys = jax.random.split(rng, k + 1)
+    first = jax.random.randint(keys[0], (), 0, N).astype(jnp.int32)
+    sel0 = jnp.zeros((k,), jnp.int32).at[0].set(first)
+    d0 = jnp.sum((x - x[first]) ** 2, axis=-1)
+
+    def body(i, carry):
+        mind, sel = carry
+        p = mind / jnp.maximum(jnp.sum(mind), 1e-12)
+        idx = jax.random.categorical(keys[i], jnp.log(p + 1e-12)).astype(
+            jnp.int32)
+        sel = sel.at[i].set(idx)
+        nd = jnp.sum((x - x[idx]) ** 2, axis=-1)
+        mind = jnp.minimum(mind, nd).at[idx].set(0.0)
+        return mind, sel
+
+    _, sel = jax.lax.fori_loop(1, k, body, (d0.at[first].set(0.0), sel0))
+    return sel
+
+
+def _badge_select(rng, budget, *, probs, embeddings, labeled_embeddings=None):
+    g = (lc_scores(probs)[:, None].astype(jnp.float32)
+         * embeddings.astype(jnp.float32))
+    return kmeans_pp_sample(rng, g, budget)
+
+
+def _margin_density_select(rng, budget, *, probs, embeddings,
+                           labeled_embeddings=None):
+    """Margin x local-density: prefer uncertain points in dense regions."""
+    from repro.kernels.pairwise import ops
+    m = mc_scores(probs).astype(jnp.float32)
+    m = (m - m.min()) / jnp.maximum(m.max() - m.min(), 1e-9)
+    # density ~ mean sq-dist to a random reference subset (lower = denser)
+    ref = embeddings[:256].astype(jnp.float32)
+    d = ops.pairwise_sq_dists(embeddings.astype(jnp.float32), ref).mean(-1)
+    dens = 1.0 - (d - d.min()) / jnp.maximum(d.max() - d.min(), 1e-9)
+    from repro.core.strategies.base import top_k_select
+    return top_k_select(m * dens, budget)
+
+
+badge = Strategy("badge", ("probs", "embeddings"), _badge_select)
+margin_density = Strategy("margin_density", ("probs", "embeddings"),
+                          _margin_density_select)

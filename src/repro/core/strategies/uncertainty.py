@@ -1,0 +1,62 @@
+"""Uncertainty-based strategies: LC, MC, RC, ES (paper Fig. 4 set).
+
+Score conventions follow Settles' survey [46] / the paper's references:
+  LC  least confidence      1 - max_c p(c)            (higher = pick)
+  MC  margin confidence     -(p(1) - p(2))            (small margin = pick)
+  RC  ratio confidence      p(2) / p(1)               (ratio near 1 = pick)
+  ES  entropy sampling      -sum p log p
+
+``*_scores_from_logits`` are the fused paths the Pallas kernel implements
+(repro/kernels/uncertainty): one streaming pass over the class/vocab axis,
+no materialized softmax — this is the serving hot-spot when the scorer is an
+LLM with a 100k-256k vocab.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.strategies.base import Strategy, top_k_select
+
+
+def lc_scores(probs):
+    return 1.0 - jnp.max(probs, axis=-1)
+
+
+def mc_scores(probs):
+    top2 = jax.lax.top_k(probs, 2)[0]
+    return -(top2[..., 0] - top2[..., 1])
+
+
+def rc_scores(probs):
+    top2 = jax.lax.top_k(probs, 2)[0]
+    return top2[..., 1] / jnp.maximum(top2[..., 0], 1e-12)
+
+
+def es_scores(probs):
+    p = jnp.clip(probs, 1e-12, 1.0)
+    return -jnp.sum(p * jnp.log(p), axis=-1)
+
+
+SCORE_FNS = {"lc": lc_scores, "mc": mc_scores, "rc": rc_scores,
+             "es": es_scores}
+
+
+def scores_from_logits(logits, kind: str, impl: str = "auto"):
+    """Fused logits->score (kernel or reference; see kernels/uncertainty)."""
+    from repro.kernels.uncertainty import ops
+    return ops.uncertainty_scores(logits, kind, impl=impl)
+
+
+def _make(kind: str) -> Strategy:
+    def select_fn(rng, budget, *, probs):
+        return top_k_select(SCORE_FNS[kind](probs), budget)
+    return Strategy(kind, ("probs",), select_fn)
+
+
+least_confidence = _make("lc")
+margin_confidence = _make("mc")
+ratio_confidence = _make("rc")
+entropy_sampling = _make("es")

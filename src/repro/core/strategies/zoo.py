@@ -1,0 +1,30 @@
+"""AL Strategy Zoo (paper Table 1 column 'AL Strategy Zoo')."""
+from __future__ import annotations
+
+from typing import Dict
+
+from repro.core.strategies.base import Strategy
+from repro.core.strategies.diversity import (core_set, dbal, k_center,
+                                             random_sampling)
+from repro.core.strategies.hybrid import badge, margin_density
+from repro.core.strategies.uncertainty import (entropy_sampling,
+                                               least_confidence,
+                                               margin_confidence,
+                                               ratio_confidence)
+
+ZOO: Dict[str, Strategy] = {
+    s.name: s for s in [
+        least_confidence, margin_confidence, ratio_confidence,
+        entropy_sampling, k_center, core_set, dbal, random_sampling,
+        badge, margin_density,
+    ]
+}
+
+# the 7 candidates PSHEA launches (paper §4.3.3) + lower-bound baseline
+PAPER_SEVEN = ["lc", "mc", "rc", "es", "kcg", "coreset", "dbal"]
+
+
+def get_strategy(name: str) -> Strategy:
+    if name not in ZOO:
+        raise KeyError(f"unknown strategy {name!r}; zoo = {sorted(ZOO)}")
+    return ZOO[name]

@@ -1,0 +1,65 @@
+"""Synthetic datasets: LM token pools and CIFAR-like image pools.
+
+Deterministic in seed; used by smoke tests, benchmarks, and examples (no
+dataset downloads in this offline environment — documented in DESIGN.md).
+The image pool plants a class-dependent localized activation so a frozen
+random feature extractor + trained head genuinely separates classes, making
+AL-strategy accuracy differences (paper Fig. 4a) measurable.
+"""
+from __future__ import annotations
+
+from typing import Iterator, Tuple
+
+import numpy as np
+
+
+def lm_pool(n_seqs: int, seq_len: int, vocab: int, seed: int = 0,
+            n_domains: int = 8) -> Tuple[np.ndarray, np.ndarray]:
+    """Token sequences from ``n_domains`` Markov-ish generators; returns
+    (tokens (n, S) int32, domain_id (n,) int32). Domains give diversity
+    structure for AL to find."""
+    rng = np.random.default_rng(seed)
+    dom = rng.integers(0, n_domains, n_seqs)
+    base = rng.integers(0, vocab, (n_domains, 64))
+    toks = np.empty((n_seqs, seq_len), np.int32)
+    for i in range(n_seqs):
+        table = base[dom[i]]
+        walk = rng.integers(0, 64, seq_len)
+        drift = rng.integers(0, vocab, seq_len)
+        mix = rng.random(seq_len) < 0.15
+        toks[i] = np.where(mix, drift, table[walk])
+    return toks, dom.astype(np.int32)
+
+
+def image_pool(n: int, num_classes: int = 10, hw: int = 8, seed: int = 0,
+               noise: float = 0.15) -> Tuple[np.ndarray, np.ndarray]:
+    """(x (n,hw,hw,3) f32, y (n,) i32) with class-dependent signal."""
+    rng = np.random.default_rng(seed)
+    y = rng.integers(0, num_classes, n)
+    x = rng.normal(size=(n, hw, hw, 3)).astype(np.float32) * noise
+    for c in range(num_classes):
+        m = y == c
+        x[m, c % hw, (c * 3) % hw, c % 3] += 2.5
+        x[m, (c * 2) % hw, c % hw, (c + 1) % 3] += 1.5
+    return x, y.astype(np.int32)
+
+
+def lm_batches(tokens: np.ndarray, batch: int, seed: int = 0,
+               shard_index: int = 0, num_shards: int = 1
+               ) -> Iterator[dict]:
+    """Infinite shuffled batches of {tokens, labels} (labels = next token).
+
+    Per-host sharding: each host sees a disjoint slice (the multi-host data
+    pipeline contract; on CPU num_shards=1)."""
+    n = tokens.shape[0]
+    mine = np.arange(shard_index, n, num_shards)
+    rng = np.random.default_rng(seed + shard_index)
+    while True:
+        order = rng.permutation(mine)
+        for i in range(0, len(order) - batch + 1, batch):
+            sel = order[i:i + batch]
+            t = tokens[sel]
+            yield {
+                "tokens": t[:, :-1].astype(np.int32),
+                "labels": t[:, 1:].astype(np.int32),
+            }

@@ -1,0 +1,42 @@
+"""Elastic scaling: rebuild the mesh from whatever devices exist and reshard
+state onto it.
+
+With atomic+elastic checkpoints (checkpoint/manager.py), scale-up/down is:
+detect device change -> make_elastic_mesh() -> re-derive shardings from the
+same logical rules -> restore(..., shardings=new) -> continue. Tests verify
+a checkpoint written under a 4-device mesh restores bit-exact under 8 (and
+1) devices.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import numpy as np
+
+import jax
+from jax.sharding import Mesh
+
+from repro.distributed import partition
+
+
+def largest_mesh_shape(n_devices: int, model_parallel: int = 1
+                       ) -> Tuple[int, int]:
+    """(data, model) using as many devices as divisibility allows."""
+    model = model_parallel
+    while n_devices % model != 0:
+        model -= 1
+    return n_devices // model, model
+
+
+def make_elastic_mesh(model_parallel: int = 1,
+                      devices=None) -> Mesh:
+    devices = devices if devices is not None else jax.devices()
+    data, model = largest_mesh_shape(len(devices), model_parallel)
+    return jax.make_mesh((data, model), ("data", "model"),
+                         devices=devices[: data * model])
+
+
+def reshard_plan(decls, mesh: Mesh, overrides=None):
+    """(shardings tree, rules) for a given mesh from the shared rules."""
+    rules = partition.make_rules(mesh, overrides)
+    return partition.tree_shardings(decls, mesh, rules), rules

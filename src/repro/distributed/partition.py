@@ -1,0 +1,165 @@
+"""Logical-axis -> mesh-axis resolution (MaxText-style sharding rules).
+
+Every parameter / activation dim carries a *logical* axis name. Rules map a
+logical name to a mesh axis (or tuple of axes). Resolution is
+divisibility-aware: if a dim is not divisible by the product of the mapped
+mesh-axis sizes, the rule is dropped for that dim (replicate) rather than
+erroring — this is what lets one fixed production mesh serve 10 architectures
+with head counts like 40 or 56 that a 16-way TP axis does not divide.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.common import param as param_lib
+
+AxisVal = Union[None, str, Tuple[str, ...]]
+
+# Logical axis vocabulary used across the codebase:
+#   batch      activation batch                 -> (pod, data)
+#   fsdp/embed parameter d_model dim            -> (pod, data)
+#   tp         fused heads*head_dim / d_ff dims -> model
+#   vocab      vocab dim of embed / lm_head     -> model
+#   expert     MoE expert dim                   -> model
+#   seq        sequence dim (SP, opt-in)        -> None by default
+#   layer, norm, head_dim, window, ...          -> None
+DEFAULT_RULES: Dict[str, AxisVal] = {
+    "batch": ("pod", "data"),
+    "fsdp": ("pod", "data"),
+    "embed": ("pod", "data"),
+    "tp": "model",
+    "ff": "model",
+    "qkv": "model",
+    "heads": "model",
+    "kv": "model",
+    "vocab": "model",
+    "expert": "model",
+    "seq": None,
+    "kv_seq": None,
+    "layer": None,
+    "norm": None,
+    "head_dim": None,
+    "lora": None,
+    "stack": None,
+}
+
+
+@dataclasses.dataclass
+class AxisRules:
+    rules: Dict[str, AxisVal]
+    mesh_axes: Tuple[str, ...]
+    mesh_shape: Dict[str, int]
+
+    def _axes_for(self, logical: Optional[str]) -> Tuple[str, ...]:
+        if logical is None:
+            return ()
+        val = self.rules.get(logical, None)
+        if val is None:
+            return ()
+        if isinstance(val, str):
+            val = (val,)
+        # keep only axes present in this mesh (e.g. "pod" absent single-pod)
+        return tuple(a for a in val if a in self.mesh_axes)
+
+    def pspec(
+        self,
+        logical: Sequence[Optional[str]],
+        dim_sizes: Optional[Sequence[int]] = None,
+    ) -> P:
+        """Resolve a logical-axis tuple to a PartitionSpec.
+
+        Drops (a) axes already used by an earlier dim, (b) axes whose size
+        does not divide the dim.
+        """
+        used = set()
+        out = []
+        for i, name in enumerate(logical):
+            axes = self._axes_for(name)
+            axes = tuple(a for a in axes if a not in used)
+            if dim_sizes is not None and axes:
+                prod = 1
+                for a in axes:
+                    prod *= self.mesh_shape[a]
+                if prod == 0 or dim_sizes[i] % prod != 0:
+                    axes = ()
+            if not axes:
+                out.append(None)
+            else:
+                used.update(axes)
+                out.append(axes if len(axes) > 1 else axes[0])
+        while out and out[-1] is None:
+            out.pop()
+        return P(*out)
+
+    def batch_axes(self) -> Tuple[str, ...]:
+        return self._axes_for("batch")
+
+    def batch_size(self) -> int:
+        n = 1
+        for a in self._axes_for("batch"):
+            n *= self.mesh_shape[a]
+        return n
+
+
+def make_rules(mesh: Mesh, overrides: Optional[Dict[str, AxisVal]] = None) -> AxisRules:
+    rules = dict(DEFAULT_RULES)
+    if overrides:
+        rules.update(overrides)
+    shape = dict(zip(mesh.axis_names, mesh.devices.shape))
+    return AxisRules(rules=rules, mesh_axes=tuple(mesh.axis_names), mesh_shape=shape)
+
+
+def tree_pspecs(decls, rules: AxisRules):
+    """ParamDecl tree -> PartitionSpec tree (divisibility-aware)."""
+
+    def one(d: param_lib.ParamDecl) -> P:
+        return rules.pspec(d.logical, d.shape)
+
+    return jax.tree.map(one, decls, is_leaf=param_lib.is_decl)
+
+
+def tree_shardings(decls, mesh: Mesh, rules: AxisRules):
+    specs = tree_pspecs(decls, rules)
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs)
+
+
+def constrain(x, rules: AxisRules, *logical: Optional[str]):
+    """with_sharding_constraint by logical names (no-op outside mesh ctx)."""
+    try:
+        spec = rules.pspec(logical, x.shape)
+        return jax.lax.with_sharding_constraint(x, spec)
+    except Exception:
+        return x
+
+
+# --- activation-constraint context -----------------------------------------
+# Model code calls ``ac(x, *logical)``; the step builder installs the active
+# rules while lowering. Outside any context this is a no-op, so smoke tests
+# and CPU examples run unchanged (same pattern as flax's axis-rules context).
+_ACTIVE: list = []
+
+
+class activation_rules:
+    def __init__(self, rules: AxisRules):
+        self.rules = rules
+
+    def __enter__(self):
+        _ACTIVE.append(self.rules)
+        return self.rules
+
+    def __exit__(self, *exc):
+        _ACTIVE.pop()
+        return False
+
+
+def ac(x, *logical: Optional[str]):
+    """Constrain an activation by logical axis names (no-op w/o context)."""
+    if not _ACTIVE:
+        return x
+    rules = _ACTIVE[-1]
+    spec = rules.pspec(logical, x.shape)
+    return jax.lax.with_sharding_constraint(x, spec)

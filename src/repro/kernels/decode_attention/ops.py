@@ -1,0 +1,25 @@
+"""Wrapper: pallas decode attention on TPU, fused-jnp fallback elsewhere."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+
+from repro.kernels.decode_attention.kernel import decode_attention_pallas
+
+
+def _on_tpu() -> bool:
+    try:
+        return jax.devices()[0].platform == "tpu"
+    except Exception:
+        return False
+
+
+def decode_attention_auto(q, k_cache, v_cache, cur_len, *,
+                          window: Optional[int] = None, scale=None):
+    if _on_tpu():
+        return decode_attention_pallas(q, k_cache, v_cache, cur_len,
+                                       window=window, scale=scale)
+    from repro.models.layers.attention import decode_attention
+    return decode_attention(q, k_cache, v_cache, cur_len, window=window,
+                            scale=scale)

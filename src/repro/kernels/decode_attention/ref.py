@@ -1,0 +1,11 @@
+"""Oracle for the decode-attention kernel."""
+from __future__ import annotations
+
+from repro.models.layers.attention import decode_attention
+
+
+def decode_attention_ref(q, k_cache, v_cache, cur_len, *, window=None,
+                         scale=None):
+    """q: (B,1,H,D); caches (B,S,KH,D); cur_len valid entries."""
+    return decode_attention(q, k_cache, v_cache, cur_len, window=window,
+                            scale=scale)

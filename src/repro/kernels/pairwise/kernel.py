@@ -1,0 +1,90 @@
+"""Pallas TPU kernel: fused pairwise-distance + running min/argmin.
+
+The k-center / core-set inner loop needs min_j ||x_i - c_j||^2 over a large
+center set without materializing the (N, M) distance matrix in HBM. Tiles
+(N_b, d) x (M_b, d) hit the MXU via the -2*x@c^T term; the ||.||^2 terms and
+the running (min, argmin) fold into the same pass through VMEM scratch.
+
+Grid: (n_blocks, m_blocks); rows parallel, centers sequential.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+BIG = 3.4e38
+
+
+def _kernel(x_ref, c_ref, mind_ref, argm_ref, acc_d, acc_i, *, nm: int,
+            m: int, m_block: int):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_d[...] = jnp.full_like(acc_d, BIG)
+        acc_i[...] = jnp.zeros_like(acc_i)
+
+    x = x_ref[...].astype(jnp.float32)                  # (Nb, d)
+    c = c_ref[...].astype(jnp.float32)                  # (Mb, d)
+    x2 = jnp.sum(x * x, axis=-1, keepdims=True)         # (Nb, 1)
+    c2 = jnp.sum(c * c, axis=-1)                        # (Mb,)
+    xc = jax.lax.dot_general(x, c, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    d = jnp.maximum(x2 + c2[None, :] - 2.0 * xc, 0.0)   # (Nb, Mb)
+    col = jax.lax.broadcasted_iota(jnp.int32, d.shape, 1) + j * m_block
+    d = jnp.where(col < m, d, BIG)
+
+    bmin = jnp.min(d, axis=-1)
+    barg = jnp.argmin(d, axis=-1).astype(jnp.int32) + j * m_block
+    better = bmin < acc_d[...]
+    acc_i[...] = jnp.where(better, barg, acc_i[...])
+    acc_d[...] = jnp.where(better, bmin, acc_d[...])
+
+    @pl.when(j == nm - 1)
+    def _fin():
+        mind_ref[...] = acc_d[...]
+        argm_ref[...] = acc_i[...]
+
+
+def pairwise_min_argmin_pallas(x, c, *, n_block: int = 256,
+                               m_block: int = 256, interpret: bool = False):
+    """x: (N,d), c: (M,d) -> (min_d (N,), argmin (N,)) fp32/int32."""
+    N, d = x.shape
+    M, _ = c.shape
+    nb = min(n_block, N)
+    mb = min(m_block, M)
+    nn = -(-N // nb)
+    nm = -(-M // mb)
+    Np, Mp = nn * nb, nm * mb
+    if Np != N:
+        x = jnp.pad(x, ((0, Np - N), (0, 0)))
+    if Mp != M:
+        c = jnp.pad(c, ((0, Mp - M), (0, 0)))
+    mind, argm = pl.pallas_call(
+        functools.partial(_kernel, nm=nm, m=M, m_block=mb),
+        grid=(nn, nm),
+        in_specs=[
+            pl.BlockSpec((nb, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((mb, d), lambda i, j: (j, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((nb,), lambda i, j: (i,)),
+            pl.BlockSpec((nb,), lambda i, j: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Np,), jnp.float32),
+            jax.ShapeDtypeStruct((Np,), jnp.int32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((nb,), jnp.float32),
+            pltpu.VMEM((nb,), jnp.int32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(x, c)
+    return mind[:N], argm[:N]

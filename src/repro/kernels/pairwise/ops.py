@@ -1,0 +1,48 @@
+"""Jit'd wrappers for pairwise distance reductions (kernel on TPU, jnp ref
+elsewhere)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.pairwise import ref
+from repro.kernels.pairwise.kernel import pairwise_min_argmin_pallas
+
+
+def _on_tpu() -> bool:
+    try:
+        return jax.devices()[0].platform == "tpu"
+    except Exception:
+        return False
+
+
+@functools.partial(jax.jit, static_argnames=("impl",))
+def pairwise_min_dist(x, c, impl: str = "auto"):
+    if impl == "auto":
+        impl = "pallas" if _on_tpu() else "ref"
+    if impl == "ref":
+        return ref.pairwise_min_dist_ref(x, c)
+    return pairwise_min_argmin_pallas(x, c, interpret=(impl == "interpret"))[0]
+
+
+@functools.partial(jax.jit, static_argnames=("impl",))
+def pairwise_argmin(x, c, impl: str = "auto"):
+    if impl == "auto":
+        impl = "pallas" if _on_tpu() else "ref"
+    if impl == "ref":
+        return ref.pairwise_argmin_ref(x, c)
+    return pairwise_min_argmin_pallas(x, c, interpret=(impl == "interpret"))[1]
+
+
+@jax.jit
+def pairwise_sq_dists(x, c):
+    """Full (N, M) matrix — only for small M (DBAL centroid matching)."""
+    return ref.pairwise_sq_dists_ref(x, c)
+
+
+@jax.jit
+def sq_dist_to_center(x, center):
+    diff = x.astype(jnp.float32) - center.astype(jnp.float32)[None, :]
+    return jnp.sum(diff * diff, axis=-1)

@@ -1,0 +1,22 @@
+"""Pure-jnp oracle for pairwise squared-distance reductions."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def pairwise_sq_dists_ref(x, c):
+    """x: (N,d), c: (M,d) -> (N,M) squared L2 distances (fp32)."""
+    x = x.astype(jnp.float32)
+    c = c.astype(jnp.float32)
+    x2 = jnp.sum(x * x, axis=-1, keepdims=True)
+    c2 = jnp.sum(c * c, axis=-1)
+    d = x2 + c2[None, :] - 2.0 * (x @ c.T)
+    return jnp.maximum(d, 0.0)
+
+
+def pairwise_min_dist_ref(x, c):
+    return jnp.min(pairwise_sq_dists_ref(x, c), axis=-1)
+
+
+def pairwise_argmin_ref(x, c):
+    return jnp.argmin(pairwise_sq_dists_ref(x, c), axis=-1).astype(jnp.int32)

@@ -1,0 +1,45 @@
+"""Jit'd wrapper for fused uncertainty scoring.
+
+impl="auto" uses the Pallas kernel on TPU and the jnp reference elsewhere
+(interpret-mode Pallas is for validation, not speed).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.uncertainty import ref
+from repro.kernels.uncertainty.kernel import uncertainty_stats_pallas
+
+KINDS = ("lc", "mc", "rc", "es")
+
+
+def _on_tpu() -> bool:
+    try:
+        return jax.devices()[0].platform == "tpu"
+    except Exception:
+        return False
+
+
+@functools.partial(jax.jit, static_argnames=("kind", "impl"))
+def uncertainty_scores(logits, kind: str = "lc", impl: str = "auto"):
+    """logits: (N, V) -> (N,) fp32 scores (higher = more informative)."""
+    if impl == "auto":
+        impl = "pallas" if _on_tpu() else "ref"
+    if impl == "ref":
+        return ref.uncertainty_scores_ref(logits, kind)
+    stats = uncertainty_stats_pallas(logits, interpret=(impl == "interpret"))
+    return stats[KINDS.index(kind)]
+
+
+@functools.partial(jax.jit, static_argnames=("impl",))
+def uncertainty_stats(logits, impl: str = "auto"):
+    """All four scores in one pass: dict of (N,) fp32."""
+    if impl == "auto":
+        impl = "pallas" if _on_tpu() else "ref"
+    if impl == "ref":
+        return ref.uncertainty_stats_ref(logits)
+    stats = uncertainty_stats_pallas(logits, interpret=(impl == "interpret"))
+    return {k: stats[i] for i, k in enumerate(KINDS)}

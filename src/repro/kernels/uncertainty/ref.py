@@ -1,0 +1,30 @@
+"""Pure-jnp oracle for fused uncertainty scoring over logits."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def uncertainty_stats_ref(logits):
+    """logits: (N, V) -> dict of per-row scores (fp32).
+
+    lc = 1 - p_max; mc = -(p1 - p2); rc = p2/p1; es = entropy(softmax).
+    """
+    lg = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lg, axis=-1)
+    top2 = jax.lax.top_k(lg, 2)[0]
+    p1 = jnp.exp(top2[:, 0] - lse)
+    p2 = jnp.exp(top2[:, 1] - lse)
+    p = jax.nn.softmax(lg, axis=-1)
+    es = -jnp.sum(jnp.where(p > 0, p * jnp.log(jnp.maximum(p, 1e-30)), 0.0),
+                  axis=-1)
+    return {
+        "lc": 1.0 - p1,
+        "mc": -(p1 - p2),
+        "rc": p2 / jnp.maximum(p1, 1e-12),
+        "es": es,
+    }
+
+
+def uncertainty_scores_ref(logits, kind: str):
+    return uncertainty_stats_ref(logits)[kind]

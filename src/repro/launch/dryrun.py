@@ -1,0 +1,131 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell and
+record memory/cost/collective analysis for EXPERIMENTS.md (§Dry-run,
+§Roofline).
+
+The two lines above MUST stay first: jax locks the device count on first
+init, and the production meshes need 512 placeholder host devices. Smoke
+tests and benchmarks do NOT import this module and see 1 device.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun \
+      --mesh both --arch all --shape all --out runs/dryrun.json
+"""
+import argparse  # noqa: E402
+import json  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+
+import jax  # noqa: E402
+
+from repro.configs import ARCH_IDS, SHAPES, get_config, shape_applicable  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.launch.steps import build_cell, default_optimizer  # noqa: E402
+from repro.roofline import analysis  # noqa: E402
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             optimizer=None, rule_overrides=None, tp_pad: bool = False) -> dict:
+    cfg = get_config(arch)
+    if tp_pad:
+        cfg = cfg.tp_friendly(16)
+    shape = SHAPES[shape_name]
+    ok, why = shape_applicable(cfg, shape)
+    rec = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "pod2x16x16" if multi_pod else "pod16x16",
+        "params": cfg.n_params(), "active_params": cfg.active_params(),
+    }
+    if not ok:
+        rec.update(status="skipped", reason=why)
+        return rec
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.devices.size
+    try:
+        t0 = time.time()
+        cell = build_cell(cfg, shape, mesh, optimizer=optimizer,
+                          rule_overrides=rule_overrides)
+        lowered = cell.lower()
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+        mem = compiled.memory_analysis()
+        mem_rec = {}
+        if mem is not None:
+            for f in ("argument_size_in_bytes", "output_size_in_bytes",
+                      "temp_size_in_bytes", "generated_code_size_in_bytes",
+                      "alias_size_in_bytes"):
+                v = getattr(mem, f, None)
+                if v is not None:
+                    mem_rec[f] = int(v)
+        roof = analysis.analyze(compiled, cfg, shape, chips)
+        rec.update(
+            status="ok",
+            optimizer=(optimizer or default_optimizer(cfg))
+            if shape.kind == "train" else None,
+            t_lower_s=round(t_lower, 2), t_compile_s=round(t_compile, 2),
+            memory=mem_rec, roofline=roof.as_dict(),
+        )
+    except Exception as e:  # record the failure; these are bugs to fix
+        rec.update(status="error", error=f"{type(e).__name__}: {e}",
+                   traceback=traceback.format_exc()[-2000:])
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="runs/dryrun.json")
+    ap.add_argument("--optimizer", default=None)
+    ap.add_argument("--tp-pad", action="store_true",
+                    help="apply ArchConfig.tp_friendly (head padding + KV "
+                         "replication) before lowering")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    archs = ARCH_IDS if args.arch == "all" else [args.arch]
+    shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    results = {}
+    if os.path.exists(args.out):
+        with open(args.out) as f:
+            results = json.load(f)
+
+    for arch in archs:
+        for shape_name in shapes:
+            for multi in meshes:
+                key = f"{arch}|{shape_name}|{'multi' if multi else 'single'}"
+                if args.skip_existing and results.get(key, {}).get("status") == "ok":
+                    continue
+                print(f"=== {key}", flush=True)
+                rec = run_cell(arch, shape_name, multi,
+                               optimizer=args.optimizer, tp_pad=args.tp_pad)
+                results[key] = rec
+                status = rec["status"]
+                extra = ""
+                if status == "ok":
+                    r = rec["roofline"]
+                    extra = (f" bottleneck={r['bottleneck']}"
+                             f" t=({r['t_compute']:.2e},{r['t_memory']:.2e},"
+                             f"{r['t_collective']:.2e})s"
+                             f" compile={rec['t_compile_s']}s")
+                elif status == "error":
+                    extra = " " + rec["error"][:200]
+                print(f"    -> {status}{extra}", flush=True)
+                os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+                with open(args.out, "w") as f:
+                    json.dump(results, f, indent=1)
+
+    n_ok = sum(1 for r in results.values() if r["status"] == "ok")
+    n_skip = sum(1 for r in results.values() if r["status"] == "skipped")
+    n_err = sum(1 for r in results.values() if r["status"] == "error")
+    print(f"done: {n_ok} ok, {n_skip} skipped, {n_err} errors -> {args.out}")
+
+
+if __name__ == "__main__":
+    main()

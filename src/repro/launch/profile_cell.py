@@ -1,0 +1,44 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+"""Profile one dry-run cell: roofline terms + top cost contributors.
+
+  PYTHONPATH=src python -m repro.launch.profile_cell \
+      --arch deepseek-v3-671b --shape decode_32k [--multi] [--opt ...]
+"""
+import argparse  # noqa: E402
+
+from repro.configs import SHAPES, get_config  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.launch.steps import build_cell  # noqa: E402
+from repro.roofline import analysis  # noqa: E402
+from repro.roofline.attribution import top_costs  # noqa: E402
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--multi", action="store_true")
+    ap.add_argument("--optimizer", default=None)
+    ap.add_argument("--top", type=int, default=20)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    shape = SHAPES[args.shape]
+    mesh = make_production_mesh(multi_pod=args.multi)
+    cell = build_cell(cfg, shape, mesh, optimizer=args.optimizer)
+    compiled = cell.lower().compile()
+    roof = analysis.analyze(compiled, cfg, shape, mesh.devices.size)
+    print(f"=== {args.arch} | {args.shape} | "
+          f"{'multi' if args.multi else 'single'}")
+    for k, v in roof.as_dict().items():
+        print(f"  {k}: {v}")
+    mem = compiled.memory_analysis()
+    if mem is not None:
+        print(f"  temp_GB: {getattr(mem, 'temp_size_in_bytes', 0)/1e9:.1f}  "
+              f"args_GB: {getattr(mem, 'argument_size_in_bytes', 0)/1e9:.1f}")
+    print(top_costs(compiled.as_text(), k=args.top))
+
+
+if __name__ == "__main__":
+    main()

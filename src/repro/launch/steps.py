@@ -1,0 +1,164 @@
+"""Step builders + input specs for every (arch x shape) dry-run cell.
+
+``input_specs`` returns ShapeDtypeStruct stand-ins (weak-type-correct,
+shardable, zero allocation). ``lower_cell`` assembles the jitted step with
+in/out shardings from the logical-axis rules and lowers it against the specs.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.common.param import ParamDecl, is_decl, param_shapes
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.distributed import partition
+from repro.models.transformer import Model
+from repro.optim.optimizer import AdamW, Adafactor, make_optimizer
+
+
+def data_specs(cfg: ArchConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """ShapeDtypeStructs for the host-data inputs of a cell."""
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        out = {
+            "tokens": jax.ShapeDtypeStruct((B, S), jnp.int32),
+            "labels": jax.ShapeDtypeStruct((B, S), jnp.int32),
+        }
+    elif shape.kind == "prefill":
+        out = {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+    else:  # decode
+        out = {"token": jax.ShapeDtypeStruct((B, 1), jnp.int32)}
+    if cfg.enc_dec and shape.kind != "decode":
+        out["frames"] = jax.ShapeDtypeStruct(
+            (B, cfg.n_enc_frames, cfg.d_model), jnp.bfloat16)
+    if cfg.n_patches and shape.kind != "decode":
+        out["patch_embeds"] = jax.ShapeDtypeStruct(
+            (B, cfg.n_patches, cfg.d_model), jnp.bfloat16)
+    return out
+
+
+def data_pspecs(cfg: ArchConfig, shape: ShapeConfig,
+                rules: partition.AxisRules) -> Dict[str, P]:
+    specs = data_specs(cfg, shape)
+
+    def one(name: str, sds) -> P:
+        logical = ("batch",) + (None,) * (len(sds.shape) - 1)
+        return rules.pspec(logical, sds.shape)
+
+    return {k: one(k, v) for k, v in specs.items()}
+
+
+def default_optimizer(cfg: ArchConfig) -> str:
+    # fp32 Adam state for 671B params does not fit 16 GB/chip at 512 chips;
+    # the factored optimizer does (see EXPERIMENTS.md §Dry-run).
+    return "adafactor" if cfg.n_params() > 5e10 else "adamw"
+
+
+@dataclasses.dataclass
+class Cell:
+    """Everything needed to lower one (arch x shape) on one mesh."""
+    cfg: ArchConfig
+    shape: ShapeConfig
+    mesh: Mesh
+    rules: partition.AxisRules
+    step_fn: Any
+    args_sds: Tuple
+    in_shardings: Tuple
+    out_shardings: Any
+    donate: Tuple[int, ...] = ()
+
+    def lower(self):
+        jitted = jax.jit(self.step_fn, in_shardings=self.in_shardings,
+                         out_shardings=self.out_shardings,
+                         donate_argnums=self.donate)
+        with self.mesh, partition.activation_rules(self.rules):
+            return jitted.lower(*self.args_sds)
+
+
+def _shardings(mesh, pspec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), pspec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def build_cell(cfg: ArchConfig, shape: ShapeConfig, mesh: Mesh,
+               optimizer: Optional[str] = None,
+               rule_overrides: Optional[dict] = None) -> Cell:
+    rules = partition.make_rules(mesh, rule_overrides)
+    model = Model(cfg)
+    p_decls = model.param_decls()
+    p_sds = param_shapes(p_decls)
+    p_pspec = partition.tree_pspecs(p_decls, rules)
+
+    if shape.kind == "train":
+        opt_name = optimizer or default_optimizer(cfg)
+        opt = make_optimizer(opt_name)
+        s_decls = opt.state_decls(p_decls)
+        s_sds = param_shapes(s_decls)
+        s_pspec = partition.tree_pspecs(s_decls, rules)
+        d_sds = data_specs(cfg, shape)
+        d_pspec = data_pspecs(cfg, shape, rules)
+
+        def train_step(params, opt_state, batch):
+            (loss, metrics), grads = jax.value_and_grad(
+                model.loss, has_aux=True)(params, batch)
+            new_params, new_state, opt_metrics = opt.update(
+                grads, opt_state, params)
+            metrics = dict(metrics, loss=loss, **opt_metrics)
+            return new_params, new_state, metrics
+
+        metric_sds = {k: jax.ShapeDtypeStruct((), jnp.float32) for k in
+                      ["ce", "z_loss", "aux_loss", "loss", "grad_norm", "lr"]}
+        if cfg.mtp:
+            metric_sds["mtp"] = jax.ShapeDtypeStruct((), jnp.float32)
+        out_shardings = (_shardings(mesh, p_pspec), _shardings(mesh, s_pspec),
+                         jax.tree.map(lambda _: NamedSharding(mesh, P()),
+                                      metric_sds))
+        return Cell(
+            cfg, shape, mesh, rules, train_step,
+            (p_sds, s_sds, d_sds),
+            (_shardings(mesh, p_pspec), _shardings(mesh, s_pspec),
+             _shardings(mesh, d_pspec)),
+            out_shardings, donate=(0, 1))
+
+    if shape.kind == "prefill":
+        c_decls = model.cache_decls(shape.global_batch, shape.seq_len)
+        c_sds = param_shapes(c_decls)
+        c_pspec = partition.tree_pspecs(c_decls, rules)
+        d_sds = data_specs(cfg, shape)
+        d_pspec = data_pspecs(cfg, shape, rules)
+
+        def prefill_step(params, batch, cache):
+            return model.prefill(params, batch, cache)
+
+        logits_sh = NamedSharding(mesh, rules.pspec(
+            ("batch", "vocab"), (shape.global_batch, cfg.padded_vocab)))
+        return Cell(
+            cfg, shape, mesh, rules, prefill_step,
+            (p_sds, d_sds, c_sds),
+            (_shardings(mesh, p_pspec), _shardings(mesh, d_pspec),
+             _shardings(mesh, c_pspec)),
+            (_shardings(mesh, c_pspec), logits_sh), donate=(2,))
+
+    # decode: serve_step — one token against a seq_len cache
+    c_decls = model.cache_decls(shape.global_batch, shape.seq_len)
+    c_sds = param_shapes(c_decls)
+    c_pspec = partition.tree_pspecs(c_decls, rules)
+    d_sds = data_specs(cfg, shape)
+    d_pspec = data_pspecs(cfg, shape, rules)
+
+    def serve_step(params, cache, token):
+        return model.decode_step(params, cache, token)
+
+    logits_sh = NamedSharding(mesh, rules.pspec(
+        ("batch", "vocab"), (shape.global_batch, cfg.padded_vocab)))
+    return Cell(
+        cfg, shape, mesh, rules, serve_step,
+        (p_sds, c_sds, d_sds["token"]),
+        (_shardings(mesh, p_pspec), _shardings(mesh, c_pspec),
+         _shardings(mesh, d_pspec["token"]) if isinstance(d_pspec["token"], NamedSharding)
+         else NamedSharding(mesh, d_pspec["token"])),
+        (logits_sh, _shardings(mesh, c_pspec)), donate=(1,))

@@ -1,0 +1,230 @@
+"""GQA attention: naive, chunked (flash-style online softmax in pure JAX),
+and single-token decode over a KV cache.
+
+Weights are kept 2-D ``(d_model, n*head_dim)`` so the fused output dim always
+TP-shards cleanly even when the head count (40, 56, 10...) does not divide the
+model axis — see DESIGN.md §5 and distributed/partition.py.
+
+The chunked implementation is the one used by prefill/train in the dry-run:
+it never materializes an (Sq, Skv) score matrix, scanning KV blocks with an
+online-softmax carry (m, l, acc). A Pallas flash kernel with identical
+semantics lives in repro/kernels/flash_attention for the TPU target.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.dots import einsum_f32
+from repro.common.param import ParamDecl
+from repro.distributed.partition import ac
+from repro.models.layers.norms import rms_decls, rmsnorm
+from repro.models.layers.rope import apply_rope
+
+NEG_INF = -1e30
+
+
+def attn_decls(d_model: int, n_heads: int, n_kv: int, head_dim: int,
+               qkv_bias: bool = False, qk_norm: bool = False,
+               out_bias: bool = False):
+    decls = {
+        "w_q": ParamDecl((d_model, n_heads * head_dim), ("embed", "qkv")),
+        "w_k": ParamDecl((d_model, n_kv * head_dim), ("embed", "qkv")),
+        "w_v": ParamDecl((d_model, n_kv * head_dim), ("embed", "qkv")),
+        "w_o": ParamDecl((n_heads * head_dim, d_model), ("qkv", "embed")),
+    }
+    if qkv_bias:
+        decls["b_q"] = ParamDecl((n_heads * head_dim,), ("qkv",), init="zeros")
+        decls["b_k"] = ParamDecl((n_kv * head_dim,), ("qkv",), init="zeros")
+        decls["b_v"] = ParamDecl((n_kv * head_dim,), ("qkv",), init="zeros")
+    if out_bias:
+        decls["b_o"] = ParamDecl((d_model,), ("norm",), init="zeros")
+    if qk_norm:
+        decls["q_norm"] = rms_decls(head_dim)
+        decls["k_norm"] = rms_decls(head_dim)
+    return decls
+
+
+def project_qkv(params, x, n_heads: int, n_kv: int, head_dim: int,
+                qk_norm: bool, norm_eps: float = 1e-6):
+    """x: (B,S,d) -> q (B,S,H,D), k,v (B,S,KH,D). No rope here."""
+    B, S, _ = x.shape
+    q = ac(jnp.einsum("bsd,de->bse", x, params["w_q"]), "batch", None, "qkv")
+    k = ac(jnp.einsum("bsd,de->bse", x, params["w_k"]), "batch", None, "qkv")
+    v = ac(jnp.einsum("bsd,de->bse", x, params["w_v"]), "batch", None, "qkv")
+    if "b_q" in params:
+        q, k, v = q + params["b_q"], k + params["b_k"], v + params["b_v"]
+    q = q.reshape(B, S, n_heads, head_dim)
+    k = k.reshape(B, S, n_kv, head_dim)
+    v = v.reshape(B, S, n_kv, head_dim)
+    if qk_norm:
+        q = rmsnorm(params["q_norm"], q, norm_eps)
+        k = rmsnorm(params["k_norm"], k, norm_eps)
+    return q, k, v
+
+
+def _mask(q_pos, k_pos, *, causal: bool, window: Optional[int],
+          kv_valid: Optional[jax.Array]):
+    """(..., qc, kc) boolean mask of *allowed* positions."""
+    m = jnp.ones((q_pos.shape[-1], k_pos.shape[-1]), bool)
+    qp = q_pos[:, None]
+    kp = k_pos[None, :]
+    if causal:
+        m &= kp <= qp
+    if window is not None:
+        m &= kp > qp - window
+    if kv_valid is not None:
+        m &= kp < kv_valid
+    return m
+
+
+def naive_attention(q, k, v, *, causal: bool = True, window: Optional[int] = None,
+                    q_offset: int = 0, kv_valid: Optional[jax.Array] = None,
+                    scale: Optional[float] = None):
+    """Oracle path. q: (B,Sq,H,D); k,v: (B,Skv,KH,D)."""
+    B, Sq, H, D = q.shape
+    KH = k.shape[2]
+    G = H // KH
+    scale = scale if scale is not None else D ** -0.5
+    qg = q.reshape(B, Sq, KH, G, D)
+    s = jnp.einsum("bqkgd,bskd->bkgqs", qg.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    q_pos = q_offset + jnp.arange(Sq)
+    k_pos = jnp.arange(k.shape[1])
+    m = _mask(q_pos, k_pos, causal=causal, window=window, kv_valid=kv_valid)
+    s = jnp.where(m, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bskd->bqkgd", p, v.astype(jnp.float32))
+    return o.reshape(B, Sq, H, D).astype(q.dtype)
+
+
+def chunked_attention(q, k, v, *, causal: bool = True,
+                      window: Optional[int] = None, q_offset: int = 0,
+                      kv_valid: Optional[jax.Array] = None,
+                      q_chunk: int = 512, kv_chunk: int = 1024,
+                      scale: Optional[float] = None):
+    """Flash-style attention in pure JAX (compiles on any backend).
+
+    Outer scan over Q chunks, inner scan over KV chunks with online-softmax
+    carry. Peak memory per step: (B,KH,G,qc,kc) fp32 scores.
+    """
+    B, Sq, H, D = q.shape
+    Skv, KH = k.shape[1], k.shape[2]
+    G = H // KH
+    scale = scale if scale is not None else D ** -0.5
+    qc = min(q_chunk, Sq)
+    kc = min(kv_chunk, Skv)
+    # pad to multiples
+    Sq_p = -(-Sq // qc) * qc
+    Skv_p = -(-Skv // kc) * kc
+    qg = jnp.pad(q, ((0, 0), (0, Sq_p - Sq), (0, 0), (0, 0))).reshape(
+        B, Sq_p // qc, qc, KH, G, D)
+    kp = jnp.pad(k, ((0, 0), (0, Skv_p - Skv), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, Skv_p - Skv), (0, 0), (0, 0)))
+    kb = kp.reshape(B, Skv_p // kc, kc, KH, D)
+    vb = vp.reshape(B, Skv_p // kc, kc, KH, D)
+    n_kb = Skv_p // kc
+    kv_valid_arr = (jnp.asarray(Skv, jnp.int32) if kv_valid is None
+                    else jnp.asarray(kv_valid, jnp.int32))
+
+    def q_step(_, qi_and_chunk):
+        qi, qch = qi_and_chunk                     # qch: (qc,KH,G,D) per batch later
+        q_pos = q_offset + qi * qc + jnp.arange(qc)
+
+        def kv_step(carry, ki_and_blk):
+            m_prev, l_prev, acc = carry
+            ki, kblk, vblk = ki_and_blk
+            k_pos = ki * kc + jnp.arange(kc)
+            # keep K/V blocks in storage dtype, f32 accumulate on the MXU
+            # (an .astype(f32) here hoists a whole-K convert out of the scan)
+            s = einsum_f32("bqkgd,bskd->bkgqs", qch, kblk) * scale
+            mask = _mask(q_pos, k_pos, causal=causal, window=window,
+                         kv_valid=kv_valid_arr)
+            s = jnp.where(mask, s, NEG_INF)
+            m_cur = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_cur[..., None])
+            corr = jnp.exp(m_prev - m_cur)
+            l_cur = l_prev * corr + jnp.sum(p, axis=-1)
+            pv = einsum_f32("bkgqs,bskd->bkgqd", p.astype(vblk.dtype), vblk)
+            acc = acc * corr[..., None] + pv
+            return (m_cur, l_cur, acc), None
+
+        m0 = jnp.full((B, KH, G, qc), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, KH, G, qc), jnp.float32)
+        a0 = jnp.zeros((B, KH, G, qc, D), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, (m0, l0, a0),
+            (jnp.arange(n_kb), jnp.moveaxis(kb, 1, 0), jnp.moveaxis(vb, 1, 0)))
+        l = jnp.maximum(l, 1e-30)
+        out = (acc / l[..., None])                 # (B,KH,G,qc,D)
+        return None, jnp.transpose(out, (0, 3, 1, 2, 4))  # (B,qc,KH,G,D)
+
+    _, outs = jax.lax.scan(q_step, None,
+                           (jnp.arange(Sq_p // qc), jnp.moveaxis(qg, 1, 0)))
+    out = jnp.moveaxis(outs, 0, 1).reshape(B, Sq_p, H, D)[:, :Sq]
+    return out.astype(q.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, cur_len, *,
+                     window: Optional[int] = None, scale: Optional[float] = None):
+    """Single-step decode. q: (B,1,H,D); caches: (B,Smax,KH,D).
+
+    cur_len: int32 scalar — number of valid cache entries *including* the
+    current token (already written into the cache).
+    """
+    B, _, H, D = q.shape
+    KH = k_cache.shape[2]
+    G = H // KH
+    scale = scale if scale is not None else D ** -0.5
+    qg = q.reshape(B, KH, G, D).astype(k_cache.dtype)
+    # caches stay in their storage dtype; accumulate f32 on the MXU —
+    # an .astype(f32) on the cache hoists a full-cache convert out of the
+    # layer scan (EXPERIMENTS.md §Perf iteration A1)
+    s = einsum_f32("bkgd,bskd->bkgs", qg, k_cache) * scale
+    k_pos = jnp.arange(k_cache.shape[1])
+    ok = k_pos < cur_len
+    if window is not None:
+        ok &= k_pos > cur_len - 1 - window
+    s = jnp.where(ok[None, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = einsum_f32("bkgs,bskd->bkgd", p.astype(v_cache.dtype), v_cache)
+    return o.reshape(B, 1, H, D).astype(q.dtype)
+
+
+def decode_attention_pos(q, k_cache, v_cache, k_pos, cur_pos, window=None,
+                         scale: Optional[float] = None):
+    """Decode over a ring buffer with explicit key positions.
+
+    q: (B,1,H,D); caches: (B,W,KH,D); k_pos: (W,) int32, -1 = empty slot;
+    cur_pos: int32 scalar (position of the current token).
+    """
+    B, _, H, D = q.shape
+    KH = k_cache.shape[2]
+    G = H // KH
+    scale = scale if scale is not None else D ** -0.5
+    qg = q.reshape(B, KH, G, D).astype(k_cache.dtype)
+    s = einsum_f32("bkgd,bskd->bkgs", qg, k_cache) * scale
+    ok = (k_pos >= 0) & (k_pos <= cur_pos)
+    if window is not None:
+        ok &= k_pos > cur_pos - window
+    s = jnp.where(ok[None, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = einsum_f32("bkgs,bskd->bkgd", p.astype(v_cache.dtype), v_cache)
+    return o.reshape(B, 1, H, D).astype(q.dtype)
+
+
+def attention(q, k, v, *, impl: str = "chunked", **kw):
+    if impl == "naive":
+        kw.pop("q_chunk", None)
+        kw.pop("kv_chunk", None)
+        return naive_attention(q, k, v, **kw)
+    if impl == "pallas":
+        # TPU target path; falls back to chunked off-TPU. Wired in ops.py.
+        from repro.kernels.flash_attention import ops as fa_ops
+        return fa_ops.flash_attention_auto(q, k, v, **kw)
+    kw.setdefault("q_chunk", 512)
+    kw.setdefault("kv_chunk", 1024)
+    return chunked_attention(q, k, v, **kw)

@@ -1,0 +1,118 @@
+"""Multi-head Latent Attention (deepseek-v3).
+
+Train/prefill expand the compressed latents into full per-head K/V and reuse
+the generic chunked attention. Decode uses the *absorbed* formulation: scores
+and outputs are computed directly against the (B, S, kv_lora_rank) latent
+cache — this is the KV-cache compression that makes MLA serving cheap
+(cache/token = kv_lora_rank + qk_rope_head_dim instead of 2*H*head_dim).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.dots import einsum_f32
+from repro.common.param import ParamDecl
+from repro.configs.base import ArchConfig
+from repro.models.layers.attention import chunked_attention, naive_attention, NEG_INF
+from repro.models.layers.norms import rms_decls, rmsnorm
+from repro.models.layers.rope import apply_rope
+
+
+def mla_decls(cfg: ArchConfig):
+    m = cfg.mla
+    d, H = cfg.d_model, cfg.n_heads
+    qk = m.qk_nope_head_dim + m.qk_rope_head_dim
+    return {
+        "w_dq": ParamDecl((d, m.q_lora_rank), ("embed", "lora")),
+        "q_norm": rms_decls(m.q_lora_rank),
+        "w_uq": ParamDecl((m.q_lora_rank, H * qk), ("lora", "qkv")),
+        "w_dkv": ParamDecl((d, m.kv_lora_rank + m.qk_rope_head_dim), ("embed", "lora")),
+        "kv_norm": rms_decls(m.kv_lora_rank),
+        "w_uk": ParamDecl((m.kv_lora_rank, H * m.qk_nope_head_dim), ("lora", "qkv")),
+        "w_uv": ParamDecl((m.kv_lora_rank, H * m.v_head_dim), ("lora", "qkv")),
+        "w_o": ParamDecl((H * m.v_head_dim, d), ("qkv", "embed")),
+    }
+
+
+def _latents(params, x, cfg: ArchConfig, positions):
+    """Shared Q/KV-latent computation. x: (B,S,d)."""
+    m = cfg.mla
+    B, S, _ = x.shape
+    H = cfg.n_heads
+    qk = m.qk_nope_head_dim + m.qk_rope_head_dim
+    cq = rmsnorm(params["q_norm"], jnp.einsum("bsd,dr->bsr", x, params["w_dq"]),
+                 cfg.norm_eps)
+    q = jnp.einsum("bsr,re->bse", cq, params["w_uq"]).reshape(B, S, H, qk)
+    q_nope = q[..., : m.qk_nope_head_dim]
+    q_rope = apply_rope(q[..., m.qk_nope_head_dim:], positions, cfg.rope_theta)
+    dkv = jnp.einsum("bsd,dr->bsr", x, params["w_dkv"])
+    c_kv = rmsnorm(params["kv_norm"], dkv[..., : m.kv_lora_rank], cfg.norm_eps)
+    k_rope = apply_rope(dkv[..., m.kv_lora_rank:], positions, cfg.rope_theta)
+    return q_nope, q_rope, c_kv, k_rope
+
+
+def mla_prefill(params, x, cfg: ArchConfig, positions, impl: str = "chunked"):
+    """Returns (out, (c_kv, k_rope)) — the latter is the (compressed) cache."""
+    m = cfg.mla
+    B, S, _ = x.shape
+    H = cfg.n_heads
+    q_nope, q_rope, c_kv, k_rope = _latents(params, x, cfg, positions)
+    k_nope = jnp.einsum("bsr,re->bse", c_kv, params["w_uk"]).reshape(
+        B, S, H, m.qk_nope_head_dim)
+    v = jnp.einsum("bsr,re->bse", c_kv, params["w_uv"]).reshape(
+        B, S, H, m.v_head_dim)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope[:, :, None, :],
+                                  (B, S, H, m.qk_rope_head_dim))], axis=-1)
+    qk = m.qk_nope_head_dim + m.qk_rope_head_dim
+    scale = qk ** -0.5
+    # pad V head_dim up to the QK head_dim so generic attention applies
+    attn_fn = chunked_attention if impl == "chunked" else naive_attention
+    if m.v_head_dim != qk:
+        v_p = jnp.pad(v, ((0, 0), (0, 0), (0, 0), (0, qk - m.v_head_dim)))
+    else:
+        v_p = v
+    kw = dict(causal=True, scale=scale)
+    if impl == "chunked":
+        kw.update(q_chunk=cfg.q_chunk, kv_chunk=cfg.kv_chunk)
+    o = attn_fn(q, k, v_p, **kw)[..., : m.v_head_dim]
+    out = jnp.einsum("bse,ed->bsd", o.reshape(B, S, -1), params["w_o"])
+    return out, (c_kv, k_rope)
+
+
+def mla_decode(params, x, cfg: ArchConfig, c_kv_cache, k_rope_cache, cur_len,
+               positions):
+    """Absorbed decode: attention in latent space against the compressed cache.
+
+    x: (B,1,d); c_kv_cache: (B,Smax,R); k_rope_cache: (B,Smax,Dr).
+    Caches already contain the current token at position cur_len-1.
+    """
+    m = cfg.mla
+    B = x.shape[0]
+    H = cfg.n_heads
+    f32 = jnp.float32
+    q_nope, q_rope, _, _ = _latents(params, x, cfg, positions)
+    # absorb W_UK into the query:  q_lat = q_nope @ W_UK^T  (B,1,H,R)
+    w_uk = params["w_uk"].reshape(m.kv_lora_rank, H, m.qk_nope_head_dim)
+    q_lat = einsum_f32("bqhd,rhd->bqhr", q_nope, w_uk)
+    # NOTE: caches stay bf16; f32 only in the MXU accumulator. Materializing
+    # .astype(f32) here gets hoisted over the whole stacked cache by XLA
+    # (= +47 GB HBM traffic/step/chip at deepseek-v3 decode_32k; see
+    # EXPERIMENTS.md §Perf iteration A1).
+    s = einsum_f32("bqhr,bsr->bhqs", q_lat.astype(c_kv_cache.dtype),
+                   c_kv_cache)
+    s = s + einsum_f32("bqhd,bsd->bhqs", q_rope, k_rope_cache)
+    s = s * ((m.qk_nope_head_dim + m.qk_rope_head_dim) ** -0.5)
+    ok = jnp.arange(c_kv_cache.shape[1]) < cur_len
+    s = jnp.where(ok[None, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o_lat = einsum_f32("bhqs,bsr->bqhr", p.astype(c_kv_cache.dtype),
+                       c_kv_cache)
+    w_uv = params["w_uv"].reshape(m.kv_lora_rank, H, m.v_head_dim)
+    o = jnp.einsum("bqhr,rhd->bqhd", o_lat, w_uv.astype(f32))
+    o = o.reshape(B, 1, H * m.v_head_dim).astype(x.dtype)
+    return jnp.einsum("bse,ed->bsd", o, params["w_o"])

@@ -1,0 +1,37 @@
+"""Dense MLP blocks: SwiGLU / GELU. Weights kept 2-D for clean TP sharding."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.param import ParamDecl
+from repro.distributed.partition import ac
+
+
+def mlp_decls(d_model: int, d_ff: int, kind: str, bias: bool = False):
+    decls = {
+        "w_in": ParamDecl((d_model, d_ff), ("embed", "ff")),
+        "w_out": ParamDecl((d_ff, d_model), ("ff", "embed")),
+    }
+    if kind == "swiglu":
+        decls["w_gate"] = ParamDecl((d_model, d_ff), ("embed", "ff"))
+    if bias:
+        decls["b_in"] = ParamDecl((d_ff,), ("ff",), init="zeros")
+        decls["b_out"] = ParamDecl((d_model,), ("norm",), init="zeros")
+    return decls
+
+
+def mlp_apply(params, x, kind: str):
+    lg = ("batch",) + (None,) * (x.ndim - 2) + ("ff",)
+    h = ac(jnp.einsum("...d,df->...f", x, params["w_in"]), *lg)
+    if "b_in" in params:
+        h = h + params["b_in"]
+    if kind == "swiglu":
+        g = ac(jnp.einsum("...d,df->...f", x, params["w_gate"]), *lg)
+        h = jax.nn.silu(g.astype(jnp.float32)).astype(h.dtype) * h
+    else:
+        h = jax.nn.gelu(h.astype(jnp.float32)).astype(h.dtype)
+    out = jnp.einsum("...f,fd->...d", h, params["w_out"])
+    if "b_out" in params:
+        out = out + params["b_out"]
+    return out

@@ -1,0 +1,127 @@
+"""Token-choice MoE with capacity-based dispatch/combine einsums (t5x-style).
+
+Expert weights carry the "expert" logical axis -> sharded over the `model`
+mesh axis (EP); the dispatch/combine einsums against expert-sharded weights
+are what induce the all-to-all / reduce-scatter collectives in SPMD.
+
+Shared experts (deepseek fine-grained MoE) run as a plain dense SwiGLU with
+d_ff = n_shared * d_ff_expert.
+
+Capacity math: tokens are reshaped to (G, group_size); per group each expert
+accepts C = ceil(group_size * top_k / n_routed * capacity_factor) tokens;
+overflow tokens are dropped (standard token-choice behaviour; the router
+aux-loss keeps the drop rate low).
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.param import ParamDecl
+from repro.configs.base import MoEConfig
+from repro.distributed.partition import ac
+
+
+def moe_decls(d_model: int, mo: MoEConfig):
+    E, F = mo.n_routed, mo.d_ff_expert
+    decls = {
+        "router": ParamDecl((d_model, E), ("embed", "expert"), dtype=jnp.float32),
+        "w_in": ParamDecl((E, d_model, F), ("expert", "embed", "ff")),
+        "w_gate": ParamDecl((E, d_model, F), ("expert", "embed", "ff")),
+        "w_out": ParamDecl((E, F, d_model), ("expert", "ff", "embed")),
+    }
+    if mo.n_shared:
+        Fs = mo.n_shared * F
+        decls["shared"] = {
+            "w_in": ParamDecl((d_model, Fs), ("embed", "ff")),
+            "w_gate": ParamDecl((d_model, Fs), ("embed", "ff")),
+            "w_out": ParamDecl((Fs, d_model), ("ff", "embed")),
+        }
+    return decls
+
+
+def capacity(mo: MoEConfig, group_size: int) -> int:
+    c = math.ceil(group_size * mo.top_k / mo.n_routed * mo.capacity_factor)
+    return max(int(c), mo.top_k)
+
+
+def _dispatch_combine(router_probs, mo: MoEConfig, C: int):
+    """router_probs: (G,S,E) fp32 -> dispatch (G,S,E,C) bool-ish, combine fp32.
+
+    Priority = top-k rank then sequence position (t5x convention). Built by
+    iterating over the K choices so no (G,S,K,E,C) tensor is materialized.
+    """
+    G, S, E = router_probs.shape
+    topv, topi = jax.lax.top_k(router_probs, mo.top_k)      # (G,S,K)
+    topv = topv / jnp.maximum(jnp.sum(topv, -1, keepdims=True), 1e-9)
+
+    fill = jnp.zeros((G, E), jnp.int32)
+    dispatch = jnp.zeros((G, S, E, C), jnp.bool_)
+    combine = jnp.zeros((G, S, E, C), jnp.float32)
+    for k in range(mo.top_k):
+        idx = topi[:, :, k]                                  # (G,S)
+        mask = jax.nn.one_hot(idx, E, dtype=jnp.int32)       # (G,S,E)
+        pos = fill[:, None, :] + jnp.cumsum(mask, axis=1) - mask  # pos within expert
+        ok = (pos < C) & (mask > 0)
+        oh = jax.nn.one_hot(jnp.where(ok, pos, C), C + 1, dtype=jnp.float32)[..., :C]
+        d_k = oh * ok[..., None]
+        dispatch |= d_k.astype(bool)
+        combine = combine + d_k * topv[:, :, k][..., None, None]
+        fill = fill + jnp.sum(mask * ok.astype(jnp.int32), axis=1)
+    return dispatch, combine, topi, topv
+
+
+def moe_apply(params, x, mo: MoEConfig, norm_eps: float = 1e-6
+              ) -> Tuple[jax.Array, jax.Array]:
+    """x: (B,S,d) -> (out, aux_loss)."""
+    B, S, d = x.shape
+    T = B * S
+    gs = min(mo.group_size, T)
+    G = T // gs
+    assert G * gs == T, f"tokens {T} not divisible by group {gs}"
+    xt = x.reshape(G, gs, d)
+
+    logits = jnp.einsum("gsd,de->gse", xt.astype(jnp.float32),
+                        params["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    C = capacity(mo, gs)
+    dispatch, combine, topi, _ = _dispatch_combine(probs, mo, C)
+
+    # load-balance aux loss (Switch-style): E * sum(frac_tokens * frac_probs)
+    frac_probs = jnp.mean(probs, axis=(0, 1))
+    route_mask = jnp.sum(
+        jax.nn.one_hot(topi, mo.n_routed, dtype=jnp.float32), axis=2)  # (G,S,E)
+    frac_tokens = jnp.mean(route_mask, axis=(0, 1)) / mo.top_k
+    aux = mo.n_routed * jnp.sum(frac_probs * frac_tokens) * mo.aux_loss_alpha
+
+    disp = ac(dispatch.astype(x.dtype), "batch", None, "expert", None)
+    ein = ac(jnp.einsum("gsec,gsd->egcd", disp, xt),
+             "expert", "batch", None, None)                  # (E,G,C,d) - a2a
+    h = ac(jnp.einsum("egcd,edf->egcf", ein, params["w_in"]),
+           "expert", "batch", None, None)
+    g = jnp.einsum("egcd,edf->egcf", ein, params["w_gate"])
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(h.dtype) * h
+    eout = ac(jnp.einsum("egcf,efd->egcd", h, params["w_out"]),
+              "expert", "batch", None, None)                 # (E,G,C,d)
+    out = ac(jnp.einsum("gsec,egcd->gsd", combine.astype(x.dtype), eout),
+             "batch", None, None)
+
+    if "shared" in params:
+        sp = params["shared"]
+        hs = jnp.einsum("gsd,df->gsf", xt, sp["w_in"])
+        gsh = jnp.einsum("gsd,df->gsf", xt, sp["w_gate"])
+        hs = jax.nn.silu(gsh.astype(jnp.float32)).astype(hs.dtype) * hs
+        out = out + jnp.einsum("gsf,fd->gsd", hs, sp["w_out"])
+
+    return out.reshape(B, S, d), aux
+
+
+def router_entropy(params, x, mo: MoEConfig):
+    """Mean router entropy — exposed as a beyond-paper AL uncertainty signal."""
+    logits = jnp.einsum("...d,de->...e", x.astype(jnp.float32),
+                        params["router"].astype(jnp.float32))
+    p = jax.nn.softmax(logits, axis=-1)
+    return -jnp.sum(p * jnp.log(p + 1e-9), axis=-1)

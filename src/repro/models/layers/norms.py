@@ -1,0 +1,43 @@
+"""RMSNorm / LayerNorm (computed in fp32, cast back)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.common.param import ParamDecl
+
+
+def rms_decls(dim: int):
+    return {"scale": ParamDecl((dim,), ("norm",), init="ones")}
+
+
+def ln_decls(dim: int):
+    return {
+        "scale": ParamDecl((dim,), ("norm",), init="ones"),
+        "bias": ParamDecl((dim,), ("norm",), init="zeros"),
+    }
+
+
+def norm_decls(kind: str, dim: int):
+    return rms_decls(dim) if kind == "rms" else ln_decls(dim)
+
+
+def rmsnorm(params, x, eps: float = 1e-6):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * (var + eps) ** -0.5
+    return (x * params["scale"].astype(jnp.float32)).astype(dtype)
+
+
+def layernorm(params, x, eps: float = 1e-5):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    x = (x - mu) * (var + eps) ** -0.5
+    out = x * params["scale"].astype(jnp.float32) + params["bias"].astype(jnp.float32)
+    return out.astype(dtype)
+
+
+def apply_norm(kind: str, params, x, eps: float):
+    return rmsnorm(params, x, eps) if kind == "rms" else layernorm(params, x, eps)

@@ -1,0 +1,123 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma).
+
+Temporal mixing: y = W_out( GeLU(W_gate x) * RGLRU(conv1d_4(W_x x)) ).
+The linear recurrence h_t = a_t*h_{t-1} + sqrt(1-a_t^2)*(i_t*u_t) is run with
+``jax.lax.associative_scan`` (parallel, O(S log S)) for train/prefill and a
+single fused step for decode — this O(1)-state path is why the arch runs the
+long_500k shape.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.param import ParamDecl
+from repro.configs.base import ArchConfig
+
+_C_CONST = 8.0
+
+
+def rglru_decls(cfg: ArchConfig):
+    g = cfg.griffin
+    d, W = cfg.d_model, g.lru_width
+    H = cfg.n_heads
+    bw = W // H                      # block width for block-diagonal gates
+    return {
+        "w_x": ParamDecl((d, W), ("embed", "tp")),
+        "w_gate": ParamDecl((d, W), ("embed", "tp")),
+        "w_out": ParamDecl((W, d), ("tp", "embed")),
+        "conv_w": ParamDecl((g.conv_width, W), ("stack", "tp"), scale=0.1),
+        "conv_b": ParamDecl((W,), ("tp",), init="zeros"),
+        # block-diagonal input/recurrence gates (H blocks)
+        "gate_a_w": ParamDecl((H, bw, bw), ("heads", None, None)),
+        "gate_a_b": ParamDecl((H, bw), ("heads", None), init="zeros"),
+        "gate_x_w": ParamDecl((H, bw, bw), ("heads", None, None)),
+        "gate_x_b": ParamDecl((H, bw), ("heads", None), init="zeros"),
+        # Lambda: initialized so a = sigmoid(L) in (0.9, 0.999)
+        "lam": ParamDecl((W,), ("norm",), init="uniform", scale=1.0),
+    }
+
+
+def _gates(params, u, H: int):
+    """u: (B,S,W) -> (log_a, gated_in) both (B,S,W) fp32."""
+    B, S, W = u.shape
+    bw = W // H
+    ub = u.reshape(B, S, H, bw).astype(jnp.float32)
+    r = jax.nn.sigmoid(
+        jnp.einsum("bshw,hwv->bshv", ub, params["gate_a_w"].astype(jnp.float32))
+        + params["gate_a_b"].astype(jnp.float32))
+    i = jax.nn.sigmoid(
+        jnp.einsum("bshw,hwv->bshv", ub, params["gate_x_w"].astype(jnp.float32))
+        + params["gate_x_b"].astype(jnp.float32))
+    r = r.reshape(B, S, W)
+    i = i.reshape(B, S, W)
+    lam = params["lam"].astype(jnp.float32)
+    # log a_t = c * r_t * log sigmoid(Lambda)   (<= 0)
+    log_a = -_C_CONST * r * jax.nn.softplus(-lam)
+    gated = i * u.astype(jnp.float32)
+    return log_a, gated
+
+
+def conv1d_causal(params, u, state=None):
+    """Depthwise causal conv, width K. u: (B,S,W). state: (B,K-1,W) or None.
+
+    Returns (out, new_state) where new_state holds the last K-1 inputs.
+    """
+    K = params["conv_w"].shape[0]
+    B, S, W = u.shape
+    if state is None:
+        state = jnp.zeros((B, K - 1, W), u.dtype)
+    xs = jnp.concatenate([state, u], axis=1)          # (B, S+K-1, W)
+    out = jnp.zeros((B, S, W), jnp.float32)
+    for i in range(K):
+        w_i = params["conv_w"][K - 1 - i].astype(jnp.float32)
+        out = out + xs[:, i : i + S].astype(jnp.float32) * w_i
+    out = out + params["conv_b"].astype(jnp.float32)
+    new_state = xs[:, S:]
+    return out.astype(u.dtype), new_state
+
+
+def rglru_scan(log_a, gated, h0=None):
+    """Associative linear recurrence. All (B,S,W) fp32; h0: (B,W) or None."""
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 0.0)) * gated
+    if h0 is not None:
+        b = b.at[:, 0].add(a[:, 0] * h0)
+
+    def combine(x, y):
+        a1, b1 = x
+        a2, b2 = y
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h
+
+
+def rglru_block_apply(params, x, cfg: ArchConfig, state=None
+                      ) -> Tuple[jax.Array, dict]:
+    """Temporal-mix forward. x: (B,S,d). state: None or
+    {"h": (B,W), "conv": (B,K-1,W)}. Returns (y, new_state)."""
+    u = jnp.einsum("bsd,dw->bsw", x, params["w_x"])
+    gate = jax.nn.gelu(
+        jnp.einsum("bsd,dw->bsw", x, params["w_gate"]).astype(jnp.float32))
+    u, conv_state = conv1d_causal(
+        params, u, None if state is None else state["conv"])
+    log_a, gated = _gates(params, u, cfg.n_heads)
+    h0 = None if state is None else state["h"]
+    h = rglru_scan(log_a, gated, h0)
+    y = (gate * h).astype(x.dtype)
+    out = jnp.einsum("bsw,wd->bsd", y, params["w_out"])
+    new_state = {"h": h[:, -1].astype(jnp.float32), "conv": conv_state}
+    return out, new_state
+
+
+def rglru_state_decls(cfg: ArchConfig, batch: int):
+    g = cfg.griffin
+    return {
+        "h": ParamDecl((batch, g.lru_width), ("batch", "tp"),
+                       dtype=jnp.float32, init="zeros"),
+        "conv": ParamDecl((batch, g.conv_width - 1, g.lru_width),
+                          ("batch", None, "tp"), init="zeros"),
+    }

@@ -1,0 +1,23 @@
+"""Rotary position embeddings (rotate-half convention, fp32 phases)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def rope_freqs(head_dim: int, theta: float):
+    half = head_dim // 2
+    return theta ** (-jnp.arange(half, dtype=jnp.float32) / half)
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (..., S, H, D) or (..., S, D); positions: broadcastable to (..., S)."""
+    dtype = x.dtype
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                       # (d/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., S, d/2)
+    if x.ndim == ang.ndim + 1:                         # head axis present
+        ang = ang[..., None, :]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(dtype)

@@ -1,0 +1,220 @@
+"""RWKV6 ("Finch") time-mix + channel-mix blocks with data-dependent decay.
+
+Train/prefill use an exact *chunked* formulation (GLA-style): the sequence is
+split into chunks of length C; the matrix state S (per head, Dk x Dv) is
+carried across chunks with per-channel decay, and the intra-chunk part is an
+einsum over a (C, C, Dk) exp-of-log-decay-difference tensor. All exponent
+arguments are differences of a non-increasing cumulative log-decay, hence
+<= 0 — numerically safe without clamping (see tests vs. the sequential
+oracle). Decode is the exact one-step recurrence on the carried state:
+O(1) in context length, which is why rwkv6 runs long_500k.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.param import ParamDecl
+from repro.configs.base import ArchConfig
+
+MIX = ("w", "k", "v", "r", "g")
+
+
+def timemix_decls(cfg: ArchConfig):
+    r = cfg.rwkv
+    d = cfg.d_model
+    H = d // r.head_dim
+    return {
+        "mu_x": ParamDecl((d,), ("norm",), init="zeros"),
+        "mu": ParamDecl((5, d), (None, "norm"), init="zeros"),
+        "mix_w1": ParamDecl((d, 5 * r.mix_lora), ("embed", None), scale=0.01),
+        "mix_w2": ParamDecl((5, r.mix_lora, d), (None, None, "embed"), scale=0.01),
+        "decay_base": ParamDecl((d,), ("norm",), init="uniform", scale=1.0),
+        "decay_w1": ParamDecl((d, r.decay_lora), ("embed", "lora"), scale=0.01),
+        "decay_w2": ParamDecl((r.decay_lora, d), ("lora", "embed"), scale=0.01),
+        "bonus": ParamDecl((H, r.head_dim), ("heads", None), scale=0.1),
+        "w_r": ParamDecl((d, d), ("embed", "qkv")),
+        "w_k": ParamDecl((d, d), ("embed", "qkv")),
+        "w_v": ParamDecl((d, d), ("embed", "qkv")),
+        "w_g": ParamDecl((d, d), ("embed", "qkv")),
+        "w_o": ParamDecl((d, d), ("qkv", "embed")),
+        "gn_scale": ParamDecl((d,), ("norm",), init="ones"),
+        "gn_bias": ParamDecl((d,), ("norm",), init="zeros"),
+    }
+
+
+def chanmix_decls(cfg: ArchConfig):
+    d, f = cfg.d_model, cfg.d_ff
+    return {
+        "mu_k": ParamDecl((d,), ("norm",), init="zeros"),
+        "mu_r": ParamDecl((d,), ("norm",), init="zeros"),
+        "w_k": ParamDecl((d, f), ("embed", "ff")),
+        "w_v": ParamDecl((f, d), ("ff", "embed")),
+        "w_r": ParamDecl((d, d), ("embed", "qkv")),
+    }
+
+
+def _token_shift(x, prev):
+    """x: (B,S,d); prev: (B,d) last token of previous segment (zeros at t=0)."""
+    return jnp.concatenate([prev[:, None, :], x[:, :-1]], axis=1)
+
+
+def _ddlerp(x, sx, mu_x, mu, w1, w2):
+    """RWKV6 data-dependent mixing -> the 5 mixed inputs (w,k,v,r,g)."""
+    xx = x + sx * mu_x                                     # (B,S,d)
+    lo = jnp.tanh(jnp.einsum("bsd,dl->bsl", xx, w1))
+    lo = lo.reshape(*lo.shape[:-1], 5, w2.shape[1])
+    off = jnp.einsum("bsml,mld->bsmd", lo, w2)             # (B,S,5,d)
+    mixed = x[..., None, :] + sx[..., None, :] * (mu + off)
+    return [mixed[..., i, :] for i in range(5)]
+
+
+def _group_norm(o, scale, bias, H: int, eps: float = 64e-5):
+    B, S, d = o.shape
+    x = o.reshape(B, S, H, d // H).astype(jnp.float32)
+    mu = jnp.mean(x, -1, keepdims=True)
+    var = jnp.var(x, -1, keepdims=True)
+    x = (x - mu) * jax.lax.rsqrt(var + eps)
+    x = x.reshape(B, S, d)
+    return x * scale.astype(jnp.float32) + bias.astype(jnp.float32)
+
+
+def _rkvw(params, x, x_prev, cfg: ArchConfig):
+    """Projections + per-step log decay. Returns (r,k,v,g,log_w,(B,d) last x)."""
+    sx = _token_shift(x, x_prev) - x
+    xw, xk, xv, xr, xg = _ddlerp(x, sx, params["mu_x"], params["mu"],
+                                 params["mix_w1"], params["mix_w2"])
+    r = jnp.einsum("bsd,de->bse", xr, params["w_r"])
+    k = jnp.einsum("bsd,de->bse", xk, params["w_k"])
+    v = jnp.einsum("bsd,de->bse", xv, params["w_v"])
+    g = jax.nn.silu(jnp.einsum("bsd,de->bse", xg, params["w_g"])
+                    .astype(jnp.float32))
+    dec = params["decay_base"].astype(jnp.float32) + jnp.einsum(
+        "bsl,ld->bsd",
+        jnp.tanh(jnp.einsum("bsd,dl->bsl", xw, params["decay_w1"])),
+        params["decay_w2"]).astype(jnp.float32)
+    log_w = -jnp.exp(dec)                                  # <= 0, per channel
+    return r, k, v, g, log_w, x[:, -1]
+
+
+def wkv_sequential(r, k, v, log_w, bonus, state0):
+    """Oracle: exact per-step scan. r/k/v: (B,S,H,D); state0: (B,H,D,D)."""
+    def step(S, inp):
+        r_t, k_t, v_t, w_t = inp                           # (B,H,D)...
+        kv = jnp.einsum("bhk,bhv->bhkv", k_t, v_t)
+        o_t = jnp.einsum("bhk,bhkv->bhv", r_t, S + bonus[..., None] * kv)
+        S = jnp.exp(w_t)[..., None] * S + kv
+        return S, o_t
+
+    xs = tuple(jnp.moveaxis(a, 1, 0) for a in (r, k, v, log_w))
+    state, o = jax.lax.scan(step, state0, xs)
+    return jnp.moveaxis(o, 0, 1), state
+
+
+def wkv_chunked(r, k, v, log_w, bonus, state0, chunk: int):
+    """Exact chunked WKV. r/k/v/log_w: (B,S,H,D) fp32; state0: (B,H,D,D)."""
+    B, S, H, D = r.shape
+    C = min(chunk, S)
+    n = -(-S // C)
+    pad = n * C - S
+    if pad:
+        z = lambda a: jnp.pad(a, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        r, k, v = z(r), z(k), z(v)
+        log_w = jnp.pad(log_w, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    rc = r.reshape(B, n, C, H, D)
+    kc = k.reshape(B, n, C, H, D)
+    vc = v.reshape(B, n, C, H, D)
+    wc = log_w.reshape(B, n, C, H, D)
+
+    tri = jnp.tril(jnp.ones((C, C), bool), k=-1)           # strictly lower
+
+    def chunk_step(Sst, inp):
+        rr, kk, vv, ww = inp                               # (B,C,H,D)
+        b = jnp.cumsum(ww, axis=1)                         # inclusive cumsum
+        b_end = b[:, -1]                                   # (B,H,D)
+        # inter-chunk: o_t += (r_t * exp(b_{t-1})) @ S_prev
+        b_prev = b - ww                                    # exclusive cumsum
+        q_int = rr * jnp.exp(b_prev)
+        o = jnp.einsum("bthk,bhkv->bthv", q_int, Sst)
+        # intra-chunk: s_tj = sum_d r_td k_jd exp(b_{t-1,d} - b_{j,d}), j<t
+        diff = b_prev[:, :, None] - b[:, None, :]          # (B,C,C,H,D)
+        diff = jnp.where(tri[None, :, :, None, None], diff, -jnp.inf)
+        s = jnp.einsum("bthd,bjhd,btjhd->btjh", rr, kk, jnp.exp(diff))
+        o = o + jnp.einsum("btjh,bjhv->bthv", s, vv)
+        # diagonal bonus term
+        diag = jnp.einsum("bthd,hd,bthd->bth", rr, bonus, kk)
+        o = o + diag[..., None] * vv
+        # state update: S = exp(b_end) * S_prev + sum_j exp(b_end - b_j) k_j v_j
+        k_dec = kk * jnp.exp(b_end[:, None] - b)
+        Sst = jnp.exp(b_end)[..., None] * Sst + jnp.einsum(
+            "bjhk,bjhv->bhkv", k_dec, vv)
+        return Sst, o
+
+    xs = tuple(jnp.moveaxis(a, 1, 0) for a in (rc, kc, vc, wc))
+    state, o = jax.lax.scan(chunk_step, state0, xs)
+    o = jnp.moveaxis(o, 0, 1).reshape(B, n * C, H, D)[:, :S]
+    return o, state
+
+
+def timemix_apply(params, x, cfg: ArchConfig, state=None
+                  ) -> Tuple[jax.Array, dict]:
+    """x: (B,S,d). state: None or {"x_prev": (B,d), "S": (B,H,D,D) fp32}."""
+    r_cfg = cfg.rwkv
+    B, S, d = x.shape
+    H, D = d // r_cfg.head_dim, r_cfg.head_dim
+    x_prev = (jnp.zeros((B, d), x.dtype) if state is None else
+              state["x_prev"].astype(x.dtype))
+    r, k, v, g, log_w, last_x = _rkvw(params, x, x_prev, cfg)
+    shp = (B, S, H, D)
+    r4 = r.reshape(shp).astype(jnp.float32)
+    k4 = k.reshape(shp).astype(jnp.float32)
+    v4 = v.reshape(shp).astype(jnp.float32)
+    w4 = log_w.reshape(shp)
+    S0 = (jnp.zeros((B, H, D, D), jnp.float32) if state is None
+          else state["S"])
+    bonus = params["bonus"].astype(jnp.float32)
+    if S == 1:
+        o, S1 = wkv_sequential(r4, k4, v4, w4, bonus, S0)
+    else:
+        o, S1 = wkv_chunked(r4, k4, v4, w4, bonus, S0, r_cfg.chunk)
+    o = _group_norm(o.reshape(B, S, d), params["gn_scale"], params["gn_bias"], H)
+    o = (o * g).astype(x.dtype)
+    out = jnp.einsum("bsd,de->bse", o, params["w_o"])
+    return out, {"x_prev": last_x.astype(jnp.float32), "S": S1}
+
+
+def chanmix_apply(params, x, state=None) -> Tuple[jax.Array, dict]:
+    """x: (B,S,d). state: None or {"x_prev": (B,d)}."""
+    B, S, d = x.shape
+    x_prev = (jnp.zeros((B, d), x.dtype) if state is None else
+              state["x_prev"].astype(x.dtype))
+    sx = _token_shift(x, x_prev) - x
+    xk = x + sx * params["mu_k"]
+    xr = x + sx * params["mu_r"]
+    kk = jnp.einsum("bsd,df->bsf", xk, params["w_k"])
+    kk = jnp.square(jax.nn.relu(kk.astype(jnp.float32))).astype(x.dtype)
+    kv = jnp.einsum("bsf,fd->bsd", kk, params["w_v"])
+    rr = jax.nn.sigmoid(
+        jnp.einsum("bsd,de->bse", xr, params["w_r"]).astype(jnp.float32))
+    return (rr * kv.astype(jnp.float32)).astype(x.dtype), {
+        "x_prev": x[:, -1].astype(jnp.float32)}
+
+
+def rwkv_state_decls(cfg: ArchConfig, batch: int):
+    r = cfg.rwkv
+    d = cfg.d_model
+    H, D = d // r.head_dim, r.head_dim
+    return {
+        "att": {
+            "x_prev": ParamDecl((batch, d), ("batch", None),
+                                dtype=jnp.float32, init="zeros"),
+            "S": ParamDecl((batch, H, D, D), ("batch", "heads", None, None),
+                           dtype=jnp.float32, init="zeros"),
+        },
+        "ffn": {
+            "x_prev": ParamDecl((batch, d), ("batch", None),
+                                dtype=jnp.float32, init="zeros"),
+        },
+    }

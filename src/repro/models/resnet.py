@@ -1,0 +1,100 @@
+"""ResNet feature extractor in pure JAX (paper's scorer: ResNet-18 [19]).
+
+The paper fine-tunes only the last layer on AL-selected samples; we mirror
+that: ``resnet_features`` is the frozen extractor, a logistic head is fit on
+top (see service/backends.py). ``resnet18_config`` is the paper-faithful
+depth; benchmarks use ``tiny`` so one-round AL on CPU finishes in seconds.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.param import ParamDecl, init_params
+
+
+@dataclasses.dataclass(frozen=True)
+class ResNetConfig:
+    stage_sizes: Sequence[int] = (2, 2, 2, 2)       # resnet-18
+    widths: Sequence[int] = (64, 128, 256, 512)
+    in_channels: int = 3
+    num_classes: int = 10
+
+
+def resnet18_config() -> ResNetConfig:
+    return ResNetConfig()
+
+
+def tiny_config(num_classes: int = 10) -> ResNetConfig:
+    return ResNetConfig(stage_sizes=(1, 1), widths=(16, 32),
+                        num_classes=num_classes)
+
+
+def _conv_decl(cin, cout, k=3):
+    return ParamDecl((k, k, cin, cout), (None, None, None, "tp"),
+                     dtype=jnp.float32, fan_in_axes=(0, 1, 2))
+
+
+def resnet_decls(cfg: ResNetConfig):
+    decls = {"stem": _conv_decl(cfg.in_channels, cfg.widths[0])}
+    blocks = []
+    cin = cfg.widths[0]
+    for si, (n, w) in enumerate(zip(cfg.stage_sizes, cfg.widths)):
+        for bi in range(n):
+            b = {
+                "conv1": _conv_decl(cin, w),
+                "conv2": _conv_decl(w, w),
+                "scale1": ParamDecl((w,), ("norm",), dtype=jnp.float32,
+                                    init="ones"),
+                "scale2": ParamDecl((w,), ("norm",), dtype=jnp.float32,
+                                    init="ones"),
+            }
+            if cin != w:
+                b["proj"] = _conv_decl(cin, w, k=1)
+            blocks.append(b)
+            cin = w
+    decls["blocks"] = blocks
+    decls["head"] = ParamDecl((cin, cfg.num_classes), ("embed", "tp"),
+                              dtype=jnp.float32)
+    return decls
+
+
+def init_resnet(cfg: ResNetConfig, rng):
+    return init_params(resnet_decls(cfg), rng)
+
+
+def _conv(x, w, stride=1):
+    return jax.lax.conv_general_dilated(
+        x, w, (stride, stride), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+
+def _norm(x, scale):
+    mu = jnp.mean(x, axis=(0, 1, 2), keepdims=True)
+    var = jnp.var(x, axis=(0, 1, 2), keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + 1e-5) * scale
+
+
+def resnet_features(params, cfg: ResNetConfig, x):
+    """x: (B,H,W,C) fp32 in [0,1] -> (B, widths[-1]) pooled features."""
+    h = jax.nn.relu(_conv(x, params["stem"]))
+    bi = 0
+    cin = cfg.widths[0]
+    for si, (n, w) in enumerate(zip(cfg.stage_sizes, cfg.widths)):
+        for k in range(n):
+            b = params["blocks"][bi]
+            stride = 2 if (k == 0 and si > 0) else 1
+            y = jax.nn.relu(_norm(_conv(h, b["conv1"], stride), b["scale1"]))
+            y = _norm(_conv(y, b["conv2"]), b["scale2"])
+            sc = h if "proj" not in b else _conv(h, b["proj"], stride)
+            h = jax.nn.relu(y + sc)
+            bi += 1
+            cin = w
+    return jnp.mean(h, axis=(1, 2))
+
+
+def resnet_logits(params, cfg: ResNetConfig, x):
+    return resnet_features(params, cfg, x) @ params["head"]

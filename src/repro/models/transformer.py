@@ -1,0 +1,801 @@
+"""Composable CausalLM covering all assigned architectures.
+
+A model is a list of *segments*; each segment is ``count`` repetitions of a
+*unit* (a short list of LayerSpecs). Uniform stacks (phi3, qwen, internlm,
+rwkv, llava) are one segment scanned ``count`` times; deepseek-v3 is
+[3 x dense-MLA, 58 x MoE-MLA]; recurrentgemma is [8 x (rec,rec,attn),
+1 x (rec,rec)]; whisper adds an encoder stack. Scanning over stacked layer
+params keeps XLA compile time flat in depth (critical for the 512-device
+dry-run) and remat-wraps each unit.
+
+Three execution modes share one layer implementation:
+  train    full sequence, no cache, returns CE loss (+aux)
+  prefill  full sequence, emits per-layer caches (ring-buffer for local attn,
+           compressed latents for MLA, fp32 state for RG-LRU/RWKV)
+  decode   single token against the cache (the `serve_step` of the dry-run)
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.param import ParamDecl, init_params, param_shapes
+from repro.configs.base import ArchConfig
+from repro.distributed.partition import ac
+from repro.models.layers import attention as attn_lib
+from repro.models.layers import mla as mla_lib
+from repro.models.layers import moe as moe_lib
+from repro.models.layers import rglru as rglru_lib
+from repro.models.layers import rwkv as rwkv_lib
+from repro.models.layers.mlp import mlp_apply, mlp_decls
+from repro.models.layers.norms import apply_norm, norm_decls
+from repro.models.layers.rope import apply_rope
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerSpec:
+    mixer: str          # attn | attn_local | mla | rec | rwkv_att
+    mlp: str            # dense | moe | rwkv_ffn
+    cross_attn: bool = False   # whisper decoder
+
+
+@dataclasses.dataclass(frozen=True)
+class Segment:
+    count: int
+    unit: Tuple[LayerSpec, ...]
+
+
+def build_segments(cfg: ArchConfig) -> List[Segment]:
+    if cfg.rwkv is not None:
+        return [Segment(cfg.n_layers, (LayerSpec("rwkv_att", "rwkv_ffn"),))]
+    if cfg.griffin is not None:
+        pat = cfg.griffin.pattern
+        unit = tuple(
+            LayerSpec("rec" if p == "rec" else "attn_local", "dense")
+            for p in pat)
+        full, rem = divmod(cfg.n_layers, len(pat))
+        segs = [Segment(full, unit)] if full else []
+        if rem:
+            segs.append(Segment(1, unit[:rem]))
+        return segs
+    mixer = "mla" if cfg.mla is not None else "attn"
+    if cfg.moe is not None:
+        fd = cfg.moe.first_dense
+        segs = []
+        if fd:
+            segs.append(Segment(fd, (LayerSpec(mixer, "dense"),)))
+        segs.append(Segment(cfg.n_layers - fd, (LayerSpec(mixer, "moe"),)))
+        return segs
+    return [Segment(cfg.n_layers, (LayerSpec(mixer, "dense",
+                                             cross_attn=cfg.enc_dec),))]
+
+
+# ---------------------------------------------------------------- decls ----
+
+def _mixer_decls(cfg: ArchConfig, spec: LayerSpec):
+    if spec.mixer in ("attn", "attn_local"):
+        return attn_lib.attn_decls(cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                                   cfg.hd, cfg.qkv_bias, cfg.qk_norm,
+                                   out_bias=(cfg.norm == "ln"))
+    if spec.mixer == "mla":
+        return mla_lib.mla_decls(cfg)
+    if spec.mixer == "rec":
+        return rglru_lib.rglru_decls(cfg)
+    if spec.mixer == "rwkv_att":
+        return rwkv_lib.timemix_decls(cfg)
+    raise ValueError(spec.mixer)
+
+
+def _mlp_decls(cfg: ArchConfig, spec: LayerSpec):
+    if spec.mlp == "dense":
+        return mlp_decls(cfg.d_model, cfg.d_ff, cfg.mlp, bias=(cfg.norm == "ln"))
+    if spec.mlp == "moe":
+        return moe_lib.moe_decls(cfg.d_model, cfg.moe)
+    if spec.mlp == "rwkv_ffn":
+        return rwkv_lib.chanmix_decls(cfg)
+    raise ValueError(spec.mlp)
+
+
+def _layer_decls(cfg: ArchConfig, spec: LayerSpec):
+    d = {
+        "norm1": norm_decls(cfg.norm, cfg.d_model),
+        "norm2": norm_decls(cfg.norm, cfg.d_model),
+        "mixer": _mixer_decls(cfg, spec),
+        "mlp": _mlp_decls(cfg, spec),
+    }
+    if spec.cross_attn:
+        d["norm_x"] = norm_decls(cfg.norm, cfg.d_model)
+        d["cross"] = attn_lib.attn_decls(
+            cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd,
+            out_bias=(cfg.norm == "ln"))
+    return d
+
+
+def _stack_decl(d: ParamDecl, count: int) -> ParamDecl:
+    return ParamDecl((count,) + d.shape, ("layer",) + d.logical,
+                     dtype=d.dtype, init=d.init, scale=d.scale)
+
+
+def _segment_decls(cfg: ArchConfig, seg: Segment):
+    unit = {str(i): _layer_decls(cfg, s) for i, s in enumerate(seg.unit)}
+    if seg.count == 1:
+        return unit
+    return jax.tree.map(lambda d: _stack_decl(d, seg.count), unit,
+                        is_leaf=lambda x: isinstance(x, ParamDecl))
+
+
+def model_decls(cfg: ArchConfig):
+    V, d = cfg.padded_vocab, cfg.d_model
+    decls: Dict[str, Any] = {
+        "embed": ParamDecl((V, d), ("vocab", "embed"), init="embed"),
+        "final_norm": norm_decls(cfg.norm, d),
+        "segments": [_segment_decls(cfg, s) for s in build_segments(cfg)],
+    }
+    if not cfg.tie_embeddings:
+        decls["lm_head"] = ParamDecl((d, V), ("embed", "vocab"))
+    if cfg.enc_dec:
+        enc_spec = LayerSpec("attn", "dense")
+        enc_seg = Segment(cfg.n_enc_layers, (enc_spec,))
+        decls["encoder"] = {
+            "segment": _segment_decls(cfg, enc_seg),
+            "final_norm": norm_decls(cfg.norm, d),
+        }
+    if cfg.mtp:
+        decls["mtp"] = {
+            "proj": ParamDecl((2 * d, d), ("embed", None)),
+            "norm_h": norm_decls(cfg.norm, d),
+            "norm_e": norm_decls(cfg.norm, d),
+            "layer": _layer_decls(cfg, LayerSpec(
+                "mla" if cfg.mla is not None else "attn", "dense")),
+            "final_norm": norm_decls(cfg.norm, d),
+        }
+    return decls
+
+
+# ---------------------------------------------------------------- cache ----
+
+def _layer_cache_decls(cfg: ArchConfig, spec: LayerSpec, B: int, S: int):
+    hd, KH = cfg.hd, cfg.n_kv_heads
+    if spec.mixer == "attn":
+        c = {"k": ParamDecl((B, S, KH * hd), ("batch", "kv_seq", "qkv"), init="zeros"),
+             "v": ParamDecl((B, S, KH * hd), ("batch", "kv_seq", "qkv"), init="zeros")}
+        if spec.cross_attn:
+            Se = cfg.n_enc_frames
+            c["xk"] = ParamDecl((B, Se, KH * hd), ("batch", None, "qkv"), init="zeros")
+            c["xv"] = ParamDecl((B, Se, KH * hd), ("batch", None, "qkv"), init="zeros")
+        return c
+    if spec.mixer == "attn_local":
+        W = min(cfg.griffin.window, S)
+        return {
+            "k": ParamDecl((B, W, KH * hd), ("batch", None, "qkv"), init="zeros"),
+            "v": ParamDecl((B, W, KH * hd), ("batch", None, "qkv"), init="zeros"),
+            "pos": ParamDecl((W,), (None,), dtype=jnp.int32, init="zeros"),
+        }
+    if spec.mixer == "mla":
+        m = cfg.mla
+        return {
+            "ckv": ParamDecl((B, S, m.kv_lora_rank), ("batch", "kv_seq", None), init="zeros"),
+            "kr": ParamDecl((B, S, m.qk_rope_head_dim), ("batch", "kv_seq", None), init="zeros"),
+        }
+    if spec.mixer == "rec":
+        return rglru_lib.rglru_state_decls(cfg, B)
+    if spec.mixer == "rwkv_att":
+        return rwkv_lib.rwkv_state_decls(cfg, B)
+    raise ValueError(spec.mixer)
+
+
+def cache_decls(cfg: ArchConfig, B: int, S: int):
+    segs = build_segments(cfg)
+    out = []
+    for seg in segs:
+        unit = {str(i): _layer_cache_decls(cfg, s, B, S)
+                for i, s in enumerate(seg.unit)}
+        if seg.count > 1:
+            unit = jax.tree.map(lambda d: _stack_decl(d, seg.count), unit,
+                                is_leaf=lambda x: isinstance(x, ParamDecl))
+        out.append(unit)
+    return {"len": ParamDecl((), (), dtype=jnp.int32, init="zeros"),
+            "segments": out}
+
+
+# --------------------------------------------------------------- layers ----
+
+def _apply_attn(cfg: ArchConfig, params, x, positions, mode, cache, cur_len,
+                *, local: bool):
+    B, S, _ = x.shape
+    window = cfg.griffin.window if local else None
+    q, k, v = attn_lib.project_qkv(params, x, cfg.n_heads, cfg.n_kv_heads,
+                                   cfg.hd, cfg.qk_norm, cfg.norm_eps)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    KH, hd = cfg.n_kv_heads, cfg.hd
+    new_cache = cache
+    if mode == "decode":
+        Sc = cache["k"].shape[1]
+        kf = k.reshape(B, 1, KH * hd)
+        vf = v.reshape(B, 1, KH * hd)
+        if local:
+            idx = jax.lax.rem(cur_len, Sc)
+            kc = jax.lax.dynamic_update_slice(cache["k"], kf, (0, idx, 0))
+            vc = jax.lax.dynamic_update_slice(cache["v"], vf, (0, idx, 0))
+            pos = jax.lax.dynamic_update_slice(
+                cache["pos"], cur_len[None].astype(jnp.int32) + 1, (idx,))
+            # pos buffer stores (position + 1); 0 means empty
+            o = attn_lib.decode_attention_pos(
+                q, kc.reshape(B, Sc, KH, hd), vc.reshape(B, Sc, KH, hd),
+                pos - 1, cur_len, window)
+            new_cache = {"k": kc, "v": vc, "pos": pos}
+        else:
+            kc = jax.lax.dynamic_update_slice(cache["k"], kf, (0, cur_len, 0))
+            vc = jax.lax.dynamic_update_slice(cache["v"], vf, (0, cur_len, 0))
+            o = attn_lib.decode_attention(
+                q, kc.reshape(B, Sc, KH, hd), vc.reshape(B, Sc, KH, hd),
+                cur_len + 1)
+            new_cache = dict(cache, k=kc, v=vc)
+    else:
+        impl = cfg.attention_impl if mode != "oracle" else "naive"
+        o = attn_lib.attention(
+            q, k, v, impl=impl, causal=True, window=window,
+            q_chunk=cfg.q_chunk, kv_chunk=cfg.kv_chunk)
+        if mode == "prefill":
+            if local:
+                Sc = cache["k"].shape[1]
+                ring, ringpos = _ring_from_seq(
+                    k.reshape(B, S, KH * hd), v.reshape(B, S, KH * hd), Sc)
+                new_cache = {"k": ring[0], "v": ring[1], "pos": ringpos}
+            else:
+                Sc = cache["k"].shape[1]
+                kf = jnp.zeros_like(cache["k"]).at[:, :S].set(
+                    k.reshape(B, S, KH * hd))
+                vf = jnp.zeros_like(cache["v"]).at[:, :S].set(
+                    v.reshape(B, S, KH * hd))
+                new_cache = dict(cache, k=kf, v=vf)
+    out = jnp.einsum("bse,ed->bsd", o.reshape(B, S, -1), params["w_o"])
+    if "b_o" in params:
+        out = out + params["b_o"]
+    return out, new_cache
+
+
+def _ring_from_seq(kf, vf, W: int):
+    """Fold the last W positions of (B,S,F) k/v into ring-buffer layout."""
+    B, S, F = kf.shape
+    i = jnp.arange(W)
+    # largest position p <= S-1 with p ≡ i (mod W); may be negative if S < W
+    p = i + ((S - 1 - i) // W) * W
+    valid = p >= 0
+    pc = jnp.clip(p, 0, S - 1)
+    kr = jnp.where(valid[None, :, None], kf[:, pc], 0)
+    vr = jnp.where(valid[None, :, None], vf[:, pc], 0)
+    pos = jnp.where(valid, p + 1, 0).astype(jnp.int32)   # store pos+1; 0=empty
+    return (kr, vr), pos
+
+
+def _apply_cross_attn(cfg: ArchConfig, params, x, enc_out, mode, cache):
+    """Whisper decoder cross-attention (no rope, bidirectional over frames)."""
+    B, S, _ = x.shape
+    KH, hd = cfg.n_kv_heads, cfg.hd
+    q = jnp.einsum("bsd,de->bse", x, params["w_q"]).reshape(B, S, cfg.n_heads, hd)
+    if mode == "decode":
+        k = cache["xk"].reshape(B, -1, KH, hd)
+        v = cache["xv"].reshape(B, -1, KH, hd)
+        new_cache = cache
+        o = attn_lib.naive_attention(q, k, v, causal=False)
+    else:
+        k = jnp.einsum("bsd,de->bse", enc_out, params["w_k"]).reshape(
+            B, -1, KH, hd)
+        v = jnp.einsum("bsd,de->bse", enc_out, params["w_v"]).reshape(
+            B, -1, KH, hd)
+        o = attn_lib.attention(q, k, v, impl="chunked", causal=False,
+                               q_chunk=cfg.q_chunk, kv_chunk=cfg.kv_chunk)
+        new_cache = None
+        if mode == "prefill" and cache is not None:
+            new_cache = dict(cache,
+                             xk=k.reshape(B, -1, KH * hd),
+                             xv=v.reshape(B, -1, KH * hd))
+    out = jnp.einsum("bse,ed->bsd", o.reshape(B, S, -1), params["w_o"])
+    if "b_o" in params:
+        out = out + params["b_o"]
+    return out, new_cache
+
+
+def _apply_mixer(cfg, spec, params, x, positions, mode, cache, cur_len):
+    if spec.mixer in ("attn", "attn_local"):
+        return _apply_attn(cfg, params, x, positions, mode, cache, cur_len,
+                           local=spec.mixer == "attn_local")
+    if spec.mixer == "mla":
+        if mode == "decode":
+            Sc = cache["ckv"].shape[1]
+            # write latents for current token, then absorbed attention
+            _, _, c_kv, k_rope = mla_lib._latents(params, x, cfg, positions)
+            ckv = jax.lax.dynamic_update_slice(cache["ckv"], c_kv, (0, cur_len, 0))
+            kr = jax.lax.dynamic_update_slice(cache["kr"], k_rope, (0, cur_len, 0))
+            out = mla_lib.mla_decode(params, x, cfg, ckv, kr, cur_len + 1,
+                                     positions)
+            return out, {"ckv": ckv, "kr": kr}
+        out, (c_kv, k_rope) = mla_lib.mla_prefill(
+            params, x, cfg, positions,
+            impl="chunked" if cfg.attention_impl != "naive" else "naive")
+        if mode == "prefill":
+            S = x.shape[1]
+            ckv = jnp.zeros_like(cache["ckv"]).at[:, :S].set(c_kv)
+            kr = jnp.zeros_like(cache["kr"]).at[:, :S].set(k_rope)
+            return out, {"ckv": ckv, "kr": kr}
+        return out, cache
+    if spec.mixer == "rec":
+        state = cache if mode == "decode" else None
+        out, new_state = rglru_lib.rglru_block_apply(params, x, cfg, state)
+        return out, (new_state if mode in ("decode", "prefill") else cache)
+    if spec.mixer == "rwkv_att":
+        state = cache if mode == "decode" else None
+        out, new_state = rwkv_lib.timemix_apply(params, x, cfg, state)
+        return out, (new_state if mode in ("decode", "prefill") else cache)
+    raise ValueError(spec.mixer)
+
+
+def _apply_mlp(cfg, spec, params, x, mode, cache):
+    if spec.mlp == "dense":
+        return mlp_apply(params, x, cfg.mlp), cache, 0.0
+    if spec.mlp == "moe":
+        out, aux = moe_lib.moe_apply(params, x, cfg.moe, cfg.norm_eps)
+        return out, cache, aux
+    if spec.mlp == "rwkv_ffn":
+        state = cache if mode == "decode" else None
+        out, new_state = rwkv_lib.chanmix_apply(params, x, state)
+        return out, (new_state if mode in ("decode", "prefill") else cache), 0.0
+    raise ValueError(spec.mlp)
+
+
+def _apply_layer(cfg, spec: LayerSpec, params, x, positions, mode,
+                 cache, cur_len, enc_out):
+    mixer_cache = None if cache is None else cache.get("mixer")
+    mlp_cache = None if cache is None else cache.get("mlp")
+    x = ac(x, "batch", None, None)
+    h = apply_norm(cfg.norm, params["norm1"], x, cfg.norm_eps)
+    mo, new_mixer_cache = _apply_mixer(cfg, spec, params["mixer"], h,
+                                       positions, mode, mixer_cache, cur_len)
+    x = ac(x + mo, "batch", None, None)
+    if spec.cross_attn:
+        hx = apply_norm(cfg.norm, params["norm_x"], x, cfg.norm_eps)
+        xo, new_mixer_cache2 = _apply_cross_attn(
+            cfg, params["cross"], hx, enc_out, mode,
+            new_mixer_cache if mode in ("prefill", "decode") else None)
+        x = x + xo
+        if mode in ("prefill", "decode") and new_mixer_cache2 is not None:
+            new_mixer_cache = new_mixer_cache2
+    h2 = apply_norm(cfg.norm, params["norm2"], x, cfg.norm_eps)
+    fo, new_mlp_cache, aux = _apply_mlp(cfg, spec, params["mlp"], h2, mode,
+                                        mlp_cache)
+    x = ac(x + fo, "batch", None, None)
+    new_cache = None
+    if cache is not None:
+        new_cache = {"mixer": new_mixer_cache, "mlp": new_mlp_cache}
+    return x, new_cache, aux
+
+
+# ------------------------------------------------- unrolled decode path ----
+# Decode does NOT scan over layers: scanning makes the per-layer cache a
+# scan ys, and stacking ys rewrites a full layer cache (e.g. 268 MB/chip at
+# deepseek-v3 decode_32k) per layer for a one-token update — and defeats
+# input/output aliasing, adding a full zero-init of the stacked buffer.
+# Unrolling lets every layer issue one tiny dynamic-update-slice into the
+# *donated* stacked cache, which XLA aliases in place.
+# (EXPERIMENTS.md §Perf iteration A2: t_mem 1.94s -> ~0.03s.)
+
+def _dus(buf, update, idxs):
+    return jax.lax.dynamic_update_slice(buf, update.astype(buf.dtype), idxs)
+
+
+def _decode_layer_inplace(cfg: ArchConfig, spec: LayerSpec, params, x,
+                          positions, lc, li, cur_len, enc_out):
+    """One unrolled decode layer; lc maps names -> stacked (L, ...) arrays.
+    Returns (x, lc) with in-place-style updates at layer index ``li``."""
+    B = x.shape[0]
+    KH, hd = cfg.n_kv_heads, cfg.hd
+    zero = jnp.int32(0)
+    h = apply_norm(cfg.norm, params["norm1"], x, cfg.norm_eps)
+
+    if spec.mixer in ("attn", "attn_local"):
+        ap = params["mixer"]
+        q, k, v = attn_lib.project_qkv(ap, h, cfg.n_heads, KH, hd,
+                                       cfg.qk_norm, cfg.norm_eps)
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+        kf = k.reshape(B, 1, KH * hd)[None]
+        vf = v.reshape(B, 1, KH * hd)[None]
+        if spec.mixer == "attn_local":
+            W = lc["k"].shape[2]
+            idx = jax.lax.rem(cur_len, W)
+            lc = dict(lc,
+                      k=_dus(lc["k"], kf, (li, zero, idx, zero)),
+                      v=_dus(lc["v"], vf, (li, zero, idx, zero)),
+                      pos=_dus(lc["pos"], cur_len[None, None] + 1,
+                               (li, idx)))
+            o = attn_lib.decode_attention_pos(
+                q, lc["k"][li].reshape(B, W, KH, hd),
+                lc["v"][li].reshape(B, W, KH, hd),
+                lc["pos"][li] - 1, cur_len, cfg.griffin.window)
+        else:
+            Sc = lc["k"].shape[2]
+            lc = dict(lc,
+                      k=_dus(lc["k"], kf, (li, zero, cur_len, zero)),
+                      v=_dus(lc["v"], vf, (li, zero, cur_len, zero)))
+            o = attn_lib.decode_attention(
+                q, lc["k"][li].reshape(B, Sc, KH, hd),
+                lc["v"][li].reshape(B, Sc, KH, hd), cur_len + 1)
+        mo = jnp.einsum("bse,ed->bsd", o.reshape(B, 1, -1), ap["w_o"])
+        if "b_o" in ap:
+            mo = mo + ap["b_o"]
+    elif spec.mixer == "mla":
+        ap = params["mixer"]
+        _, _, c_kv, k_rope = mla_lib._latents(ap, h, cfg, positions)
+        lc = dict(lc,
+                  ckv=_dus(lc["ckv"], c_kv[None], (li, zero, cur_len, zero)),
+                  kr=_dus(lc["kr"], k_rope[None], (li, zero, cur_len, zero)))
+        mo = mla_lib.mla_decode(ap, h, cfg, lc["ckv"][li], lc["kr"][li],
+                                cur_len + 1, positions)
+    elif spec.mixer == "rec":
+        state = {"h": lc["h"][li], "conv": lc["conv"][li]}
+        mo, ns = rglru_lib.rglru_block_apply(params["mixer"], h, cfg, state)
+        lc = dict(lc,
+                  h=_dus(lc["h"], ns["h"][None], (li, zero, zero)),
+                  conv=_dus(lc["conv"], ns["conv"][None],
+                            (li, zero, zero, zero)))
+    elif spec.mixer == "rwkv_att":
+        state = {"x_prev": lc["att"]["x_prev"][li], "S": lc["att"]["S"][li]}
+        mo, ns = rwkv_lib.timemix_apply(params["mixer"], h, cfg, state)
+        lc = dict(lc, att={
+            "x_prev": _dus(lc["att"]["x_prev"], ns["x_prev"][None],
+                           (li, zero, zero)),
+            "S": _dus(lc["att"]["S"], ns["S"][None],
+                      (li, zero, zero, zero, zero))})
+    else:
+        raise ValueError(spec.mixer)
+    x = x + mo
+
+    if spec.cross_attn:
+        hx = apply_norm(cfg.norm, params["norm_x"], x, cfg.norm_eps)
+        cp = params["cross"]
+        q = jnp.einsum("bsd,de->bse", hx, cp["w_q"]).reshape(
+            B, 1, cfg.n_heads, hd)
+        o = attn_lib.decode_attention(
+            q, lc["xk"][li].reshape(B, -1, KH, hd),
+            lc["xv"][li].reshape(B, -1, KH, hd),
+            jnp.asarray(lc["xk"].shape[2], jnp.int32))
+        xo = jnp.einsum("bse,ed->bsd", o.reshape(B, 1, -1), cp["w_o"])
+        if "b_o" in cp:
+            xo = xo + cp["b_o"]
+        x = x + xo
+
+    h2 = apply_norm(cfg.norm, params["norm2"], x, cfg.norm_eps)
+    if spec.mlp == "rwkv_ffn":
+        state = {"x_prev": lc["ffn"]["x_prev"][li]}
+        fo, ns = rwkv_lib.chanmix_apply(params["mlp"], h2, state)
+        lc = dict(lc, ffn={"x_prev": _dus(lc["ffn"]["x_prev"],
+                                          ns["x_prev"][None],
+                                          (li, zero, zero))})
+    elif spec.mlp == "moe":
+        fo, _ = moe_lib.moe_apply(params["mlp"], h2, cfg.moe, cfg.norm_eps)
+    else:
+        fo = mlp_apply(params["mlp"], h2, cfg.mlp)
+    return x + fo, lc
+
+
+def _decode_segment_unrolled(cfg, seg: Segment, seg_params, seg_cache, x,
+                             positions, cur_len, enc_out):
+    cache = {str(i): seg_cache[str(i)] for i in range(len(seg.unit))}
+    for li in range(seg.count):
+        up = jax.tree.map(lambda a: a[li], seg_params)
+        for i, spec in enumerate(seg.unit):
+            x, cache[str(i)] = _decode_layer_inplace(
+                cfg, spec, up[str(i)], x, positions, cache[str(i)], li,
+                cur_len, enc_out)
+    return x, cache
+
+
+# -------------------------------------------------------------- backbone ---
+
+def _restructure_cache(cfg: ArchConfig, seg_cache, unit):
+    """Insert the {"mixer","mlp"} split used by _apply_layer."""
+    out = {}
+    for i, spec in enumerate(unit):
+        lc = seg_cache[str(i)]
+        if spec.mlp == "rwkv_ffn":
+            out[str(i)] = {"mixer": lc["att"], "mlp": lc["ffn"]}
+        else:
+            out[str(i)] = {"mixer": lc, "mlp": None}
+    return out
+
+
+def _flatten_cache(unit, cache):
+    out = {}
+    for i, spec in enumerate(unit):
+        lc = cache[str(i)]
+        if spec.mlp == "rwkv_ffn":
+            out[str(i)] = {"att": lc["mixer"], "ffn": lc["mlp"]}
+        else:
+            out[str(i)] = lc["mixer"]
+    return out
+
+
+def apply_backbone(cfg: ArchConfig, params, x, positions, mode,
+                   cache=None, cur_len=None, enc_out=None):
+    """x: (B,S,d) embedded inputs. Returns (h, new_cache, aux_sum)."""
+    segs = build_segments(cfg)
+    new_seg_caches = []
+    aux_total = 0.0
+
+    for si, seg in enumerate(segs):
+        seg_params = params["segments"][si]
+        seg_cache = None if cache is None else cache["segments"][si]
+
+        def unit_fn(xa, unit_params, unit_cache, seg=seg):
+            xx, aux_sum = xa
+            ncache = {} if unit_cache is not None else None
+            for i, spec in enumerate(seg.unit):
+                lc = None if unit_cache is None else unit_cache[str(i)]
+                xx, nc, aux = _apply_layer(cfg, spec, unit_params[str(i)], xx,
+                                           positions, mode, lc, cur_len,
+                                           enc_out)
+                if ncache is not None:
+                    ncache[str(i)] = nc
+            return (xx, aux_sum + aux), ncache
+
+        if seg.count == 1:
+            uc = (None if seg_cache is None
+                  else _restructure_cache(cfg, seg_cache, seg.unit))
+            (x, aux_total), nc = unit_fn((x, aux_total), seg_params, uc)
+            new_seg_caches.append(
+                None if nc is None else _flatten_cache(seg.unit, nc))
+        else:
+            if mode == "train" or cache is None:
+                def body(carry, up):
+                    return (jax.checkpoint(unit_fn)(carry, up, None)[0]
+                            if cfg.remat else unit_fn(carry, up, None)[0]), None
+                (x, aux_total), _ = jax.lax.scan(body, (x, aux_total),
+                                                 seg_params)
+                new_seg_caches.append(None)
+            elif mode == "decode":
+                # unrolled in-place path (see _decode_segment_unrolled)
+                x, nc = _decode_segment_unrolled(
+                    cfg, seg, seg_params, seg_cache, x, positions, cur_len,
+                    enc_out)
+                new_seg_caches.append(nc)
+            else:
+                rc = _restructure_cache(cfg, seg_cache, seg.unit)
+
+                def body(carry, xs):
+                    up, uc = xs
+                    fn = jax.checkpoint(unit_fn) if (
+                        cfg.remat and mode != "decode") else unit_fn
+                    carry, nc = fn(carry, up, uc)
+                    return carry, nc
+
+                (x, aux_total), ncs = jax.lax.scan(body, (x, aux_total),
+                                                   (seg_params, rc))
+                new_seg_caches.append(_flatten_cache(seg.unit, ncs))
+
+    h = apply_norm(cfg.norm, params["final_norm"], x, cfg.norm_eps)
+    new_cache = None
+    if cache is not None:
+        new_cache = {"len": cache["len"], "segments": new_seg_caches}
+    return h, new_cache, aux_total
+
+
+def apply_encoder(cfg: ArchConfig, params, frames):
+    """Whisper encoder over stub frame embeddings (B,T,d), bidirectional."""
+    enc_spec = LayerSpec("attn", "dense")
+    x = frames
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+
+    def unit_fn(xx, up):
+        h = apply_norm(cfg.norm, up["0"]["norm1"], xx, cfg.norm_eps)
+        q, k, v = attn_lib.project_qkv(up["0"]["mixer"], h, cfg.n_heads,
+                                       cfg.n_kv_heads, cfg.hd, cfg.qk_norm,
+                                       cfg.norm_eps)
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+        o = attn_lib.attention(q, k, v, impl="chunked", causal=False,
+                               q_chunk=cfg.q_chunk, kv_chunk=cfg.kv_chunk)
+        o = jnp.einsum("bse,ed->bsd", o.reshape(B, S, -1),
+                       up["0"]["mixer"]["w_o"])
+        if "b_o" in up["0"]["mixer"]:
+            o = o + up["0"]["mixer"]["b_o"]
+        xx = xx + o
+        h2 = apply_norm(cfg.norm, up["0"]["norm2"], xx, cfg.norm_eps)
+        xx = xx + mlp_apply(up["0"]["mlp"], h2, cfg.mlp)
+        return xx, None
+
+    def body(xx, up):
+        fn = jax.checkpoint(unit_fn) if cfg.remat else unit_fn
+        return fn(xx, up)
+
+    x, _ = jax.lax.scan(body, x, params["encoder"]["segment"])
+    return apply_norm(cfg.norm, params["encoder"]["final_norm"], x,
+                      cfg.norm_eps)
+
+
+# ----------------------------------------------------------------- model ---
+
+def _soft_cap(x, cap: Optional[float]):
+    if cap is None:
+        return x
+    return jnp.tanh(x / cap) * cap
+
+
+class Model:
+    """Functional model facade. All methods are pure (jit-able)."""
+
+    def __init__(self, cfg: ArchConfig):
+        self.cfg = cfg
+
+    # -- declarations --------------------------------------------------
+    def param_decls(self):
+        return model_decls(self.cfg)
+
+    def init(self, rng):
+        return init_params(self.param_decls(), rng)
+
+    def param_sds(self):
+        return param_shapes(self.param_decls())
+
+    def cache_decls(self, batch: int, max_len: int):
+        return cache_decls(self.cfg, batch, max_len)
+
+    # -- embedding / frontends ------------------------------------------
+    def _embed_inputs(self, params, batch):
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        x = ac(jnp.take(params["embed"], tokens, axis=0), "batch", None, None)
+        if cfg.n_patches and "patch_embeds" in batch:
+            P = min(cfg.n_patches, x.shape[1])
+            x = x.at[:, :P].set(batch["patch_embeds"][:, :P].astype(x.dtype))
+        return x
+
+    def _head(self, params):
+        if self.cfg.tie_embeddings:
+            return params["embed"].T
+        return params["lm_head"]
+
+    # -- training --------------------------------------------------------
+    def loss(self, params, batch, *, loss_chunk: int = 512):
+        """batch: tokens (B,S) int32, labels (B,S) int32 (-1 = pad),
+        optional frames / patch_embeds. Returns (loss, metrics)."""
+        cfg = self.cfg
+        x = self._embed_inputs(params, batch)
+        B, S, _ = x.shape
+        positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+        enc_out = None
+        if cfg.enc_dec:
+            enc_out = apply_encoder(cfg, params, batch["frames"])
+        h, _, aux = apply_backbone(cfg, params, x, positions, "train",
+                                   enc_out=enc_out)
+        ce, z = self._chunked_ce(params, h, batch["labels"], loss_chunk)
+        loss = ce + z + aux
+        metrics = {"ce": ce, "z_loss": z, "aux_loss": aux}
+        if cfg.mtp:
+            mtp_loss = self._mtp_loss(params, h, batch, positions)
+            loss = loss + 0.3 * mtp_loss
+            metrics["mtp"] = mtp_loss
+        return loss, metrics
+
+    def _chunked_ce(self, params, h, labels, chunk: int):
+        """Seq-chunked CE: never materializes (B,S,V) logits."""
+        cfg = self.cfg
+        head = self._head(params)
+        B, S, d = h.shape
+        c = min(chunk, S)
+        n = S // c if S % c == 0 else -(-S // c)
+        Sp = n * c
+        if Sp != S:
+            h = jnp.pad(h, ((0, 0), (0, Sp - S), (0, 0)))
+            labels = jnp.pad(labels, ((0, 0), (0, Sp - S)),
+                             constant_values=-1)
+        hc = h.reshape(B, n, c, d).swapaxes(0, 1)
+        lc = labels.reshape(B, n, c).swapaxes(0, 1)
+
+        def step(carry, xs):
+            hh, ll = xs
+            logits = ac(jnp.einsum("bcd,dv->bcv", hh, head),
+                        "batch", None, "vocab").astype(jnp.float32)
+            logits = _soft_cap(logits, cfg.logits_soft_cap)
+            lse = jax.nn.logsumexp(logits, axis=-1)
+            lbl = jnp.clip(ll, 0)
+            lbl_logit = jnp.take_along_axis(
+                logits, lbl[..., None], axis=-1)[..., 0]
+            w = (ll >= 0).astype(jnp.float32)
+            ce_sum = jnp.sum((lse - lbl_logit) * w)
+            z_sum = jnp.sum(jnp.square(lse) * w)
+            n_tok = jnp.sum(w)
+            a, b, cnt = carry
+            return (a + ce_sum, b + z_sum, cnt + n_tok), None
+
+        fn = jax.checkpoint(step) if cfg.remat else step
+        (ce_sum, z_sum, n_tok), _ = jax.lax.scan(
+            fn, (0.0, 0.0, 0.0), (hc, lc))
+        n_tok = jnp.maximum(n_tok, 1.0)
+        return ce_sum / n_tok, 1e-4 * z_sum / n_tok
+
+    def _mtp_loss(self, params, h, batch, positions):
+        """deepseek-v3 MTP (depth 1): predict token t+2 from [h_t; emb_{t+1}]."""
+        cfg = self.cfg
+        mp = params["mtp"]
+        tokens, labels = batch["tokens"], batch["labels"]
+        emb_next = jnp.take(params["embed"], jnp.roll(tokens, -1, axis=1),
+                            axis=0)
+        hh = apply_norm(cfg.norm, mp["norm_h"], h, cfg.norm_eps)
+        ee = apply_norm(cfg.norm, mp["norm_e"], emb_next, cfg.norm_eps)
+        z = jnp.einsum("bsd,dk->bsk", jnp.concatenate([hh, ee], -1),
+                       mp["proj"])
+        spec = LayerSpec("mla" if cfg.mla is not None else "attn", "dense")
+        z, _, _ = _apply_layer(cfg, spec, mp["layer"], z, positions, "train",
+                               None, None, None)
+        z = apply_norm(cfg.norm, mp["final_norm"], z, cfg.norm_eps)
+        labels2 = jnp.roll(labels, -1, axis=1).at[:, -2:].set(-1)
+        ce, _ = self._chunked_ce(params, z, labels2, 512)
+        return ce
+
+    # -- serving ----------------------------------------------------------
+    def prefill(self, params, batch, cache):
+        """Fill the cache from a prompt; returns (cache, last_logits)."""
+        cfg = self.cfg
+        x = self._embed_inputs(params, batch)
+        B, S, _ = x.shape
+        positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+        enc_out = None
+        if cfg.enc_dec:
+            enc_out = apply_encoder(cfg, params, batch["frames"])
+        h, new_cache, _ = apply_backbone(cfg, params, x, positions, "prefill",
+                                         cache=cache, cur_len=jnp.int32(0),
+                                         enc_out=enc_out)
+        new_cache["len"] = jnp.asarray(S, jnp.int32)
+        logits = jnp.einsum("bd,dv->bv", h[:, -1], self._head(params))
+        return new_cache, _soft_cap(logits.astype(jnp.float32),
+                                    cfg.logits_soft_cap)
+
+    def decode_step(self, params, cache, token):
+        """One serving step. token: (B,1) int32. Returns (logits, cache)."""
+        cfg = self.cfg
+        cur_len = cache["len"]
+        x = jnp.take(params["embed"], token, axis=0)
+        B = x.shape[0]
+        positions = jnp.broadcast_to(cur_len[None, None], (B, 1))
+        h, new_cache, _ = apply_backbone(cfg, params, x, positions, "decode",
+                                         cache=cache, cur_len=cur_len)
+        new_cache["len"] = cur_len + 1
+        logits = jnp.einsum("bd,dv->bv", h[:, 0], self._head(params))
+        return _soft_cap(logits.astype(jnp.float32),
+                         cfg.logits_soft_cap), new_cache
+
+    # -- AL hooks ----------------------------------------------------------
+    def embed_pool(self, params, batch):
+        """Mean-pooled final hidden state (B,d) — diversity strategies."""
+        cfg = self.cfg
+        x = self._embed_inputs(params, batch)
+        B, S, _ = x.shape
+        positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+        enc_out = None
+        if cfg.enc_dec:
+            enc_out = apply_encoder(cfg, params, batch["frames"])
+        h, _, _ = apply_backbone(cfg, params, x, positions, "train",
+                                 enc_out=enc_out)
+        mask = (batch["tokens"] >= 0).astype(h.dtype)[..., None]
+        return jnp.sum(h * mask, axis=1) / jnp.maximum(jnp.sum(mask, 1), 1)
+
+    def last_logits(self, params, batch):
+        """Last-position logits (B,V) — uncertainty strategies."""
+        cfg = self.cfg
+        x = self._embed_inputs(params, batch)
+        B, S, _ = x.shape
+        positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+        enc_out = None
+        if cfg.enc_dec:
+            enc_out = apply_encoder(cfg, params, batch["frames"])
+        h, _, _ = apply_backbone(cfg, params, x, positions, "train",
+                                 enc_out=enc_out)
+        logits = jnp.einsum("bd,dv->bv", h[:, -1], self._head(params))
+        return _soft_cap(logits.astype(jnp.float32), cfg.logits_soft_cap)

@@ -1,0 +1,79 @@
+"""Gradient compression for cross-pod reduction.
+
+Two composable schemes (both with exactness-preserving state):
+
+  * top-k sparsification with error feedback (DGC-style): only the k largest
+    |g| entries are reduced; the residual accumulates locally and is added
+    back next step, so the optimizer sees an unbiased long-run gradient.
+  * int8 quantization (per-tensor absmax scaling) around a psum — 4x fewer
+    bytes on the slow inter-pod links.
+
+At the (2,16,16) mesh the inter-pod axis has exactly these semantics: DP
+gradient reduction over "pod" is the long-haul traffic; compress there,
+keep in-pod reductions exact (see launch/train.py --compress).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def topk_sparsify(g: jax.Array, frac: float,
+                  err: Optional[jax.Array] = None
+                  ) -> Tuple[jax.Array, jax.Array]:
+    """Keep the top ``frac`` fraction of |g| (+ carried error); returns
+    (sparse_g, new_error). Shapes preserved (zeros elsewhere)."""
+    if err is not None:
+        g = g + err
+    flat = g.reshape(-1)
+    k = max(int(flat.shape[0] * frac), 1)
+    thresh = jax.lax.top_k(jnp.abs(flat), k)[0][-1]
+    mask = jnp.abs(g) >= thresh
+    sparse = jnp.where(mask, g, 0.0)
+    return sparse, g - sparse
+
+
+def int8_quantize(g: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    scale = jnp.maximum(jnp.max(jnp.abs(g)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def int8_dequantize(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def compressed_psum(g: jax.Array, axis_name: str, *,
+                    quantize: bool = True) -> jax.Array:
+    """psum with int8 payload: quantize -> psum(int32) -> dequant by the
+    gathered scales' max (conservative, deterministic)."""
+    if not quantize:
+        return jax.lax.psum(g, axis_name)
+    q, scale = int8_quantize(g)
+    scale = jax.lax.pmax(scale, axis_name)       # shared scale across peers
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    total = jax.lax.psum(q.astype(jnp.int32), axis_name)
+    return total.astype(jnp.float32) * scale
+
+
+def make_compressed_grad_fn(frac: float = 0.05):
+    """tree-level top-k + error feedback; returns (fn, init_state_fn)."""
+
+    def init_state(grads):
+        return jax.tree.map(jnp.zeros_like, grads)
+
+    def compress(grads, err_state):
+        outs = jax.tree.map(
+            lambda g, e: topk_sparsify(g.astype(jnp.float32), frac,
+                                       e.astype(jnp.float32)),
+            grads, err_state, is_leaf=lambda x: isinstance(x, jax.Array))
+        sparse = jax.tree.map(lambda t: t[0], outs,
+                              is_leaf=lambda x: isinstance(x, tuple))
+        new_err = jax.tree.map(lambda t: t[1], outs,
+                               is_leaf=lambda x: isinstance(x, tuple))
+        return sparse, new_err
+
+    return compress, init_state

@@ -1,0 +1,199 @@
+"""Optimizers built from scratch (no optax): AdamW and a factored
+Adafactor-style optimizer (bf16 first moment + rank-1 factored second moment)
+for the 671B-class archs where full fp32 Adam state would not fit 16 GB/chip.
+
+Both expose *declaration* trees so the dry-run can lower ``train_step`` with
+ShapeDtypeStructs and derive optimizer-state shardings from the same logical
+axes as the parameters (ZeRO-3 falls out of pjit param sharding).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.param import ParamDecl, init_params, is_decl
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in leaves))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale), grads), norm
+
+
+def cosine_schedule(base_lr: float, warmup: int, total: int) -> Callable:
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = base_lr * step / jnp.maximum(warmup, 1)
+        frac = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1), 0, 1)
+        cos = base_lr * 0.5 * (1 + jnp.cos(jnp.pi * frac))
+        return jnp.where(step < warmup, warm, cos)
+    return lr
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    lr: Callable = cosine_schedule(3e-4, 100, 10000)
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    state_dtype: Any = jnp.float32
+
+    def state_decls(self, param_decls):
+        def one(d: ParamDecl):
+            return {
+                "m": ParamDecl(d.shape, d.logical, dtype=self.state_dtype,
+                               init="zeros"),
+                "v": ParamDecl(d.shape, d.logical, dtype=self.state_dtype,
+                               init="zeros"),
+            }
+        return {
+            "per_param": jax.tree.map(one, param_decls, is_leaf=is_decl),
+            "step": ParamDecl((), (), dtype=jnp.int32, init="zeros"),
+        }
+
+    def init(self, params):
+        return {
+            "per_param": jax.tree.map(
+                lambda p: {"m": jnp.zeros(p.shape, self.state_dtype),
+                           "v": jnp.zeros(p.shape, self.state_dtype)}, params),
+            "step": jnp.zeros((), jnp.int32),
+        }
+
+    def update(self, grads, state, params):
+        step = state["step"] + 1
+        grads, gnorm = clip_by_global_norm(grads, self.clip_norm)
+        lr = self.lr(step)
+        bc1 = 1 - self.b1 ** step.astype(jnp.float32)
+        bc2 = 1 - self.b2 ** step.astype(jnp.float32)
+
+        def upd(p, g, s):
+            g32 = g.astype(jnp.float32)
+            m = self.b1 * s["m"].astype(jnp.float32) + (1 - self.b1) * g32
+            v = self.b2 * s["v"].astype(jnp.float32) + (1 - self.b2) * g32 ** 2
+            mhat = m / bc1
+            vhat = v / bc2
+            delta = mhat / (jnp.sqrt(vhat) + self.eps)
+            if p.ndim >= 2:  # decoupled weight decay, no decay on norms/bias
+                delta = delta + self.weight_decay * p.astype(jnp.float32)
+            new_p = (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+            return new_p, {"m": m.astype(self.state_dtype),
+                           "v": v.astype(self.state_dtype)}
+
+        flat_p, tdef = jax.tree.flatten(params)
+        flat_g = tdef.flatten_up_to(grads)
+        flat_s = tdef.flatten_up_to(state["per_param"])
+        outs = [upd(p, g, s) for p, g, s in zip(flat_p, flat_g, flat_s)]
+        new_params = tdef.unflatten([o[0] for o in outs])
+        new_state = {"per_param": tdef.unflatten([o[1] for o in outs]),
+                     "step": step}
+        return new_params, new_state, {"grad_norm": gnorm, "lr": lr}
+
+
+def _factor_axes(shape) -> Optional[Tuple[int, int]]:
+    """Pick the two largest trailing axes to factor over (None if ndim<2)."""
+    if len(shape) < 2:
+        return None
+    return (len(shape) - 2, len(shape) - 1)
+
+
+@dataclasses.dataclass(frozen=True)
+class Adafactor:
+    """Factored second moment (row/col) + bf16 first moment.
+
+    State cost: ~2 bytes/param (m in bf16) + O(rows+cols) for v — ~7x smaller
+    than fp32 AdamW state; the difference between deepseek-v3-671b fitting a
+    16 GB v5e chip or not (see EXPERIMENTS.md §Dry-run).
+    """
+    lr: Callable = cosine_schedule(1e-4, 100, 10000)
+    b1: float = 0.9
+    decay: float = 0.99
+    eps: float = 1e-30
+    clip_norm: float = 1.0
+    weight_decay: float = 0.0
+
+    def state_decls(self, param_decls):
+        def one(d: ParamDecl):
+            ax = _factor_axes(d.shape)
+            st = {"m": ParamDecl(d.shape, d.logical, dtype=jnp.bfloat16,
+                                 init="zeros")}
+            if ax is None:
+                st["v"] = ParamDecl(d.shape, d.logical, dtype=jnp.float32,
+                                    init="zeros")
+            else:
+                r, c = ax
+                row_shape = tuple(s for i, s in enumerate(d.shape) if i != c)
+                col_shape = tuple(s for i, s in enumerate(d.shape) if i != r)
+                row_log = tuple(l for i, l in enumerate(d.logical) if i != c)
+                col_log = tuple(l for i, l in enumerate(d.logical) if i != r)
+                st["vr"] = ParamDecl(row_shape, row_log, dtype=jnp.float32,
+                                     init="zeros")
+                st["vc"] = ParamDecl(col_shape, col_log, dtype=jnp.float32,
+                                     init="zeros")
+            return st
+        return {
+            "per_param": jax.tree.map(one, param_decls, is_leaf=is_decl),
+            "step": ParamDecl((), (), dtype=jnp.int32, init="zeros"),
+        }
+
+    def init(self, params):
+        decls = jax.tree.map(
+            lambda p: ParamDecl(p.shape, (None,) * p.ndim, dtype=p.dtype),
+            params)
+        return init_params(self.state_decls(decls), jax.random.PRNGKey(0))
+
+    def update(self, grads, state, params):
+        step = state["step"] + 1
+        grads, gnorm = clip_by_global_norm(grads, self.clip_norm)
+        lr = self.lr(step)
+
+        def upd(p, g, s):
+            g32 = g.astype(jnp.float32)
+            g2 = g32 * g32 + self.eps
+            if "v" in s:
+                v = self.decay * s["v"] + (1 - self.decay) * g2
+                precond = g32 * jax.lax.rsqrt(v + self.eps)
+                new_v = {"v": v}
+            else:
+                r, c = _factor_axes(p.shape)
+                vr = self.decay * s["vr"] + (1 - self.decay) * jnp.mean(g2, axis=c)
+                vc = self.decay * s["vc"] + (1 - self.decay) * jnp.mean(g2, axis=r)
+                denom = jnp.mean(vr, axis=-1, keepdims=True)
+                vr_e = jnp.expand_dims(vr, c)
+                vc_e = jnp.expand_dims(vc, r)
+                v = vr_e * vc_e / jnp.maximum(
+                    jnp.expand_dims(denom, c), self.eps)
+                precond = g32 * jax.lax.rsqrt(v + self.eps)
+                new_v = {"vr": vr, "vc": vc}
+            m = self.b1 * s["m"].astype(jnp.float32) + (1 - self.b1) * precond
+            delta = m
+            if p.ndim >= 2 and self.weight_decay:
+                delta = delta + self.weight_decay * p.astype(jnp.float32)
+            new_p = (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+            return new_p, dict(new_v, m=m.astype(jnp.bfloat16))
+
+        flat_p, tdef = jax.tree.flatten(params)
+        flat_g = tdef.flatten_up_to(grads)
+        flat_s = tdef.flatten_up_to(state["per_param"])
+        outs = [upd(p, g, s) for p, g, s in zip(flat_p, flat_g, flat_s)]
+        new_params = tdef.unflatten([o[0] for o in outs])
+        new_state = {"per_param": tdef.unflatten([o[1] for o in outs]),
+                     "step": step}
+        return new_params, new_state, {"grad_norm": gnorm, "lr": lr}
+
+
+OPTIMIZERS = {"adamw": AdamW, "adafactor": Adafactor}
+
+
+def make_optimizer(name: str, **kw):
+    return OPTIMIZERS[name](**kw)

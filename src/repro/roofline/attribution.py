@@ -1,0 +1,120 @@
+"""Cost attribution: where do the roofline bytes/FLOPs/collectives come from?
+
+Walks the same computation graph as hlo_analyzer but keeps per-instruction
+records scaled by the enclosing while trip-counts, attributed to the jax
+``op_name`` metadata (which carries model source names like
+``jit(train_step)/.../dot_general``). This is the dry-run 'profiler' the
+§Perf hillclimb iterates against — no wall clock on CPU, but exact
+compiled-artifact accounting.
+"""
+from __future__ import annotations
+
+import collections
+import re
+from typing import Dict, List, Optional, Tuple
+
+from repro.roofline.hlo_analyzer import (COLLECTIVE_OPS, HloCost, Instr,
+                                         _DONE_SUFFIX, _NON_MATERIAL,
+                                         _BODY_RE, _CALL_RE, _COND_RE,
+                                         _base_opcode, _instr_flops)
+
+_META_RE = re.compile(r'op_name="([^"]*)"')
+
+
+def _opname(inst: Instr) -> str:
+    m = _META_RE.search(inst.attrs)
+    if not m:
+        return f"<{inst.opcode}>"
+    name = m.group(1)
+    # strip unique suffixes to aggregate: keep the semantic path tail
+    parts = name.split("/")
+    return "/".join(parts[-3:]) if len(parts) > 3 else name
+
+
+class Attribution(HloCost):
+    def attribute(self) -> Dict[str, Dict[str, float]]:
+        """op_name -> {flops, bytes, coll} (trip-scaled)."""
+        agg: Dict[str, Dict[str, float]] = collections.defaultdict(
+            lambda: {"flops": 0.0, "bytes": 0.0, "coll": 0.0})
+        if self.entry is not None:
+            self._walk(self.entry, 1.0, agg, material=True)
+        return dict(agg)
+
+    def _walk(self, comp: str, mult: float, agg, *, material: bool):
+        instrs = self.comps.get(comp, [])
+        table = {i.name: i for i in instrs}
+        for inst in instrs:
+            op = inst.opcode
+            key = _opname(inst)
+            if op == "while":
+                body = _BODY_RE.search(inst.attrs)
+                cond = _COND_RE.search(inst.attrs)
+                trip = self._trip_count(inst, cond.group(1) if cond else None)
+                if body:
+                    self._walk(body.group(1), mult * trip, agg,
+                               material=material)
+                continue
+            if op in ("fusion", "call", "custom-call", "async-start"):
+                m = _CALL_RE.search(inst.attrs)
+                called = m.group(1) if m else None
+                if called:
+                    self._walk(called, mult, agg, material=False)
+                if (material and op != "custom-call"
+                        and not self._conv_only_fusion(called)):
+                    dus = self._inplace_dus_fusion(called)
+                    if dus is not None:
+                        tidx, ub = dus
+                        other = sum(self._operand_bytes(o, table, comp)
+                                    for i, o in enumerate(inst.operands)
+                                    if i != tidx and o in table)
+                        agg[key]["bytes"] += (2.0 * ub + min(
+                            other, ub * 4 + 1e6)) * mult
+                    else:
+                        ob = self._fusion_operand_bytes(inst, table, called,
+                                                        cname=comp)
+                        agg[key]["bytes"] += (inst.bytes_ + ob) * mult
+                continue
+            if op == "convert":
+                continue
+            if op in ("dynamic-slice", "slice", "gather"):
+                agg[key]["flops"] += _instr_flops(inst, table) * mult
+                if material:
+                    agg[key]["bytes"] += 2.0 * inst.bytes_ * mult
+                continue
+            if op == "dynamic-update-slice":
+                ub = (self._operand_bytes(inst.operands[1], table, comp)
+                      if len(inst.operands) > 1 else inst.bytes_)
+                if material:
+                    agg[key]["bytes"] += 2.0 * ub * mult
+                continue
+            base = _base_opcode(op)
+            if base in COLLECTIVE_OPS and not op.endswith(_DONE_SUFFIX):
+                ob = sum(self._operand_bytes(o, table, comp)
+                         for o in inst.operands if o in table)
+                if ob == 0:
+                    ob = inst.bytes_
+                agg[key]["coll"] += ob * mult
+                if material:
+                    agg[key]["bytes"] += (inst.bytes_ + ob) * mult
+                continue
+            agg[key]["flops"] += _instr_flops(inst, table) * mult
+            if material and op not in _NON_MATERIAL:
+                ob = sum(self._operand_bytes(o, table, comp)
+                         for o in inst.operands if o in table)
+                agg[key]["bytes"] += (inst.bytes_ + ob) * mult
+
+
+def top_costs(hlo_text: str, k: int = 25) -> str:
+    """Human-readable top-k contributors per resource."""
+    att = Attribution(hlo_text).attribute()
+    lines = []
+    for res in ("bytes", "coll", "flops"):
+        total = sum(v[res] for v in att.values())
+        lines.append(f"== top {res} (total {total:.3e}) ==")
+        top = sorted(att.items(), key=lambda kv: -kv[1][res])[:k]
+        for name, v in top:
+            if v[res] <= 0:
+                continue
+            lines.append(f"  {v[res]:.3e} ({v[res]/max(total,1e-30):6.1%}) "
+                         f"{name}")
+    return "\n".join(lines)

@@ -1,0 +1,469 @@
+"""Trip-count-aware cost analysis of post-optimization HLO text.
+
+``compiled.cost_analysis()`` counts while-loop bodies ONCE (verified in
+tests/test_roofline.py), which silently undercounts any scan-over-layers
+program by ~n_layers x. This analyzer parses the compiled module text,
+builds the computation call graph, and scales per-computation FLOPs / HBM
+bytes / collective-operand bytes by ``known_trip_count`` from each while's
+backend_config (fallback: the loop-bound constant in the condition).
+
+Cost model (documented deviations in EXPERIMENTS.md §Roofline):
+  * FLOPs: dots = 2 * result_elems * contracted_elems; elementwise = 1/elem;
+    reduces = operand elems. Matches XLA conventions for the dominant terms.
+  * HBM bytes: sum of (result + operand) bytes over *materializing* top-level
+    instructions; fusion internals are excluded (a fusion touches HBM only at
+    its parameters and its result), which is exactly the TPU mental model.
+  * Collectives: operand bytes per op kind (all-gather, all-reduce,
+    reduce-scatter, all-to-all, collective-permute), start/done pairs counted
+    once.
+
+All numbers are per-chip: an SPMD-partitioned executable's module is the
+per-device program.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 0.5, "u4": 0.5, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8, "f16": 2, "bf16": 2, "f32": 4,
+    "f64": 8, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+    "f8e4m3b11fnuz": 1, "f8e5m2fnuz": 1, "f8e4m3fnuz": 1, "f8e3m4": 1,
+    "f8e4m3": 1, "f8e8m0fnu": 1, "f4e2m1fn": 0.5,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+COLLECTIVE_OPS = {
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute", "ragged-all-to-all", "collective-broadcast",
+}
+_START_SUFFIX = "-start"
+_DONE_SUFFIX = "-done"
+
+_NON_MATERIAL = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "after-all", "token", "partition-id", "replica-id", "iota",
+    "reshape",  # layout-preserving view on the TPU target
+}
+
+_ELEMWISE = {
+    "add", "subtract", "multiply", "divide", "power", "exponential", "log",
+    "tanh", "sqrt", "rsqrt", "negate", "maximum", "minimum", "compare",
+    "select", "and", "or", "xor", "not", "exponential-minus-one",
+    "log-plus-one", "cbrt", "sine", "cosine", "clamp", "floor", "ceil",
+    "round-nearest-afz", "round-nearest-even", "abs", "sign", "atan2",
+    "remainder", "erf", "logistic", "shift-left", "shift-right-logical",
+    "shift-right-arithmetic", "is-finite",
+}
+
+
+def _shape_elems_and_bytes(type_str: str) -> Tuple[int, float]:
+    elems, byts = 0, 0.0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        elems += n
+        byts += n * _DTYPE_BYTES[dt]
+    return elems, byts
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    type_str: str
+    opcode: str
+    operands: List[str]
+    attrs: str
+    elems: int
+    bytes_: float
+    is_root: bool = False
+
+
+@dataclasses.dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll: Optional[Dict[str, float]] = None
+
+    def __post_init__(self):
+        if self.coll is None:
+            self.coll = {}
+
+    def __iadd__(self, other):
+        self.flops += other.flops
+        self.bytes += other.bytes
+        for k, v in other.coll.items():
+            self.coll[k] = self.coll.get(k, 0.0) + v
+        return self
+
+    def scaled(self, n: float) -> "Cost":
+        return Cost(self.flops * n, self.bytes * n,
+                    {k: v * n for k, v in self.coll.items()})
+
+
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->.*\{\s*$")
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(\(.*?\)|[\w\[\]{},]+)\s+"
+    r"([\w\-]+)\((.*)$")
+_TRIP_RE = re.compile(r"known_trip_count[^\d]*(\d+)")
+_CALL_RE = re.compile(r"calls=%?([\w.\-]+)")
+_BODY_RE = re.compile(r"body=%?([\w.\-]+)")
+_COND_RE = re.compile(r"condition=%?([\w.\-]+)")
+_LHS_C_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+
+
+def parse_computations(hlo: str) -> Tuple[Dict[str, List[Instr]], Optional[str]]:
+    comps: Dict[str, List[Instr]] = {}
+    entry = None
+    cur: Optional[str] = None
+    for line in hlo.splitlines():
+        if cur is None:
+            m = _COMP_RE.match(line)
+            if m:
+                cur = m.group(1)
+                comps[cur] = []
+                if line.startswith("ENTRY"):
+                    entry = cur
+            continue
+        if line.startswith("}"):
+            cur = None
+            continue
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        is_root = line.lstrip().startswith("ROOT ")
+        name, type_str, opcode, rest = m.groups()
+        depth = 1
+        i = 0
+        for i, ch in enumerate(rest):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    break
+        operand_str, attrs = rest[:i], rest[i + 1:]
+        operands = [o.strip().lstrip("%") for o in operand_str.split(",")
+                    if o.strip()]
+        operands = [o.split(" ")[0] for o in operands]
+        elems, byts = _shape_elems_and_bytes(type_str)
+        comps[cur].append(Instr(name, type_str, opcode, operands, attrs,
+                                elems, byts, is_root))
+    return comps, entry
+
+
+def _instr_flops(inst: Instr, table: Dict[str, Instr]) -> float:
+    op = inst.opcode
+    if op == "dot":
+        contracted = 1
+        m = _LHS_C_RE.search(inst.attrs)
+        if m and inst.operands:
+            lhs = table.get(inst.operands[0])
+            if lhs is not None:
+                dims_str = _SHAPE_RE.search(lhs.type_str)
+                if dims_str and dims_str.group(2):
+                    lhs_dims = [int(d) for d in dims_str.group(2).split(",")]
+                    for d in (m.group(1).split(",") if m.group(1) else []):
+                        contracted *= lhs_dims[int(d)]
+        return 2.0 * inst.elems * contracted
+    if op == "convolution":
+        kern = 1
+        if len(inst.operands) > 1:
+            rhs = table.get(inst.operands[1])
+            if rhs is not None:
+                kern = max(rhs.elems, 1)
+        return 2.0 * inst.elems * kern
+    if op in _ELEMWISE:
+        return float(inst.elems)
+    if op in ("reduce", "reduce-window"):
+        opnd = table.get(inst.operands[0]) if inst.operands else None
+        return float(opnd.elems if opnd else inst.elems)
+    if op == "all-reduce" or op == "all-reduce-start":
+        return float(inst.elems)
+    return 0.0
+
+
+def _base_opcode(op: str) -> str:
+    if op.endswith(_START_SUFFIX):
+        return op[: -len(_START_SUFFIX)]
+    return op
+
+
+# ops that exist in CPU HLO as bf16->f32 legalization / layout plumbing but
+# are free on the TPU target (the MXU consumes bf16 operands natively and
+# converts fuse into consumers). Treated as *transparent*: zero HBM charge,
+# operand sizes resolved through them to the source buffer.
+_TRANSPARENT = {"convert", "bitcast", "copy", "reshape", "parameter",
+                "tuple", "get-tuple-element", "constant"}
+
+
+class HloCost:
+    def __init__(self, hlo_text: str):
+        self.comps, self.entry = parse_computations(hlo_text)
+        self._memo: Dict[str, Cost] = {}
+        self.warnings: List[str] = []
+        # per-computation alias maps: instr name -> (source name or None)
+        self._alias: Dict[str, Dict[str, Optional[str]]] = {}
+        for cname, instrs in self.comps.items():
+            self._alias[cname] = self._build_aliases(cname, instrs)
+
+    def _conv_only_fusion(self, called: Optional[str]) -> bool:
+        if not called or called not in self.comps:
+            return False
+        return all(ci.opcode in _TRANSPARENT
+                   for ci in self.comps[called])
+
+    def _build_aliases(self, cname, instrs):
+        """instr -> source operand for transparent (no-HBM) instructions.
+
+        Only dtype-changing ops alias (convert + convert-only fusions):
+        the point is to charge consumers at the *storage* dtype size. GTE /
+        copy keep their own recorded (element) sizes — resolving a GTE to
+        its tuple operand would charge the whole loop carry.
+        """
+        alias: Dict[str, Optional[str]] = {}
+        for inst in instrs:
+            if inst.opcode in ("convert", "bitcast"):
+                alias[inst.name] = inst.operands[0] if inst.operands else None
+            elif inst.opcode == "copy" and "(" not in inst.type_str:
+                # non-tuple copy: resolve to source for dtype purposes
+                alias[inst.name] = inst.operands[0] if inst.operands else None
+            elif inst.opcode == "fusion":
+                m = _CALL_RE.search(inst.attrs)
+                if m and self._conv_only_fusion(m.group(1)):
+                    alias[inst.name] = (inst.operands[0]
+                                        if inst.operands else None)
+        return alias
+
+    def _operand_bytes(self, name: str, table: Dict[str, Instr],
+                       cname: str) -> float:
+        """Bytes of an operand, resolved through transparent aliases to the
+        real buffer; charged at the smallest (storage) dtype on the chain."""
+        alias = self._alias.get(cname, {})
+        seen = set()
+        best = table[name].bytes_ if name in table else 0.0
+        while name in alias and name not in seen:
+            seen.add(name)
+            nxt = alias[name]
+            if nxt is None or nxt not in table:
+                break
+            name = nxt
+            best = min(best, table[name].bytes_) if best else \
+                table[name].bytes_
+        return best
+
+    def _trip_count(self, inst: Instr, cond_name: Optional[str]) -> float:
+        m = _TRIP_RE.search(inst.attrs)
+        if m:
+            return float(m.group(1))
+        # fallback: loop bound = max integer constant in the condition
+        best = 0
+        if cond_name and cond_name in self.comps:
+            for ci in self.comps[cond_name]:
+                if ci.opcode == "constant":
+                    for o in ci.operands:
+                        if re.fullmatch(r"\d+", o):
+                            best = max(best, int(o))
+        if best:
+            return float(best)
+        self.warnings.append(f"while {inst.name}: no known_trip_count")
+        return 1.0
+
+    def comp_cost(self, name: str, *, material: bool = True) -> Cost:
+        key = f"{name}|{material}"
+        if key in self._memo:
+            return self._memo[key]
+        total = Cost()
+        instrs = self.comps.get(name, [])
+        table = {i.name: i for i in instrs}
+        for inst in instrs:
+            op = inst.opcode
+            if op == "while":
+                body = _BODY_RE.search(inst.attrs)
+                cond = _COND_RE.search(inst.attrs)
+                trip = self._trip_count(inst, cond.group(1) if cond else None)
+                if body:
+                    total += self.comp_cost(body.group(1)).scaled(trip)
+                continue
+            if op in ("fusion", "call", "custom-call", "async-start"):
+                m = _CALL_RE.search(inst.attrs)
+                called = m.group(1) if m else None
+                if called:
+                    inner = self.comp_cost(called, material=False)
+                    total += Cost(inner.flops, 0.0, dict(inner.coll))
+                if (material and op != "custom-call"
+                        and not self._conv_only_fusion(called)):
+                    dus = self._inplace_dus_fusion(called)
+                    if dus is not None:
+                        tidx, ub = dus
+                        other = sum(
+                            self._operand_bytes(o, table, name)
+                            for i, o in enumerate(inst.operands)
+                            if i != tidx and o in table)
+                        total += Cost(0.0, 2.0 * ub + min(other, ub * 4
+                                                          + 1e6), {})
+                    else:
+                        ob = self._fusion_operand_bytes(inst, table, called,
+                                                        cname=name)
+                        total += Cost(0.0, inst.bytes_ + ob, {})
+                continue
+            if op == "convert":
+                continue  # fused into consumers on the TPU target
+            if op in ("dynamic-slice", "slice", "gather"):
+                # reads + writes only the slice, never the source buffer
+                total += Cost(_instr_flops(inst, table),
+                              2.0 * inst.bytes_ if material else 0.0, {})
+                continue
+            if op == "dynamic-update-slice":
+                ub = (self._operand_bytes(inst.operands[1], table, name)
+                      if len(inst.operands) > 1 else inst.bytes_)
+                total += Cost(0.0, 2.0 * ub if material else 0.0, {})
+                continue
+            if op == "conditional":
+                # take max branch cost (upper bound)
+                branches = re.findall(r"branch_computations=\{([^}]*)\}",
+                                      inst.attrs)
+                names = []
+                if branches:
+                    names = [b.strip().lstrip("%") for b in
+                             branches[0].split(",")]
+                else:
+                    names = [m.group(1) for m in
+                             re.finditer(r"(?:true|false)_computation=%?"
+                                         r"([\w.\-]+)", inst.attrs)]
+                if names:
+                    costs = [self.comp_cost(n) for n in names]
+                    best = max(costs, key=lambda c: c.flops + c.bytes)
+                    total += best
+                continue
+            base = _base_opcode(op)
+            if base in COLLECTIVE_OPS and not op.endswith(_DONE_SUFFIX):
+                ob = sum(self._operand_bytes(o, table, name)
+                         for o in inst.operands if o in table)
+                if ob == 0:
+                    ob = inst.bytes_
+                total += Cost(_instr_flops(inst, table),
+                              inst.bytes_ + ob if material else 0.0,
+                              {base: ob})
+                continue
+            fl = _instr_flops(inst, table)
+            by = 0.0
+            if material and op not in _NON_MATERIAL:
+                ob = sum(self._operand_bytes(o, table, name)
+                         for o in inst.operands if o in table)
+                by = inst.bytes_ + ob
+            total += Cost(fl, by, {})
+        self._memo[key] = total
+        return total
+
+    def _inplace_dus_fusion(self, called: Optional[str]
+                            ) -> Optional[Tuple[int, float]]:
+        """If the fused computation's ROOT is (converts of) a
+        dynamic-update-slice whose target traces back to a parameter, this
+        models the TPU in-place cache update: returns (target_param_index,
+        update_bytes). The fusion's full-buffer result then aliases its
+        input instead of being written to HBM."""
+        if not called or called not in self.comps:
+            return None
+        cinstrs = self.comps[called]
+        ctable = {c.name: c for c in cinstrs}
+
+        def resolve(nm, depth=0):
+            ci = ctable.get(nm)
+            while (ci is not None and depth < 8
+                   and ci.opcode in ("convert", "bitcast", "copy", "reshape")
+                   and ci.operands):
+                ci = ctable.get(ci.operands[0])
+                depth += 1
+            return ci
+
+        root = next((c for c in cinstrs if c.is_root), None)
+        dus = resolve(root.name) if root is not None else None
+        if dus is None or dus.opcode != "dynamic-update-slice":
+            return None
+        target = resolve(dus.operands[0]) if dus.operands else None
+        if target is None or target.opcode != "parameter":
+            return None
+        try:
+            tidx = int(target.operands[0])
+        except (ValueError, IndexError):
+            return None
+        upd = resolve(dus.operands[1]) if len(dus.operands) > 1 else None
+        # charge at storage (min) dtype size of the update
+        ub = min(upd.bytes_, ctable[dus.operands[1]].bytes_) if (
+            upd is not None and dus.operands[1] in ctable) else (
+            upd.bytes_ if upd is not None else dus.bytes_)
+        return tidx, ub
+
+    def _fusion_operand_bytes(self, inst: Instr, table: Dict[str, Instr],
+                              called: Optional[str], *,
+                              cname: str = "") -> float:
+        """Operand bytes of a fusion, charging sliced params at slice size.
+
+        A fused dynamic-slice reads only the slice from HBM; charging the
+        full operand would overcount KV-cache and scan-slice traffic badly.
+        convert/bitcast/copy inside the fused body are treated as
+        transparent when tracing a parameter's uses (TPU target model).
+        """
+        full = [self._operand_bytes(o, table, cname) if o in table else 0.0
+                for o in inst.operands]
+        if not called or called not in self.comps:
+            return float(sum(full))
+        cinstrs = self.comps[called]
+        ctable = {c.name: c for c in cinstrs}
+        uses_of: Dict[str, List[Instr]] = {}
+        for ci in cinstrs:
+            for o in ci.operands:
+                uses_of.setdefault(o, []).append(ci)
+
+        def terminal_uses(nm: str, depth=0) -> List[Instr]:
+            outs = []
+            for u in uses_of.get(nm, []):
+                if u.opcode in ("convert", "bitcast", "copy", "reshape") \
+                        and depth < 6:
+                    outs.extend(terminal_uses(u.name, depth + 1))
+                else:
+                    outs.append(u)
+            return outs
+
+        pname_to_idx: Dict[str, int] = {}
+        for ci in cinstrs:
+            if ci.opcode == "parameter" and ci.operands:
+                try:
+                    pname_to_idx[ci.name] = int(ci.operands[0])
+                except ValueError:
+                    pass
+        idx_to_pname = {v: k for k, v in pname_to_idx.items()}
+
+        out = 0.0
+        for i, fb in enumerate(full):
+            pname = idx_to_pname.get(i)
+            uses = terminal_uses(pname) if pname else None
+            if uses and all(u.opcode in ("dynamic-slice", "slice", "gather",
+                                         "dynamic-update-slice")
+                            for u in uses):
+                out += sum(
+                    u.bytes_ if u.opcode != "dynamic-update-slice"
+                    else (self._operand_bytes(u.operands[1], ctable, called)
+                          if len(u.operands) > 1 else u.bytes_)
+                    for u in uses)
+            else:
+                out += fb
+        return out
+
+    def entry_cost(self) -> Cost:
+        if self.entry is None:
+            return Cost()
+        return self.comp_cost(self.entry)
+
+
+def analyze_text(hlo_text: str) -> Cost:
+    return HloCost(hlo_text).entry_cost()

@@ -1,0 +1,130 @@
+"""Scorer backends for the AL service.
+
+A backend = frozen feature extractor + trainable linear head (the paper's
+'fine-tune ResNet-18's last layer' protocol), exposing exactly the artifacts
+the strategy zoo needs: probs + embeddings.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import resnet as resnet_lib
+
+
+@dataclasses.dataclass
+class HeadState:
+    w: jax.Array
+    b: jax.Array
+
+
+class FeatureBackend:
+    """Shared logic: fit/eval a softmax head on frozen features."""
+
+    num_classes: int
+    feat_dim: int
+
+    def preprocess(self, raw: np.ndarray) -> np.ndarray:
+        raise NotImplementedError
+
+    def features(self, batch: np.ndarray) -> np.ndarray:
+        raise NotImplementedError
+
+    # -- head -------------------------------------------------------------
+    def init_head(self, rng=None) -> HeadState:
+        rng = rng or jax.random.PRNGKey(0)
+        w = jax.random.normal(rng, (self.feat_dim, self.num_classes),
+                              jnp.float32) * 0.01
+        return HeadState(w=w, b=jnp.zeros((self.num_classes,), jnp.float32))
+
+    def fit_head(self, feats: np.ndarray, labels: np.ndarray,
+                 steps: int = 200, lr: float = 0.5,
+                 head: Optional[HeadState] = None) -> HeadState:
+        x = jnp.asarray(feats, jnp.float32)
+        y = jnp.asarray(labels, jnp.int32)
+        head = head or self.init_head()
+
+        def loss_fn(p):
+            logits = x @ p["w"] + p["b"]
+            lp = jax.nn.log_softmax(logits)
+            nll = -jnp.mean(jnp.take_along_axis(lp, y[:, None], 1))
+            return nll + 1e-4 * jnp.sum(p["w"] ** 2)
+
+        @jax.jit
+        def step(p, _):
+            g = jax.grad(loss_fn)(p)
+            return jax.tree.map(lambda a, b: a - lr * b, p, g), None
+
+        p = {"w": head.w, "b": head.b}
+        p, _ = jax.lax.scan(step, p, None, length=steps)
+        return HeadState(w=p["w"], b=p["b"])
+
+    def probs(self, feats: np.ndarray, head: HeadState) -> np.ndarray:
+        logits = jnp.asarray(feats, jnp.float32) @ head.w + head.b
+        return np.asarray(jax.nn.softmax(logits, axis=-1))
+
+    def evaluate(self, feats: np.ndarray, labels: np.ndarray,
+                 head: HeadState) -> float:
+        p = self.probs(feats, head)
+        return float(np.mean(p.argmax(-1) == np.asarray(labels)))
+
+
+class ResNetBackend(FeatureBackend):
+    """Paper-faithful image scorer (resnet-18 or the tiny CPU variant)."""
+
+    def __init__(self, cfg: Optional[resnet_lib.ResNetConfig] = None,
+                 rng=None, num_classes: int = 10):
+        self.cfg = cfg or resnet_lib.tiny_config(num_classes)
+        self.num_classes = self.cfg.num_classes
+        self.feat_dim = self.cfg.widths[-1]
+        self.params = resnet_lib.init_resnet(
+            self.cfg, rng or jax.random.PRNGKey(42))
+        self._feat = jax.jit(
+            lambda x: resnet_lib.resnet_features(self.params, self.cfg, x))
+
+    def preprocess(self, raw: np.ndarray) -> np.ndarray:
+        x = np.asarray(raw, np.float32)
+        if x.max() > 1.5:
+            x = x / 255.0
+        return x
+
+    def features(self, batch: np.ndarray) -> np.ndarray:
+        return np.asarray(self._feat(jnp.asarray(batch)))
+
+
+class MLPBackend(FeatureBackend):
+    """Cheap random-projection feature backend for tests/property checks."""
+
+    def __init__(self, in_dim: int, feat_dim: int = 64, num_classes: int = 10,
+                 rng=None):
+        rng = rng or jax.random.PRNGKey(7)
+        k1, k2 = jax.random.split(rng)
+        self.w1 = jax.random.normal(k1, (in_dim, 128)) / np.sqrt(in_dim)
+        self.w2 = jax.random.normal(k2, (128, feat_dim)) / np.sqrt(128)
+        self.num_classes = num_classes
+        self.feat_dim = feat_dim
+        self._feat = jax.jit(
+            lambda x: jnp.tanh(jnp.tanh(x @ self.w1) @ self.w2))
+
+    def preprocess(self, raw: np.ndarray) -> np.ndarray:
+        return np.asarray(raw, np.float32).reshape(raw.shape[0], -1) \
+            if raw.ndim > 2 else np.asarray(raw, np.float32)
+
+    def features(self, batch: np.ndarray) -> np.ndarray:
+        return np.asarray(self._feat(jnp.asarray(batch, jnp.float32)))
+
+
+BACKENDS = {
+    "resnet18": lambda **kw: ResNetBackend(resnet_lib.resnet18_config(), **kw),
+    "synthetic_cnn": lambda **kw: ResNetBackend(**kw),
+}
+
+
+def make_backend(name: str, **kw) -> FeatureBackend:
+    if name not in BACKENDS:
+        raise KeyError(f"unknown backend {name!r}")
+    return BACKENDS[name](**kw)

@@ -1,0 +1,78 @@
+"""ALClient — the paper's few-LoC client API (Fig. 2):
+
+    client = ALClient(local=server)            # in-process
+    client = ALClient(url="host:port")         # msgpack TCP
+    client.push_data(data_list)
+    selected = client.query(budget=10)
+"""
+from __future__ import annotations
+
+from typing import List, Optional, Sequence
+
+import numpy as np
+
+from repro.service import transport
+from repro.service.server import ALServer
+
+
+def serve_tcp(server: ALServer, host: str = "127.0.0.1",
+              port: int = 0) -> transport.RPCServer:
+    handlers = {
+        "push_data": lambda p: {"keys": server.push_data(list(p["items"]))},
+        "query": lambda p: server.query(
+            int(p["budget"]), p.get("strategy"),
+            p.get("target_accuracy")),
+        "label": lambda p: server.label(p["keys"], p["labels"]) or {},
+        "stats": lambda p: server.stats(),
+        "train_eval": lambda p: {"accuracy": server.train_and_eval()},
+    }
+    rpc = transport.RPCServer(handlers, host, port)
+    rpc.start()
+    return rpc
+
+
+class ALClient:
+    def __init__(self, local: Optional[ALServer] = None,
+                 url: Optional[str] = None):
+        assert (local is None) != (url is None), "pass local= xor url="
+        self._local = local
+        self._rpc = None
+        if url:
+            host, port = url.rsplit(":", 1)
+            self._rpc = transport.RPCClient(host, int(port))
+
+    def push_data(self, data_list: Sequence[np.ndarray],
+                  asynchronous: bool = False) -> List[str]:
+        if self._local is not None:
+            return self._local.push_data(data_list)
+        return self._rpc.call("push_data",
+                              {"items": [np.asarray(d) for d in data_list]}
+                              )["keys"]
+
+    def query(self, budget: int, strategy: Optional[str] = None,
+              target_accuracy: Optional[float] = None) -> dict:
+        if self._local is not None:
+            return self._local.query(budget, strategy, target_accuracy)
+        return self._rpc.call("query", {"budget": budget,
+                                        "strategy": strategy,
+                                        "target_accuracy": target_accuracy})
+
+    def label(self, keys: Sequence[str], labels: Sequence[int]):
+        if self._local is not None:
+            return self._local.label(keys, labels)
+        return self._rpc.call("label", {"keys": list(keys),
+                                        "labels": [int(x) for x in labels]})
+
+    def train_eval(self) -> float:
+        if self._local is not None:
+            return self._local.train_and_eval()
+        return self._rpc.call("train_eval")["accuracy"]
+
+    def stats(self) -> dict:
+        if self._local is not None:
+            return self._local.stats()
+        return self._rpc.call("stats")
+
+    def close(self):
+        if self._rpc:
+            self._rpc.close()

@@ -1,0 +1,143 @@
+"""Configuration-as-a-service (paper Fig. 2).
+
+A minimal offline YAML-subset parser (nested maps, lists, scalars, comments)
+so the paper's ``example.yml`` schema works verbatim without a yaml
+dependency, plus the typed ``ALServiceConfig`` it loads into.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any, Dict, List, Optional, Union
+
+
+def _scalar(s: str) -> Any:
+    s = s.strip()
+    if s in ("null", "~", ""):
+        return None
+    if s in ("true", "True"):
+        return True
+    if s in ("false", "False"):
+        return False
+    if (s.startswith('"') and s.endswith('"')) or \
+       (s.startswith("'") and s.endswith("'")):
+        return s[1:-1]
+    try:
+        return int(s)
+    except ValueError:
+        pass
+    try:
+        return float(s)
+    except ValueError:
+        pass
+    return s
+
+
+def parse_yaml(text: str) -> Any:
+    """Indentation-based subset: maps, lists of scalars/maps, scalars."""
+    lines = []
+    for raw in text.splitlines():
+        line = raw.split("#", 1)[0].rstrip()
+        if line.strip():
+            lines.append(line)
+
+    def parse_block(idx: int, indent: int):
+        if idx >= len(lines):
+            return None, idx
+        first = lines[idx]
+        cur_indent = len(first) - len(first.lstrip())
+        if first.lstrip().startswith("- "):
+            items = []
+            while idx < len(lines):
+                line = lines[idx]
+                ind = len(line) - len(line.lstrip())
+                if ind != cur_indent or not line.lstrip().startswith("- "):
+                    break
+                body = line.lstrip()[2:]
+                if ":" in body:
+                    k, _, rest = body.partition(":")
+                    if rest.strip():
+                        items.append({k.strip(): _scalar(rest)})
+                        idx += 1
+                    else:
+                        sub, idx2 = parse_block(idx + 1, cur_indent + 1)
+                        items.append({k.strip(): sub})
+                        idx = idx2
+                else:
+                    items.append(_scalar(body))
+                    idx += 1
+            return items, idx
+        out: Dict[str, Any] = {}
+        while idx < len(lines):
+            line = lines[idx]
+            ind = len(line) - len(line.lstrip())
+            if ind < cur_indent:
+                break
+            if ind > cur_indent:
+                raise ValueError(f"bad indent: {line!r}")
+            if ":" not in line:
+                raise ValueError(f"expected key: {line!r}")
+            key, _, rest = line.lstrip().partition(":")
+            if rest.strip():
+                out[key.strip()] = _scalar(rest)
+                idx += 1
+            else:
+                nxt = idx + 1
+                if nxt < len(lines):
+                    nind = len(lines[nxt]) - len(lines[nxt].lstrip())
+                    if nind > cur_indent:
+                        sub, idx = parse_block(nxt, nind)
+                        out[key.strip()] = sub
+                        continue
+                out[key.strip()] = None
+                idx += 1
+        return out, idx
+
+    obj, _ = parse_block(0, 0)
+    return obj
+
+
+@dataclasses.dataclass
+class ALServiceConfig:
+    name: str = "AL_SERVICE"
+    version: str = "0.1"
+    strategy: str = "auto"              # auto -> PSHEA agent
+    model_name: str = "synthetic_cnn"   # backend scorer id
+    batch_size: int = 16
+    device: str = "CPU"
+    protocol: str = "tcp"
+    host: str = "127.0.0.1"
+    port: int = 60035
+    replicas: int = 1
+    cache_bytes: int = 1 << 30
+    cache_spill_dir: Optional[str] = None
+    target_accuracy: float = 0.95
+    budget_max: int = 10000
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, Any]) -> "ALServiceConfig":
+        al = d.get("active_learning", {}) or {}
+        strat = (al.get("strategy", {}) or {})
+        model = (al.get("model", {}) or {})
+        worker = d.get("al_worker", {}) or {}
+        return cls(
+            name=d.get("name", "AL_SERVICE"),
+            version=str(d.get("version", "0.1")),
+            strategy=strat.get("type", "auto"),
+            model_name=model.get("name", "synthetic_cnn"),
+            batch_size=int(model.get("batch_size", 16)),
+            device=str(al.get("device", "CPU")),
+            protocol=worker.get("protocol", "tcp"),
+            host=worker.get("host", "127.0.0.1"),
+            port=int(worker.get("port", 60035)),
+            replicas=int(worker.get("replicas", 1)),
+            target_accuracy=float(al.get("target_accuracy", 0.95)),
+            budget_max=int(al.get("budget_max", 10000)),
+        )
+
+    @classmethod
+    def from_yaml(cls, path_or_text: str) -> "ALServiceConfig":
+        if "\n" not in path_or_text:
+            with open(path_or_text) as f:
+                path_or_text = f.read()
+        return cls.from_dict(parse_yaml(path_or_text))

@@ -1,0 +1,217 @@
+"""ALServer — the paper's AL-as-a-service backend (Fig. 1).
+
+Data path (stage-level pipeline, Fig. 3c):
+  fetch (URI/bytes -> raw)  ->  preprocess  ->  infer (batched features via
+  DynamicBatcher)  ->  EmbeddingCache
+
+Query path:
+  strategy != "auto": run one zoo strategy over the pooled artifacts.
+  strategy == "auto": run the PSHEA agent (performance predictor + successive
+  halving) against the attached oracle, per paper Alg. 1.
+
+The server is usable in-process (ALClient(local=server)) or over the msgpack
+TCP transport in transport.py (gRPC stand-in; see DESIGN.md).
+"""
+from __future__ import annotations
+
+import threading
+import time
+from typing import Callable, Dict, List, Optional, Sequence
+
+import jax
+import numpy as np
+
+from repro.core.agent.controller import run_pshea
+from repro.core.strategies.zoo import PAPER_SEVEN, get_strategy
+from repro.service.backends import FeatureBackend, HeadState, make_backend
+from repro.service.batcher import DynamicBatcher
+from repro.service.cache import EmbeddingCache, content_key
+from repro.service.config import ALServiceConfig
+from repro.service.pipeline import Stage, StagePipeline
+
+
+class ALServer:
+    def __init__(self, config: Optional[ALServiceConfig] = None,
+                 config_path: Optional[str] = None,
+                 backend: Optional[FeatureBackend] = None,
+                 fetch_fn: Optional[Callable] = None,
+                 fetch_latency_s: float = 0.0):
+        if config is None:
+            config = (ALServiceConfig.from_yaml(config_path)
+                      if config_path else ALServiceConfig())
+        self.config = config
+        self.backend = backend or make_backend(config.model_name)
+        self.cache = EmbeddingCache(config.cache_bytes,
+                                    config.cache_spill_dir)
+        self.fetch_fn = fetch_fn or (lambda x: x)
+        self.fetch_latency_s = fetch_latency_s
+        self._keys: List[str] = []
+        self._raw: Dict[str, np.ndarray] = {}
+        self._labels: Dict[str, int] = {}
+        self._labeled_keys: List[str] = []
+        self._head: Optional[HeadState] = None
+        self._eval_set: Optional[tuple] = None
+        self._oracle: Optional[Callable[[Sequence[str]], Sequence[int]]] = None
+        self._lock = threading.Lock()
+        self.last_pipeline_stats = None
+
+    # ------------------------------------------------------------- data --
+    def push_data(self, items: Sequence[np.ndarray],
+                  pipelined: bool = True) -> List[str]:
+        """Ingest unlabeled pool items through the stage pipeline; returns
+        content keys. Cached items skip preprocessing+inference entirely."""
+        keys = [content_key(np.asarray(it)) for it in items]
+        todo = [(k, it) for k, it in zip(keys, items) if k not in self.cache]
+        with self._lock:
+            for k, it in zip(keys, items):
+                if k not in self._raw:
+                    self._raw[k] = np.asarray(it)
+                    self._keys.append(k)
+        if todo:
+            self._process(todo, pipelined=pipelined)
+        return keys
+
+    def _process(self, todo, *, pipelined: bool, chunk: int = 64):
+        bs = max(self.config.batch_size, 1)
+        batcher = DynamicBatcher(self._infer_batch, max_batch=bs)
+
+        def fetch(chunk_items):
+            if self.fetch_latency_s:
+                time.sleep(self.fetch_latency_s)
+            return [(k, self.fetch_fn(v)) for k, v in chunk_items]
+
+        def preprocess(chunk_items):
+            ks = [k for k, _ in chunk_items]
+            raw = np.stack([np.asarray(v) for _, v in chunk_items])
+            return ks, self.backend.preprocess(raw)
+
+        def infer(args):
+            ks, batch = args
+            feats = batcher.score(list(batch))
+            return list(zip(ks, feats))
+
+        stages = [Stage("fetch", fetch), Stage("preprocess", preprocess),
+                  Stage("infer", infer)]
+        pipe = StagePipeline(stages)
+        chunks = [todo[i:i + chunk] for i in range(0, len(todo), chunk)]
+        runner = pipe.run if pipelined else pipe.run_serial
+        for out in runner(chunks):
+            for k, f in out:
+                self.cache.put(k, np.asarray(f))
+        self.last_pipeline_stats = pipe.stats()
+        batcher.close()
+
+    def _infer_batch(self, stacked: np.ndarray, n_valid: int):
+        feats = self.backend.features(stacked)
+        return [feats[i] for i in range(n_valid)]
+
+    # ------------------------------------------------------- label/oracle --
+    def attach_oracle(self, oracle: Callable[[Sequence[str]], Sequence[int]],
+                      eval_x: np.ndarray, eval_y: np.ndarray):
+        """Oracle = the paper's human annotator; eval set scores rounds."""
+        self._oracle = oracle
+        ex = self.backend.preprocess(np.asarray(eval_x))
+        self._eval_set = (self.backend.features(ex), np.asarray(eval_y))
+
+    def label(self, keys: Sequence[str], labels: Sequence[int]):
+        with self._lock:
+            for k, y in zip(keys, labels):
+                if k not in self._labels:
+                    self._labels[k] = int(y)
+                    self._labeled_keys.append(k)
+
+    # --------------------------------------------------------- artifacts --
+    def _pool_artifacts(self, keys: Sequence[str]):
+        feats = np.stack([self.cache.get(k) for k in keys])
+        head = self._head or self.backend.init_head()
+        probs = self.backend.probs(feats, head)
+        return feats, probs
+
+    def train_and_eval(self) -> float:
+        keys = list(self._labeled_keys)
+        if not keys:
+            return 0.0
+        feats = np.stack([self.cache.get(k) for k in keys])
+        labels = np.asarray([self._labels[k] for k in keys])
+        self._head = self.backend.fit_head(feats, labels, head=None)
+        if self._eval_set is None:  # no eval set: train-set accuracy proxy
+            return self.backend.evaluate(feats, labels, self._head)
+        return self.backend.evaluate(*self._eval_set, self._head)
+
+    # ------------------------------------------------------------- query --
+    def query(self, budget: int, strategy: Optional[str] = None,
+              target_accuracy: Optional[float] = None,
+              rng_seed: int = 0) -> dict:
+        strategy = strategy or self.config.strategy
+        unlabeled = [k for k in self._keys if k not in self._labels]
+        if strategy != "auto":
+            return self._query_one(unlabeled, budget, strategy, rng_seed)
+        return self._query_auto(budget, target_accuracy
+                                or self.config.target_accuracy)
+
+    def _query_one(self, unlabeled, budget, strategy, rng_seed) -> dict:
+        budget = min(budget, len(unlabeled))
+        strat = get_strategy(strategy)
+        feats, probs = self._pool_artifacts(unlabeled)
+        labeled_emb = None
+        if self._labeled_keys:
+            labeled_emb = np.stack(
+                [self.cache.get(k) for k in self._labeled_keys])
+        import jax.numpy as jnp
+        idx = strat.select(
+            jax.random.PRNGKey(rng_seed), budget,
+            probs=jnp.asarray(probs) if "probs" in strat.needs else None,
+            embeddings=jnp.asarray(feats) if "embeddings" in strat.needs else None,
+            labeled_embeddings=(jnp.asarray(labeled_emb)
+                                if labeled_emb is not None else None))
+        idx = np.asarray(idx)
+        return {"keys": [unlabeled[i] for i in idx],
+                "indices": idx.tolist(), "strategy": strategy,
+                "cache": self.cache.stats()}
+
+    def _query_auto(self, budget: int, target_accuracy: float) -> dict:
+        """PSHEA (paper Alg. 1) — needs an attached oracle."""
+        assert self._oracle is not None, "PSHEA needs attach_oracle(...)"
+        server = self
+
+        class Task:
+            def __init__(self):
+                self.labeled: Dict[str, List[str]] = {s: [] for s in PAPER_SEVEN}
+                self.rng = 0
+
+            def initial_accuracy(self):
+                return server.train_and_eval() if server._labeled_keys else 0.1
+
+            def select_and_label(self, strategy, round_budget):
+                self.rng += 1
+                pool = [k for k in server._keys
+                        if k not in self.labeled[strategy]]
+                res = server._query_one(pool, round_budget, strategy, self.rng)
+                keys = res["keys"]
+                self.labeled[strategy].extend(keys)
+                return len(keys)
+
+            def train_and_eval(self, strategy):
+                keys = self.labeled[strategy]
+                labels = server._oracle(keys)
+                feats = np.stack([server.cache.get(k) for k in keys])
+                head = server.backend.fit_head(feats, np.asarray(labels))
+                return server.backend.evaluate(*server._eval_set, head)
+
+        n_strats = len(PAPER_SEVEN)
+        round_budget = max(budget // (2 * n_strats), 1)
+        result = run_pshea(Task(), PAPER_SEVEN,
+                           target_accuracy=target_accuracy,
+                           budget_max=budget, round_budget=round_budget)
+        return {"strategy": result.best_strategy,
+                "accuracy": result.best_accuracy,
+                "stop_reason": result.stop_reason,
+                "eliminated": result.eliminated,
+                "history": result.history,
+                "budget_spent": result.budget_spent}
+
+    # -------------------------------------------------------------- misc --
+    def stats(self) -> dict:
+        return {"pool": len(self._keys), "labeled": len(self._labeled_keys),
+                "cache": self.cache.stats(),
+                "pipeline": self.last_pipeline_stats}

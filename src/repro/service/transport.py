@@ -1,0 +1,125 @@
+"""msgpack-over-TCP transport (offline stand-in for the paper's gRPC).
+
+Framing: 4-byte big-endian length + msgpack blob. numpy arrays are encoded
+as {"__nd__": True, "d": dtype, "s": shape, "b": bytes}.
+"""
+from __future__ import annotations
+
+import socket
+import struct
+import threading
+from typing import Any, Callable, Dict
+
+import msgpack
+import numpy as np
+
+
+def _default(obj):
+    if isinstance(obj, np.ndarray):
+        return {"__nd__": True, "d": str(obj.dtype), "s": list(obj.shape),
+                "b": obj.tobytes()}
+    if isinstance(obj, (np.integer,)):
+        return int(obj)
+    if isinstance(obj, (np.floating,)):
+        return float(obj)
+    raise TypeError(f"unserializable: {type(obj)}")
+
+
+def _object_hook(obj):
+    if obj.get("__nd__"):
+        return np.frombuffer(obj["b"], dtype=obj["d"]).reshape(obj["s"])
+    return obj
+
+
+def send_msg(sock: socket.socket, obj: Any) -> None:
+    blob = msgpack.packb(obj, default=_default, use_bin_type=True)
+    sock.sendall(struct.pack(">I", len(blob)) + blob)
+
+
+def recv_msg(sock: socket.socket) -> Any:
+    hdr = _recv_exact(sock, 4)
+    if hdr is None:
+        return None
+    (n,) = struct.unpack(">I", hdr)
+    blob = _recv_exact(sock, n)
+    if blob is None:
+        return None
+    return msgpack.unpackb(blob, object_hook=_object_hook, raw=False)
+
+
+def _recv_exact(sock, n):
+    buf = b""
+    while len(buf) < n:
+        chunk = sock.recv(n - len(buf))
+        if not chunk:
+            return None
+        buf += chunk
+    return buf
+
+
+class RPCServer:
+    """Serve a dict of op -> handler(payload) over TCP."""
+
+    def __init__(self, handlers: Dict[str, Callable], host: str, port: int):
+        self.handlers = handlers
+        self.host, self.port = host, port
+        self._sock: socket.socket = None
+        self._stop = threading.Event()
+        self._thread: threading.Thread = None
+
+    def start(self) -> int:
+        self._sock = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+        self._sock.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
+        self._sock.bind((self.host, self.port))
+        self.port = self._sock.getsockname()[1]
+        self._sock.listen(16)
+        self._sock.settimeout(0.2)
+        self._thread = threading.Thread(target=self._loop, daemon=True)
+        self._thread.start()
+        return self.port
+
+    def _loop(self):
+        while not self._stop.is_set():
+            try:
+                conn, _ = self._sock.accept()
+            except socket.timeout:
+                continue
+            threading.Thread(target=self._handle, args=(conn,),
+                             daemon=True).start()
+        self._sock.close()
+
+    def _handle(self, conn):
+        with conn:
+            while True:
+                msg = recv_msg(conn)
+                if msg is None:
+                    return
+                op = msg.get("op")
+                try:
+                    fn = self.handlers[op]
+                    result = fn(msg.get("payload") or {})
+                    send_msg(conn, {"ok": True, "result": result})
+                except Exception as e:
+                    send_msg(conn, {"ok": False, "error": repr(e)})
+
+    def stop(self):
+        self._stop.set()
+        if self._thread:
+            self._thread.join(timeout=2)
+
+
+class RPCClient:
+    def __init__(self, host: str, port: int, timeout: float = 60.0):
+        self.sock = socket.create_connection((host, port), timeout=timeout)
+
+    def call(self, op: str, payload: Any = None):
+        send_msg(self.sock, {"op": op, "payload": payload})
+        resp = recv_msg(self.sock)
+        if resp is None:
+            raise ConnectionError("server closed connection")
+        if not resp["ok"]:
+            raise RuntimeError(f"server error: {resp['error']}")
+        return resp["result"]
+
+    def close(self):
+        self.sock.close()

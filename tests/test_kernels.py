@@ -1,0 +1,121 @@
+"""Per-kernel validation: shape/dtype sweeps, interpret-mode Pallas vs the
+pure-jnp oracle (deliverable c)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+rng = np.random.default_rng(0)
+
+
+def _arr(shape, dtype, scale=1.0):
+    x = rng.normal(size=shape) * scale
+    return jnp.asarray(x, dtype)
+
+
+# ---------------------------------------------------------- uncertainty ----
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("shape", [(16, 128), (5, 300), (64, 1024), (1, 37)])
+def test_uncertainty_kernel(shape, dtype):
+    from repro.kernels.uncertainty import ref
+    from repro.kernels.uncertainty.kernel import uncertainty_stats_pallas
+
+    lg = _arr(shape, dtype, scale=3.0)
+    out = uncertainty_stats_pallas(lg, row_block=8, v_block=128,
+                                   interpret=True)
+    rr = ref.uncertainty_stats_ref(lg)
+    tol = 3e-5 if dtype == jnp.float32 else 2e-2
+    for i, k in enumerate(("lc", "mc", "rc", "es")):
+        np.testing.assert_allclose(out[i], rr[k], rtol=tol, atol=tol,
+                                   err_msg=f"{k} {shape} {dtype}")
+
+
+def test_uncertainty_extreme_logits():
+    """Online stats must survive large logit magnitudes (no overflow)."""
+    from repro.kernels.uncertainty import ref
+    from repro.kernels.uncertainty.kernel import uncertainty_stats_pallas
+
+    lg = _arr((8, 512), jnp.float32, scale=80.0)
+    out = uncertainty_stats_pallas(lg, interpret=True)
+    rr = ref.uncertainty_stats_ref(lg)
+    for i, k in enumerate(("lc", "mc", "rc", "es")):
+        np.testing.assert_allclose(out[i], rr[k], rtol=1e-4, atol=1e-4)
+
+
+def test_uncertainty_ops_dispatch():
+    from repro.kernels.uncertainty import ops
+
+    lg = _arr((32, 256), jnp.float32, scale=2.0)
+    for kind in ("lc", "mc", "rc", "es"):
+        a = ops.uncertainty_scores(lg, kind, impl="ref")
+        b = ops.uncertainty_scores(lg, kind, impl="interpret")
+        np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-4)
+
+
+# -------------------------------------------------------------- pairwise ----
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("nmd", [(64, 32, 16), (100, 70, 64), (33, 257, 128)])
+def test_pairwise_kernel(nmd, dtype):
+    from repro.kernels.pairwise import ref
+    from repro.kernels.pairwise.kernel import pairwise_min_argmin_pallas
+
+    N, M, d = nmd
+    x = _arr((N, d), dtype)
+    c = _arr((M, d), dtype)
+    mind, argm = pairwise_min_argmin_pallas(x, c, n_block=16, m_block=64,
+                                            interpret=True)
+    tol = 1e-4 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(mind, ref.pairwise_min_dist_ref(x, c),
+                               rtol=tol, atol=tol)
+    if dtype == jnp.float32:
+        np.testing.assert_array_equal(np.asarray(argm),
+                                      np.asarray(ref.pairwise_argmin_ref(x, c)))
+
+
+# -------------------------------------------------------- flash attention ----
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "cfg", [
+        dict(B=2, Sq=64, Skv=64, H=4, KH=2, D=32, causal=True, win=None),
+        dict(B=1, Sq=48, Skv=80, H=4, KH=4, D=16, causal=True, win=16),
+        dict(B=2, Sq=33, Skv=100, H=8, KH=2, D=64, causal=False, win=None),
+        dict(B=1, Sq=128, Skv=128, H=8, KH=1, D=64, causal=True, win=None),
+    ])
+def test_flash_attention_kernel(cfg, dtype):
+    from repro.kernels.flash_attention.kernel import flash_attention_pallas
+    from repro.kernels.flash_attention.ref import flash_attention_ref
+
+    q = _arr((cfg["B"], cfg["Sq"], cfg["H"], cfg["D"]), dtype)
+    k = _arr((cfg["B"], cfg["Skv"], cfg["KH"], cfg["D"]), dtype)
+    v = _arr((cfg["B"], cfg["Skv"], cfg["KH"], cfg["D"]), dtype)
+    out = flash_attention_pallas(q, k, v, causal=cfg["causal"],
+                                 window=cfg["win"], q_block=16, kv_block=32,
+                                 interpret=True)
+    rf = flash_attention_ref(q, k, v, causal=cfg["causal"], window=cfg["win"])
+    tol = 2e-4 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(rf, np.float32), rtol=tol, atol=tol)
+
+
+# -------------------------------------------------------- decode attention ----
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "cfg", [
+        dict(B=2, H=4, KH=2, D=32, S=128, cur=77, win=None),
+        dict(B=1, H=8, KH=1, D=64, S=96, cur=96, win=None),
+        dict(B=2, H=4, KH=4, D=16, S=64, cur=13, win=8),
+        dict(B=3, H=16, KH=2, D=64, S=200, cur=1, win=None),
+    ])
+def test_decode_attention_kernel(cfg, dtype):
+    from repro.kernels.decode_attention.kernel import decode_attention_pallas
+    from repro.kernels.decode_attention.ref import decode_attention_ref
+
+    q = _arr((cfg["B"], 1, cfg["H"], cfg["D"]), dtype)
+    k = _arr((cfg["B"], cfg["S"], cfg["KH"], cfg["D"]), dtype)
+    v = _arr((cfg["B"], cfg["S"], cfg["KH"], cfg["D"]), dtype)
+    out = decode_attention_pallas(q, k, v, cfg["cur"], window=cfg["win"],
+                                  kv_block=32, interpret=True)
+    rf = decode_attention_ref(q, k, v, cfg["cur"], window=cfg["win"])
+    tol = 2e-4 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(rf, np.float32), rtol=tol, atol=tol)

@@ -1,0 +1,187 @@
+"""Model-layer equivalences: chunked==naive attention, decode==prefill
+consistency, RWKV chunked==sequential, RG-LRU scan==stepwise, MLA absorbed
+decode == expanded attention."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+rng = np.random.default_rng(3)
+
+
+def _arr(shape, dtype=jnp.float32, scale=1.0):
+    return jnp.asarray(rng.normal(size=shape) * scale, dtype)
+
+
+# ------------------------------------------------------------- attention ----
+@pytest.mark.parametrize("causal,window", [(True, None), (True, 24),
+                                           (False, None)])
+def test_chunked_vs_naive_attention(causal, window):
+    from repro.models.layers.attention import chunked_attention, naive_attention
+
+    q = _arr((2, 70, 4, 16))
+    k = _arr((2, 70, 2, 16))
+    v = _arr((2, 70, 2, 16))
+    a = chunked_attention(q, k, v, causal=causal, window=window,
+                          q_chunk=16, kv_chunk=32)
+    b = naive_attention(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(a, b, rtol=2e-5, atol=2e-5)
+
+
+def test_chunked_attention_kv_valid():
+    from repro.models.layers.attention import chunked_attention, naive_attention
+    q = _arr((1, 16, 2, 8))
+    k = _arr((1, 40, 2, 8))
+    v = _arr((1, 40, 2, 8))
+    a = chunked_attention(q, k, v, causal=False, kv_valid=25, q_chunk=8,
+                          kv_chunk=16)
+    b = naive_attention(q, k, v, causal=False, kv_valid=25)
+    np.testing.assert_allclose(a, b, rtol=2e-5, atol=2e-5)
+
+
+# ----------------------------------------------------------------- rwkv ----
+def test_rwkv_chunked_vs_sequential():
+    from repro.models.layers.rwkv import wkv_chunked, wkv_sequential
+
+    B, S, H, D = 2, 50, 3, 8
+    r = _arr((B, S, H, D))
+    k = _arr((B, S, H, D))
+    v = _arr((B, S, H, D))
+    log_w = -jnp.exp(_arr((B, S, H, D), scale=0.5))     # realistic decays
+    bonus = _arr((H, D), scale=0.2)
+    S0 = _arr((B, H, D, D), scale=0.3)
+    o1, st1 = wkv_sequential(r, k, v, log_w, bonus, S0)
+    o2, st2 = wkv_chunked(r, k, v, log_w, bonus, S0, chunk=16)
+    np.testing.assert_allclose(o1, o2, rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(st1, st2, rtol=2e-4, atol=2e-4)
+
+
+def test_rwkv_strong_decay_stability():
+    """Strong data-dependent decay must not overflow the chunked path."""
+    from repro.models.layers.rwkv import wkv_chunked, wkv_sequential
+
+    B, S, H, D = 1, 64, 2, 8
+    r = _arr((B, S, H, D))
+    k = _arr((B, S, H, D))
+    v = _arr((B, S, H, D))
+    log_w = -jnp.exp(_arr((B, S, H, D), scale=1.0) + 2.0)  # decay ~ e^2..e^4
+    bonus = _arr((H, D), scale=0.2)
+    S0 = jnp.zeros((B, H, D, D))
+    o1, _ = wkv_sequential(r, k, v, log_w, bonus, S0)
+    o2, _ = wkv_chunked(r, k, v, log_w, bonus, S0, chunk=16)
+    assert np.all(np.isfinite(np.asarray(o2)))
+    np.testing.assert_allclose(o1, o2, rtol=2e-4, atol=2e-4)
+
+
+# ---------------------------------------------------------------- rg-lru ----
+def test_rglru_scan_vs_stepwise():
+    from repro.models.layers.rglru import rglru_scan
+
+    B, S, W = 2, 33, 16
+    log_a = -jnp.exp(_arr((B, S, W), scale=0.5))
+    gated = _arr((B, S, W))
+    h0 = _arr((B, W))
+    h_par = rglru_scan(log_a, gated, h0)
+    # sequential reference
+    a = np.exp(np.asarray(log_a, np.float64))
+    b = np.sqrt(np.maximum(1 - a * a, 0)) * np.asarray(gated, np.float64)
+    h = np.asarray(h0, np.float64)
+    for t in range(S):
+        h = a[:, t] * h + b[:, t]
+    np.testing.assert_allclose(h_par[:, -1], h, rtol=1e-4, atol=1e-4)
+
+
+# --------------------------------------------- decode == full-forward parity --
+@pytest.mark.parametrize("arch", ["qwen3-8b", "deepseek-v3-671b", "rwkv6-3b",
+                                  "recurrentgemma-2b", "whisper-medium"])
+def test_decode_matches_full_forward(arch):
+    """prefill(S) + decode(token_S) must equal last_logits over S+1 tokens.
+
+    This pins the whole cache machinery (ring buffers, MLA latents, RWKV /
+    RG-LRU states) against the stateless path."""
+    from repro.common.param import init_params
+    from repro.configs import get_smoke_config
+    from repro.models.transformer import Model
+
+    cfg = get_smoke_config(arch)
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    B, S = 2, 24
+    toks = jnp.asarray(rng.integers(0, cfg.vocab, (B, S + 1)), jnp.int32)
+    batch_full = {"tokens": toks}
+    batch_pre = {"tokens": toks[:, :S]}
+    if cfg.enc_dec:
+        frames = _arr((B, cfg.n_enc_frames, cfg.d_model), jnp.bfloat16)
+        batch_full["frames"] = frames
+        batch_pre["frames"] = frames
+    if cfg.n_patches:
+        pe = _arr((B, cfg.n_patches, cfg.d_model), jnp.bfloat16)
+        batch_full["patch_embeds"] = pe
+        batch_pre["patch_embeds"] = pe
+
+    full = np.asarray(jax.jit(model.last_logits)(params, batch_full))
+    cache = init_params(model.cache_decls(B, S + 4), jax.random.PRNGKey(1))
+    cache, _ = jax.jit(model.prefill)(params, batch_pre, cache)
+    dec, _ = jax.jit(model.decode_step)(params, cache, toks[:, S:S + 1])
+    dec = np.asarray(dec)
+    # bf16 params + different reduction orders: compare argmax + loose values
+    assert np.mean(np.argmax(full, -1) == np.argmax(dec, -1)) >= 0.99
+    np.testing.assert_allclose(dec, full, rtol=0.08, atol=0.08)
+
+
+# ---------------------------------------------------------------- moe ----
+def test_moe_capacity_and_combine():
+    from repro.configs.base import MoEConfig
+    from repro.models.layers.moe import capacity, moe_apply, moe_decls
+    from repro.common.param import init_params
+
+    mo = MoEConfig(n_routed=8, top_k=2, d_ff_expert=16, n_shared=1,
+                   group_size=32, capacity_factor=1.5)
+    d = 24
+    params = init_params(moe_decls(d, mo), jax.random.PRNGKey(0))
+    params = jax.tree.map(lambda x: x.astype(jnp.float32), params)
+    x = _arr((2, 32, d))
+    out, aux = moe_apply(params, x, mo)
+    assert out.shape == x.shape
+    assert np.all(np.isfinite(np.asarray(out)))
+    assert float(aux) >= 0
+    assert capacity(mo, 32) == max(int(np.ceil(32 * 2 / 8 * 1.5)), 2)
+
+
+def test_moe_dispatch_respects_capacity():
+    from repro.configs.base import MoEConfig
+    from repro.models.layers.moe import _dispatch_combine
+
+    mo = MoEConfig(n_routed=4, top_k=2, d_ff_expert=8, group_size=16)
+    probs = jax.nn.softmax(_arr((2, 16, 4), scale=2.0), axis=-1)
+    C = 5
+    dispatch, combine, topi, topv = _dispatch_combine(probs, mo, C)
+    d = np.asarray(dispatch)
+    # each (group, expert, slot) holds at most one token
+    assert d.sum(axis=1).max() <= 1
+    # each token occupies at most top_k slots
+    assert d.sum(axis=(2, 3)).max() <= mo.top_k
+    # combine weights only where dispatched
+    assert np.all((np.asarray(combine) > 0) <= d.astype(bool))
+
+
+# ---------------------------------------------------------------- mla ----
+def test_mla_decode_matches_prefill_expansion():
+    from repro.common.param import init_params
+    from repro.configs import get_smoke_config
+    from repro.models.layers import mla as mla_lib
+
+    cfg = get_smoke_config("deepseek-v3-671b")
+    params = init_params(mla_lib.mla_decls(cfg), jax.random.PRNGKey(0))
+    params = jax.tree.map(lambda x: x.astype(jnp.float32), params)
+    B, S = 2, 12
+    x = _arr((B, S, cfg.d_model))
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    out_full, (ckv, kr) = mla_lib.mla_prefill(params, x, cfg, positions,
+                                              impl="naive")
+    # decode the last token against the compressed cache
+    out_dec = mla_lib.mla_decode(
+        params, x[:, S - 1:S], cfg, ckv, kr, S,
+        jnp.full((B, 1), S - 1))
+    np.testing.assert_allclose(out_dec[:, 0], out_full[:, -1],
+                               rtol=2e-4, atol=2e-4)

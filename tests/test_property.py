@@ -1,0 +1,188 @@
+"""Hypothesis property tests on system invariants (deliverable c)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.optim.compression import topk_sparsify
+from repro.service.batcher import bucket_size
+from repro.service.cache import EmbeddingCache
+from repro.service.config import parse_yaml
+
+SET = settings(max_examples=25, deadline=None)
+
+
+# ---------------------------------------------------- online softmax inv ----
+@SET
+@given(
+    sq=st.integers(1, 40), skv=st.integers(1, 60),
+    h=st.sampled_from([1, 2, 4]), g=st.sampled_from([1, 2]),
+    qc=st.integers(1, 16), kc=st.integers(1, 16),
+    causal=st.booleans(), seed=st.integers(0, 100),
+)
+def test_chunked_attention_equals_naive(sq, skv, h, g, qc, kc, causal, seed):
+    from repro.models.layers.attention import (chunked_attention,
+                                               naive_attention)
+    rng = np.random.default_rng(seed)
+    D = 8
+    q = jnp.asarray(rng.normal(size=(1, sq, h * g, D)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(1, skv, h, D)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(1, skv, h, D)), jnp.float32)
+    a = chunked_attention(q, k, v, causal=causal, q_chunk=qc, kv_chunk=kc)
+    b = naive_attention(q, k, v, causal=causal)
+    # fully-masked causal rows (none exist here since Skv>=1 and q_pos>=0)
+    np.testing.assert_allclose(a, b, rtol=3e-5, atol=3e-5)
+
+
+# ------------------------------------------------------ uncertainty inv ----
+@SET
+@given(n=st.integers(1, 32), v=st.integers(2, 300), seed=st.integers(0, 50),
+       scale=st.floats(0.1, 30.0))
+def test_uncertainty_kernel_matches_ref(n, v, seed, scale):
+    from repro.kernels.uncertainty import ref
+    from repro.kernels.uncertainty.kernel import uncertainty_stats_pallas
+    rng = np.random.default_rng(seed)
+    lg = jnp.asarray(rng.normal(size=(n, v)) * scale, jnp.float32)
+    out = uncertainty_stats_pallas(lg, row_block=8, v_block=64,
+                                   interpret=True)
+    rr = ref.uncertainty_stats_ref(lg)
+    for i, k in enumerate(("lc", "mc", "rc", "es")):
+        np.testing.assert_allclose(out[i], rr[k], rtol=2e-4, atol=2e-4)
+
+
+@SET
+@given(n=st.integers(1, 64), v=st.integers(2, 64), seed=st.integers(0, 50))
+def test_uncertainty_score_ranges(n, v, seed):
+    from repro.kernels.uncertainty import ref
+    rng = np.random.default_rng(seed)
+    lg = jnp.asarray(rng.normal(size=(n, v)) * 5, jnp.float32)
+    s = ref.uncertainty_stats_ref(lg)
+    assert np.all((np.asarray(s["lc"]) >= -1e-6)
+                  & (np.asarray(s["lc"]) <= 1 - 1 / v + 1e-5))
+    assert np.all((np.asarray(s["rc"]) >= -1e-6)
+                  & (np.asarray(s["rc"]) <= 1 + 1e-5))
+    assert np.all((np.asarray(s["es"]) >= -1e-5)
+                  & (np.asarray(s["es"]) <= np.log(v) + 1e-4))
+    assert np.all(np.asarray(s["mc"]) <= 1e-6)
+
+
+# ----------------------------------------------------------- selection ----
+@SET
+@given(n=st.integers(10, 200), b=st.integers(1, 10), seed=st.integers(0, 20),
+       name=st.sampled_from(["lc", "mc", "es", "rc", "random", "kcg",
+                             "coreset", "badge"]))
+def test_selection_budget_unique_inrange(n, b, seed, name):
+    from repro.core.strategies.zoo import get_strategy
+    rng = np.random.default_rng(seed)
+    b = min(b, n)
+    logits = rng.normal(size=(n, 8)) * 2
+    probs = jnp.asarray(np.exp(logits) / np.exp(logits).sum(-1, keepdims=True))
+    emb = jnp.asarray(rng.normal(size=(n, 8)), jnp.float32)
+    idx = np.asarray(get_strategy(name).select(
+        jax.random.PRNGKey(seed), b, probs=probs, embeddings=emb,
+        labeled_embeddings=None))
+    assert idx.shape == (b,)
+    assert len(set(idx.tolist())) == b
+    assert idx.min() >= 0 and idx.max() < n
+
+
+# -------------------------------------------------------------- cache ------
+@SET
+@given(ops=st.lists(st.tuples(st.integers(0, 30), st.integers(1, 64)),
+                    min_size=1, max_size=60),
+       max_items=st.integers(1, 12))
+def test_cache_never_exceeds_budget_and_serves_hits(ops, max_items):
+    item_bytes = 32 * 4
+    c = EmbeddingCache(max_bytes=max_items * item_bytes)
+    live = {}
+    for key_i, val in ops:
+        k = f"k{key_i}"
+        v = np.full(32, val, np.float32)
+        c.put(k, v)
+        live[k] = v
+        assert c.stats()["bytes"] <= max_items * item_bytes
+        got = c.get(k)                     # just-put must be present
+        np.testing.assert_array_equal(got, v)
+    for k, v in live.items():              # any hit must be correct
+        got = c.get(k)
+        if got is not None:
+            np.testing.assert_array_equal(got, v)
+
+
+# ------------------------------------------------------------ compression --
+@SET
+@given(n=st.integers(8, 512), frac=st.floats(0.01, 1.0),
+       seed=st.integers(0, 50))
+def test_topk_identity_and_sparsity(n, frac, seed):
+    rng = np.random.default_rng(seed)
+    g = jnp.asarray(rng.normal(size=(n,)), jnp.float32)
+    sparse, err = topk_sparsify(g, frac)
+    np.testing.assert_allclose(np.asarray(sparse + err), np.asarray(g),
+                               rtol=1e-6, atol=1e-6)
+    k = max(int(n * frac), 1)
+    nz = np.count_nonzero(np.asarray(sparse))
+    assert nz >= min(k, n) * 0.5           # ties may add a few
+    # kept entries dominate dropped ones
+    s = np.asarray(sparse)
+    e = np.asarray(err)
+    if nz < n:
+        assert np.abs(s[s != 0]).min() >= np.abs(e[e != 0]).max() - 1e-6
+
+
+# ------------------------------------------------------------- batcher -----
+@SET
+@given(n=st.integers(1, 300), mx=st.sampled_from([1, 2, 8, 64, 128]))
+def test_bucket_size_props(n, mx):
+    b = bucket_size(n, mx)
+    assert b <= mx
+    assert b & (b - 1) == 0 or b == mx     # pow2 or capped
+    assert b >= min(n, mx) or b == mx
+
+
+# ---------------------------------------------------------------- yaml -----
+@SET
+@given(d=st.dictionaries(
+    st.text(alphabet="abcdefgh", min_size=1, max_size=6),
+    st.one_of(st.integers(-100, 100), st.booleans(),
+              st.text(alphabet="xyz", min_size=1, max_size=5),
+              st.dictionaries(st.text(alphabet="mnop", min_size=1,
+                                      max_size=4),
+                              st.integers(0, 9), max_size=3)),
+    min_size=1, max_size=6))
+def test_yaml_parser_roundtrip(d):
+    def emit(obj, indent=0):
+        lines = []
+        for k, v in obj.items():
+            if isinstance(v, dict):
+                lines.append("  " * indent + f"{k}:")
+                if v:
+                    lines.extend(emit(v, indent + 1))
+                else:
+                    lines[-1] = "  " * indent + f"{k}: {{}}"
+            elif isinstance(v, bool):
+                lines.append("  " * indent + f"{k}: {'true' if v else 'false'}")
+            elif isinstance(v, str):
+                lines.append("  " * indent + f'{k}: "{v}"')
+            else:
+                lines.append("  " * indent + f"{k}: {v}")
+        return lines
+
+    d = {k: v for k, v in d.items() if not (isinstance(v, dict) and not v)}
+    if not d:
+        return
+    text = "\n".join(emit(d))
+    assert parse_yaml(text) == d
+
+
+# ---------------------------------------------------------- neg-exp fit ----
+@SET
+@given(a=st.floats(0.5, 1.0), b=st.floats(0.1, 0.8), c=st.floats(0.1, 2.0),
+       n=st.integers(3, 10))
+def test_negexp_fit_recovers_clean_curves(a, b, c, n):
+    from repro.core.agent.predictor import fit_neg_exp
+    r = np.arange(n, dtype=np.float64)
+    y = a - b * np.exp(-c * r)
+    fit = fit_neg_exp(r, y)
+    pred = fit.predict(np.array([n, n + 1]))
+    truth = a - b * np.exp(-c * np.array([n, n + 1]))
+    np.testing.assert_allclose(pred, truth, atol=0.03)

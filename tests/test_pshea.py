@@ -1,0 +1,101 @@
+"""PSHEA agent: predictor fit quality + Algorithm-1 controller semantics."""
+import numpy as np
+import pytest
+
+from repro.core.agent.controller import run_pshea
+from repro.core.agent.predictor import fit_neg_exp, predict_next
+
+
+def test_predictor_recovers_neg_exp():
+    r = np.arange(8)
+    acc = 0.9 - 0.5 * np.exp(-0.6 * r)
+    fit = fit_neg_exp(r[:5], acc[:5])
+    pred = fit.predict(r[5:])
+    np.testing.assert_allclose(pred, acc[5:], atol=0.02)
+
+
+def test_predictor_noisy_monotone():
+    rng = np.random.default_rng(0)
+    r = np.arange(6)
+    acc = 0.8 - 0.4 * np.exp(-0.8 * r) + rng.normal(0, 0.01, 6)
+    nxt = predict_next(r, acc, 6)
+    assert 0.5 < nxt <= 1.0
+    assert nxt >= acc[0]
+
+
+def test_predictor_short_history_fallback():
+    assert predict_next([0, 1], [0.3, 0.5], 2) == 0.5
+
+
+class FakeTask:
+    """Deterministic curves per strategy; counts labels spent."""
+
+    def __init__(self, curves, round_budget_cost=10):
+        self.curves = curves
+        self.rounds = {s: 0 for s in curves}
+        self.spent = 0
+
+    def initial_accuracy(self):
+        return 0.1
+
+    def select_and_label(self, strategy, round_budget):
+        self.spent += round_budget
+        return round_budget
+
+    def train_and_eval(self, strategy):
+        self.rounds[strategy] += 1
+        r = self.rounds[strategy]
+        a, b, c = self.curves[strategy]
+        return a - b * np.exp(-c * r)
+
+
+CURVES = {
+    "good": (0.95, 0.85, 0.9),     # fast, high asymptote
+    "mid": (0.80, 0.70, 0.6),
+    "bad": (0.55, 0.45, 0.3),      # slow, low asymptote
+}
+
+
+def test_pshea_eliminates_worst_first():
+    task = FakeTask(CURVES)
+    res = run_pshea(task, list(CURVES), target_accuracy=2.0,
+                    budget_max=10_000, round_budget=10, max_rounds=6,
+                    converge_patience=100)
+    assert res.eliminated[0] == "bad"
+    assert res.best_strategy == "good"
+
+
+def test_pshea_stops_on_target():
+    task = FakeTask(CURVES)
+    res = run_pshea(task, list(CURVES), target_accuracy=0.5,
+                    budget_max=10_000, round_budget=10)
+    assert res.stop_reason == "target_accuracy"
+
+
+def test_pshea_stops_on_budget():
+    task = FakeTask(CURVES)
+    res = run_pshea(task, list(CURVES), target_accuracy=2.0,
+                    budget_max=45, round_budget=10, converge_patience=100)
+    assert res.stop_reason == "budget_exhausted"
+    assert res.budget_spent >= 45
+
+
+def test_pshea_converges_on_plateau():
+    flat = {"s1": (0.5, 0.4, 5.0), "s2": (0.49, 0.4, 5.0)}
+    task = FakeTask(flat)
+    res = run_pshea(task, list(flat), target_accuracy=2.0,
+                    budget_max=10_000, round_budget=10,
+                    converge_eps=1e-3, converge_patience=2, max_rounds=30)
+    assert res.stop_reason == "converged"
+    assert res.rounds < 30
+
+
+def test_pshea_saves_budget_vs_bruteforce():
+    """Successive halving must spend less than running all strategies for
+    all rounds (the paper's cost-saving claim)."""
+    task = FakeTask(CURVES)
+    res = run_pshea(task, list(CURVES), target_accuracy=2.0,
+                    budget_max=10_000, round_budget=10, max_rounds=6,
+                    converge_patience=100)
+    brute = len(CURVES) * res.rounds * 10
+    assert res.budget_spent < brute

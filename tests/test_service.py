@@ -1,0 +1,206 @@
+"""Service layer: pipeline overlap, cache, batcher, config, server, TCP."""
+import time
+
+import numpy as np
+import pytest
+
+from repro.data.synthetic import image_pool
+from repro.service.batcher import DynamicBatcher, bucket_size
+from repro.service.cache import EmbeddingCache, content_key
+from repro.service.client import ALClient, serve_tcp
+from repro.service.config import ALServiceConfig, parse_yaml
+from repro.service.pipeline import Stage, StagePipeline
+from repro.service.server import ALServer
+
+
+# --------------------------------------------------------------- pipeline --
+def test_pipeline_overlap_beats_serial():
+    """3 stages x 10 items x 10ms: serial ~300ms, pipelined ~>=120ms."""
+    def mk():
+        return [Stage(n, lambda x, n=n: (time.sleep(0.01), x)[1])
+                for n in ("a", "b", "c")]
+
+    items = list(range(10))
+    p1 = StagePipeline(mk())
+    t0 = time.perf_counter()
+    out1 = p1.run_serial(items)
+    t_serial = time.perf_counter() - t0
+    p2 = StagePipeline(mk())
+    t0 = time.perf_counter()
+    out2 = p2.run(items)
+    t_pipe = time.perf_counter() - t0
+    assert out1 == items and out2 == items
+    assert t_pipe < t_serial * 0.75, (t_pipe, t_serial)
+
+
+def test_pipeline_preserves_order_and_stats():
+    sq = Stage("sq", lambda x: x * x)
+    p = StagePipeline([sq])
+    assert p.run(list(range(20))) == [x * x for x in range(20)]
+    assert p.stats()[0]["items"] == 20
+
+
+def test_pipeline_propagates_errors():
+    def boom(x):
+        raise ValueError("boom")
+    p = StagePipeline([Stage("b", boom)])
+    with pytest.raises(ValueError):
+        p.run([1])
+
+
+# ------------------------------------------------------------------ cache --
+def test_cache_hit_miss_lru():
+    c = EmbeddingCache(max_bytes=10 * 8 * 4)      # ~10 float32[8]
+    arrs = {f"k{i}": np.full(8, i, np.float32) for i in range(15)}
+    for k, v in arrs.items():
+        c.put(k, v)
+    assert c.stats()["bytes"] <= 10 * 8 * 4
+    assert c.get("k14") is not None               # recent survives
+    assert c.get("k0") is None                    # evicted (no spill)
+    assert c.stats()["misses"] >= 1
+
+
+def test_cache_spill_roundtrip(tmp_path):
+    c = EmbeddingCache(max_bytes=4 * 8 * 4, spill_dir=str(tmp_path))
+    for i in range(10):
+        c.put(f"k{i}", np.full(8, i, np.float32))
+    v = c.get("k0")                               # evicted -> spilled -> back
+    assert v is not None and v[0] == 0
+    assert c.stats()["spills"] >= 1
+
+
+def test_content_key_stability():
+    a = np.arange(12, dtype=np.float32).reshape(3, 4)
+    assert content_key(a) == content_key(a.copy())
+    assert content_key(a) != content_key(a.T.copy())
+    assert content_key(a) != content_key(a.astype(np.float64))
+
+
+# ---------------------------------------------------------------- batcher --
+def test_bucket_size():
+    assert [bucket_size(n, 64) for n in (1, 2, 3, 5, 33, 64, 200)] == \
+        [1, 2, 4, 8, 64, 64, 64]
+
+
+def test_batcher_batches_and_results():
+    seen = []
+
+    def fn(stacked, n):
+        seen.append((stacked.shape[0], n))
+        return [stacked[i] * 2 for i in range(n)]
+
+    b = DynamicBatcher(fn, max_batch=8, timeout_s=0.02)
+    xs = [np.full(4, i, np.float32) for i in range(20)]
+    out = b.score(xs)
+    b.close()
+    for i, o in enumerate(out):
+        np.testing.assert_array_equal(o, xs[i] * 2)
+    assert all(s[0] in (1, 2, 4, 8) for s in seen)   # pow-2 buckets
+    assert max(s[1] for s in seen) > 1               # actually batched
+
+
+# ----------------------------------------------------------------- config --
+def test_yaml_subset_parser_paper_example():
+    text = """
+name: "IMG_CLASSIFICATION"
+version: 0.1
+active_learning:
+  strategy:
+    type: "auto"
+  model:
+    name: "resnet18"
+    hub_name: "pytorch/vision:release/0.12"
+    batch_size: 1
+  device: CPU
+al_worker:
+  protocol: "grpc"
+  host: "0.0.0.0"
+  port: 60035
+  replicas: 1
+"""
+    d = parse_yaml(text)
+    assert d["name"] == "IMG_CLASSIFICATION"
+    assert d["active_learning"]["strategy"]["type"] == "auto"
+    assert d["active_learning"]["model"]["batch_size"] == 1
+    assert d["al_worker"]["port"] == 60035
+    cfg = ALServiceConfig.from_dict(d)
+    assert cfg.strategy == "auto" and cfg.model_name == "resnet18"
+    assert cfg.port == 60035
+
+
+def test_yaml_lists():
+    d = parse_yaml("xs:\n  - 1\n  - 2\nys:\n  - a: 1\n  - b: 2\n")
+    assert d["xs"] == [1, 2]
+    assert d["ys"][0] == {"a": 1}
+
+
+# ----------------------------------------------------------------- server --
+@pytest.fixture(scope="module")
+def pool():
+    X, Y = image_pool(240, seed=0)
+    EX, EY = image_pool(120, seed=1)
+    return X, Y, EX, EY
+
+
+def _server(pool):
+    X, Y, EX, EY = pool
+    srv = ALServer(ALServiceConfig(batch_size=32))
+    keys = srv.push_data(list(X))
+    key2y = dict(zip(keys, Y))
+    srv.attach_oracle(lambda ks: [key2y[k] for k in ks], EX, EY)
+    return srv, keys, key2y
+
+
+def test_server_round_improves_over_init(pool):
+    srv, keys, key2y = _server(pool)
+    res = srv.query(budget=60, strategy="lc")
+    assert len(set(res["keys"])) == 60
+    srv.label(res["keys"], [key2y[k] for k in res["keys"]])
+    acc = srv.train_and_eval()
+    assert acc > 0.2     # 10-class problem, must beat chance by 2x
+
+
+def test_server_cache_hits_on_repush(pool):
+    srv, keys, _ = _server(pool)
+    h0 = srv.cache.stats()
+    srv.push_data(list(pool[0][:50]))             # same content -> all cached
+    assert srv.cache.stats()["entries"] == h0["entries"]
+
+
+def test_server_pshea_auto(pool):
+    srv, keys, key2y = _server(pool)
+    res = srv.query(budget=120, strategy="auto", target_accuracy=0.99)
+    assert res["strategy"] in ("lc", "mc", "rc", "es", "kcg", "coreset",
+                               "dbal")
+    assert len(res["eliminated"]) >= 1
+    assert res["stop_reason"] in ("budget_exhausted", "target_accuracy",
+                                  "converged", "max_rounds")
+
+
+def test_tcp_roundtrip(pool):
+    srv, keys, key2y = _server(pool)
+    rpc = serve_tcp(srv)
+    cli = ALClient(url=f"127.0.0.1:{rpc.port}")
+    try:
+        st = cli.stats()
+        assert st["pool"] == 240
+        res = cli.query(5, "mc")
+        assert len(res["keys"]) == 5
+        cli.label(res["keys"], [key2y[k] for k in res["keys"]])
+        acc = cli.train_eval()
+        assert 0.0 <= acc <= 1.0
+    finally:
+        cli.close()
+        rpc.stop()
+
+
+def test_pipelined_push_equals_serial_push(pool):
+    X = list(pool[0][:64])
+    s1 = ALServer(ALServiceConfig(batch_size=16))
+    k1 = s1.push_data(X, pipelined=True)
+    s2 = ALServer(ALServiceConfig(batch_size=16))
+    k2 = s2.push_data(X, pipelined=False)
+    assert k1 == k2
+    f1 = np.stack([s1.cache.get(k) for k in k1])
+    f2 = np.stack([s2.cache.get(k) for k in k2])
+    np.testing.assert_allclose(f1, f2, rtol=1e-5, atol=1e-5)

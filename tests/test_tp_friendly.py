@@ -1,0 +1,46 @@
+"""tp_friendly config transform (EXPERIMENTS §Perf B1/C1)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config, get_smoke_config
+
+
+def test_tp_friendly_pads_hostile_archs():
+    phi3 = get_config("phi3-medium-14b").tp_friendly(16)
+    assert phi3.n_heads == 48 and phi3.n_kv_heads == 16
+    assert phi3.hd == 128                      # head_dim preserved
+    llava = get_config("llava-next-34b").tp_friendly(16)
+    assert llava.n_heads == 64 and llava.n_kv_heads == 16
+    qwen15 = get_config("qwen1.5-4b").tp_friendly(16)
+    assert qwen15.n_heads == 32 and qwen15.n_kv_heads == 32  # MHA pads both
+
+
+def test_tp_friendly_replicates_kv_when_under_tp():
+    q3 = get_config("qwen3-8b").tp_friendly(16)
+    assert q3.n_heads == 32 and q3.n_kv_heads == 16   # GQA kv 8 -> 16
+
+
+def test_tp_friendly_noop_where_inapplicable():
+    # MLA and attention-free archs are untouched
+    assert get_config("deepseek-v3-671b").tp_friendly(16) is \
+        get_config("deepseek-v3-671b")
+    assert get_config("rwkv6-3b").tp_friendly(16) is get_config("rwkv6-3b")
+
+
+def test_tp_friendly_model_still_runs():
+    import dataclasses
+    from repro.models.transformer import Model
+    cfg = dataclasses.replace(get_smoke_config("phi3-medium-14b"),
+                              n_heads=6, n_kv_heads=3)
+    padded = cfg.tp_friendly(4)
+    assert padded.n_heads == 8
+    model = Model(padded)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = {
+        "tokens": jnp.zeros((2, 16), jnp.int32),
+        "labels": jnp.zeros((2, 16), jnp.int32),
+    }
+    loss, _ = jax.jit(model.loss)(params, batch)
+    assert np.isfinite(float(loss))

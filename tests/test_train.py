@@ -1,0 +1,155 @@
+"""Training substrate: optimizers, compression, fault tolerance, e2e loop."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.fault_tolerance import (FailureInjector,
+                                               SimulatedFailure,
+                                               StragglerMonitor, supervise)
+from repro.optim.compression import (int8_dequantize, int8_quantize,
+                                     topk_sparsify)
+from repro.optim.optimizer import (Adafactor, AdamW, clip_by_global_norm,
+                                   cosine_schedule)
+
+
+# -------------------------------------------------------------- optimizers --
+def _quadratic_progress(opt):
+    target = jnp.asarray(np.random.default_rng(0).normal(size=(8, 8)),
+                         jnp.float32)
+    params = {"w": jnp.zeros((8, 8), jnp.float32)}
+    state = opt.init(params)
+
+    def loss(p):
+        return jnp.mean((p["w"] - target) ** 2)
+
+    l0 = float(loss(params))
+    for _ in range(60):
+        g = jax.grad(loss)(params)
+        params, state, _ = opt.update(g, state, params)
+    return l0, float(loss(params))
+
+
+def test_adamw_decreases_loss():
+    l0, l1 = _quadratic_progress(AdamW(lr=cosine_schedule(0.05, 5, 1000),
+                                       weight_decay=0.0))
+    assert l1 < 0.3 * l0
+
+
+def test_adafactor_decreases_loss():
+    l0, l1 = _quadratic_progress(Adafactor(lr=cosine_schedule(0.05, 5, 1000)))
+    assert l1 < 0.5 * l0
+
+
+def test_adafactor_state_is_factored():
+    opt = Adafactor()
+    params = {"w": jnp.zeros((64, 32), jnp.float32)}
+    st = opt.init(params)
+    pp = st["per_param"]["w"]
+    assert "vr" in pp and "vc" in pp and "v" not in pp
+    assert pp["vr"].shape == (64,) and pp["vc"].shape == (32,)
+    assert pp["m"].dtype == jnp.bfloat16
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.full((4,), 10.0)}
+    clipped, norm = clip_by_global_norm(g, 1.0)
+    assert float(norm) == 20.0
+    np.testing.assert_allclose(
+        np.linalg.norm(np.asarray(clipped["a"])), 1.0, rtol=1e-5)
+
+
+# -------------------------------------------------------------- compression --
+def test_topk_error_feedback_identity():
+    g = jnp.asarray(np.random.default_rng(1).normal(size=(256,)), jnp.float32)
+    sparse, err = topk_sparsify(g, 0.1)
+    np.testing.assert_allclose(np.asarray(sparse + err), np.asarray(g),
+                               rtol=1e-6, atol=1e-6)
+    assert np.count_nonzero(np.asarray(sparse)) <= 26 + 1
+
+
+def test_topk_error_feedback_converges():
+    """Over steps, transmitted mass approaches the true accumulated grad."""
+    rng = np.random.default_rng(2)
+    err = jnp.zeros((128,))
+    total_sent = jnp.zeros((128,))
+    total_true = jnp.zeros((128,))
+    for _ in range(50):
+        g = jnp.asarray(rng.normal(size=(128,)), jnp.float32)
+        total_true = total_true + g
+        sparse, err = topk_sparsify(g, 0.2, err)
+        total_sent = total_sent + sparse
+    resid = np.linalg.norm(np.asarray(total_sent + err - total_true))
+    assert resid < 1e-4
+
+
+def test_int8_quantization_error_bound():
+    g = jnp.asarray(np.random.default_rng(3).normal(size=(1024,)),
+                    jnp.float32)
+    q, scale = int8_quantize(g)
+    back = int8_dequantize(q, scale)
+    assert q.dtype == jnp.int8
+    assert float(jnp.max(jnp.abs(back - g))) <= float(scale) / 2 + 1e-6
+
+
+# ---------------------------------------------------------- fault tolerance --
+def test_straggler_monitor_flags_outlier():
+    m = StragglerMonitor(threshold=2.0, warmup=3)
+    for i in range(10):
+        ev = m.observe(i, 0.1)
+        assert ev is None
+    ev = m.observe(10, 0.5)
+    assert ev is not None and ev.ratio > 2.0
+    # EMA not poisoned by the straggler
+    assert abs(m.ema - 0.1) < 0.02
+
+
+def test_failure_injector_fires_once():
+    inj = FailureInjector([3])
+    inj.maybe_fail(2)
+    with pytest.raises(SimulatedFailure):
+        inj.maybe_fail(3)
+    inj.maybe_fail(3)   # second time: no-op
+
+
+def test_supervise_restarts_until_done():
+    state = {"ckpt": 0, "attempts": 0}
+
+    def train_round(start):
+        state["attempts"] += 1
+        for step in range(start, 20):
+            if step == 12 and state["attempts"] == 1:
+                raise SimulatedFailure("boom")
+            if step % 5 == 0:
+                state["ckpt"] = step
+        state["ckpt"] = 20
+        return 20
+
+    rep = supervise(train_round, total_steps=20,
+                    latest_step=lambda: state["ckpt"])
+    assert rep.restarts == 1 and rep.final_step == 20
+
+
+# ------------------------------------------------------------------- e2e ----
+@pytest.mark.slow
+def test_training_loss_decreases(tmp_path):
+    from repro.launch.train import run_training
+
+    rep = run_training("qwen1.5-4b", smoke=True, steps=30, batch=4, seq=32,
+                       pool_size=64, log_every=0, lr=1e-3, warmup=5)
+    first = np.mean(rep.losses[:5])
+    last = np.mean(rep.losses[-5:])
+    assert last < first - 0.05, (first, last)
+
+
+@pytest.mark.slow
+def test_training_failure_resume(tmp_path):
+    from repro.launch.train import run_training
+
+    rep = run_training("qwen1.5-4b", smoke=True, steps=16, batch=2, seq=32,
+                       pool_size=32, ckpt_dir=str(tmp_path / "ck"),
+                       ckpt_every=5, fail_at=[8], log_every=0)
+    assert rep.restarts == 1
+    assert rep.steps == 16
+    assert rep.ckpt_steps[-1] == 16
