@@ -9,8 +9,10 @@ from __future__ import annotations
 import argparse
 import sys
 import time
+import types
 
-BENCHES = ["table2", "fig4a", "fig4b", "fig4c", "fig5", "roofline"]
+BENCHES = ["table2", "fig4a", "fig4b", "fig4b_micro", "fig4c", "fig5",
+           "roofline"]
 
 
 def main() -> None:
@@ -28,6 +30,9 @@ def main() -> None:
         "table2": table2_pipeline,
         "fig4a": fig4a_strategy_accuracy,
         "fig4b": fig4b_strategy_throughput,
+        # fused-vs-unfused greedy selection: asserts one pool read/center
+        "fig4b_micro": types.SimpleNamespace(
+            run=fig4b_strategy_throughput.run_micro),
         "fig4c": fig4c_batch_size,
         "fig5": fig5_pshea,
         "roofline": roofline_bench,

@@ -66,13 +66,17 @@ def distributed_top_k(scores: jax.Array, budget: int, mesh: Mesh,
 
 def distributed_k_center(embeddings: jax.Array, budget: int, mesh: Mesh,
                          axis: str = "data",
-                         init_center: Optional[jax.Array] = None) -> jax.Array:
+                         init_center: Optional[jax.Array] = None,
+                         impl: str = "auto") -> jax.Array:
     """Greedy k-center over a data-sharded (N, d) embedding pool.
 
-    Per round: local min-dist argmax -> all_gather (value, global index,
-    vector) -> replicated argmax picks the winner -> everyone updates local
-    min-dists against the winning vector. Returns (budget,) global indices.
+    Per round: all_gather the previous round's (value, global index, vector)
+    candidates -> replicated argmax picks the winner -> ONE fused local pool
+    pass (repro/kernels/pairwise.greedy_round) folds the winning vector into
+    the local min-dists, masks the winner on its home shard, and yields the
+    next local candidate. Returns (budget,) global indices.
     """
+    from repro.kernels.pairwise import ops
     n_dev = mesh.shape[axis]
     N, d = embeddings.shape
     shard = N // n_dev
@@ -93,27 +97,26 @@ def distributed_k_center(embeddings: jax.Array, budget: int, mesh: Mesh,
         if init_center is None:
             on_shard0 = jax.lax.axis_index(axis) == 0
             mind = jnp.where((jnp.arange(shard) == 0) & on_shard0, -1.0, mind)
+        li = jnp.argmax(mind).astype(jnp.int32)
+        lv = mind[li]
 
         def body(i, carry):
-            mind, sel = carry
-            li = jnp.argmax(mind)
-            lv = mind[li]
+            mind, sel, li, lv = carry
             cand_v = jax.lax.all_gather(lv, axis)          # (n_dev,)
             cand_i = jax.lax.all_gather(li + base, axis)
             cand_e = jax.lax.all_gather(emb[li], axis)     # (n_dev, d)
             w = jnp.argmax(cand_v)
             sel = sel.at[i].set(cand_i[w].astype(jnp.int32))
             center = cand_e[w]
-            nd = jnp.sum((emb - center) ** 2, axis=-1)
-            mind = jnp.minimum(mind, nd)
             # never re-pick the winner on its home shard
             is_mine = (cand_i[w] >= base) & (cand_i[w] < base + shard)
-            mind = jnp.where(
-                (jnp.arange(shard) == (cand_i[w] - base)) & is_mine,
-                -1.0, mind)
-            return mind, sel
+            mask = jnp.where(is_mine, cand_i[w] - base, -1).astype(jnp.int32)
+            mind, li, lv = ops.greedy_round(emb, mind, center[None, :],
+                                            mask[None], impl=impl)
+            return mind, sel, li, lv
 
-        _, sel = jax.lax.fori_loop(start, budget, body, (mind, sel))
+        _, sel, _, _ = jax.lax.fori_loop(start, budget, body,
+                                         (mind, sel, li, lv))
         return sel
 
     fn = shard_map(local, mesh=mesh, in_specs=P(axis), out_specs=P())

@@ -1,12 +1,13 @@
 """Diversity-based strategies: KCG, Core-Set, DBAL (+ Random baseline).
 
 K-center greedy is the paper's heaviest strategy (Fig. 4b: lowest
-throughput); the inner ``min(dist(pool, new_center))`` update is the fused
-Pallas kernel in repro/kernels/pairwise.
+throughput); every greedy round is ONE fused Pallas pass
+(repro/kernels/pairwise.greedy_round_pallas): the pool is read once per
+selected center, with the min-dist update, selected-index masking, and the
+next argmax folded into that read. The Core-Set warm start folds labeled
+centers in chunks via the same kernel (ops.warm_start_min_dist).
 """
 from __future__ import annotations
-
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -15,39 +16,39 @@ from repro.core.strategies.base import Strategy
 from repro.core.strategies.uncertainty import lc_scores
 
 
-def _min_dist_update(embeddings, center, mindist):
-    from repro.kernels.pairwise import ops
-    d = ops.sq_dist_to_center(embeddings, center)
-    return jnp.minimum(mindist, d)
-
-
-def k_center_greedy(rng, budget: int, embeddings, init_centers=None):
+def k_center_greedy(rng, budget: int, embeddings, init_centers=None,
+                    impl: str = "auto"):
     """2-approx k-center: repeatedly take the point farthest from all
     centers. init_centers: (M,d) existing (labeled) centers or None."""
+    from repro.kernels.pairwise import ops
     N, _ = embeddings.shape
     emb = embeddings.astype(jnp.float32)
     selected = jnp.zeros((budget,), jnp.int32)
     start = 0
     if init_centers is not None and init_centers.shape[0] > 0:
-        from repro.kernels.pairwise import ops
-        mindist = ops.pairwise_min_dist(emb, init_centers.astype(jnp.float32))
+        mindist = ops.warm_start_min_dist(emb,
+                                          init_centers.astype(jnp.float32),
+                                          impl=impl)
     else:
         # the seed IS the first returned center (otherwise its cluster can
         # be silently dropped from the returned set)
         first = jax.random.randint(rng, (), 0, N).astype(jnp.int32)
         selected = selected.at[0].set(first)
-        mindist = jnp.sum((emb - emb[first]) ** 2, axis=-1).at[first].set(-1.0)
+        mindist = ops.sq_dist_to_center(emb, emb[first]).at[first].set(-1.0)
         start = 1
+    nxt = jnp.argmax(mindist).astype(jnp.int32)
 
     def body(i, carry):
-        mindist, selected = carry
-        idx = jnp.argmax(mindist).astype(jnp.int32)
-        selected = selected.at[i].set(idx)
-        mindist = _min_dist_update(emb, emb[idx], mindist)
-        mindist = mindist.at[idx].set(-1.0)   # never re-pick
-        return mindist, selected
+        mindist, selected, nxt = carry
+        selected = selected.at[i].set(nxt)
+        # one fused pool pass: fold the new center in, mask it, get the
+        # following round's argmax
+        mindist, nxt, _ = ops.greedy_round(emb, mindist, emb[nxt][None, :],
+                                           nxt[None], impl=impl)
+        return mindist, selected, nxt
 
-    _, selected = jax.lax.fori_loop(start, budget, body, (mindist, selected))
+    _, selected, _ = jax.lax.fori_loop(start, budget, body,
+                                       (mindist, selected, nxt))
     return selected
 
 
@@ -62,24 +63,30 @@ def _coreset_select(rng, budget, *, embeddings, labeled_embeddings=None):
 
 def _kmeans(rng, x, k: int, iters: int = 10, weights=None):
     """Weighted Lloyd's with kmeans++-style seeding. x: (N,d) f32."""
+    from repro.kernels.pairwise import ops
     N, d = x.shape
     w = jnp.ones((N,), jnp.float32) if weights is None else weights
     keys = jax.random.split(rng, 2)
-    # seeding: weighted random first, then farthest-point (cheap ++ variant)
+    # seeding: weighted random first, then farthest-point (cheap ++ variant).
+    # The running min-dist only ever sees FILLED centroid rows — recomputing
+    # against the whole (k, d) buffer would let zero-initialized rows act as
+    # phantom centers at the origin.
     first = jax.random.categorical(keys[0], jnp.log(w + 1e-9))
     cent0 = jnp.zeros((k, d), jnp.float32).at[0].set(x[first])
+    mind0 = ops.sq_dist_to_center(x, x[first])
+    no_mask = jnp.full((1,), -1, jnp.int32)
+    nxt0 = jnp.argmax(mind0 * w).astype(jnp.int32)
 
-    def seed_body(i, cent):
-        from repro.kernels.pairwise import ops
-        md = ops.pairwise_min_dist(x, cent) * w
-        md = jnp.where(jnp.arange(N) < 0, 0.0, md)
-        idx = jnp.argmax(md)
-        return cent.at[i].set(x[idx])
+    def seed_body(i, carry):
+        cents, mind, nxt = carry
+        cents = cents.at[i].set(x[nxt])
+        mind, nxt, _ = ops.greedy_round(x, mind, x[nxt][None, :], no_mask,
+                                        weights=w)
+        return cents, mind, nxt
 
-    cents = jax.lax.fori_loop(1, k, seed_body, cent0)
+    cents, _, _ = jax.lax.fori_loop(1, k, seed_body, (cent0, mind0, nxt0))
 
     def lloyd(_, cents):
-        from repro.kernels.pairwise import ops
         assign = ops.pairwise_argmin(x, cents)           # (N,)
         one = jax.nn.one_hot(assign, k, dtype=jnp.float32) * w[:, None]
         num = one.T @ x                                   # (k,d)

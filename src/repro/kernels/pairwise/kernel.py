@@ -1,11 +1,43 @@
-"""Pallas TPU kernel: fused pairwise-distance + running min/argmin.
+"""Pallas TPU kernels for pairwise-distance reductions and fused k-center
+greedy selection rounds.
 
-The k-center / core-set inner loop needs min_j ||x_i - c_j||^2 over a large
-center set without materializing the (N, M) distance matrix in HBM. Tiles
-(N_b, d) x (M_b, d) hit the MXU via the -2*x@c^T term; the ||.||^2 terms and
-the running (min, argmin) fold into the same pass through VMEM scratch.
+Two kernels live here:
 
-Grid: (n_blocks, m_blocks); rows parallel, centers sequential.
+``pairwise_min_argmin_pallas``
+    min_j ||x_i - c_j||^2 (and its argmin) over a large center set without
+    materializing the (N, M) distance matrix in HBM. Tiles (N_b, d) x
+    (M_b, d) hit the MXU via the -2*x@c^T term; the ||.||^2 terms and the
+    running (min, argmin) fold into the same pass through VMEM scratch.
+    Grid: (n_blocks, m_blocks); rows parallel, centers sequential.
+
+``greedy_round_pallas``
+    One *fused* k-center greedy round. The unfused round re-streams the
+    pool repeatedly:
+
+        HBM traffic per round, unfused (N rows, d features, fp32):
+          1. sq_dist_to_center      read (N, d) + write (N,)
+          2. jnp.minimum            read 2x (N,) + write (N,)
+          3. scatter winner mask    read/write (N,)
+          4. jnp.argmax             read (N,)
+        => one (N, d) pool read plus ~6 full (N,) vector streams, each a
+        separate XLA op with its own HBM round trip.
+
+        HBM traffic per round, fused (this kernel):
+          1. one grid pass: read (N, d) + read (N,) min-dist + write (N,)
+             min-dist + write 2 x (N / N_b) block partials
+        => exactly ONE (N, d) pool read per selected center; everything
+        else rides along in the same pass.
+
+    Per (N_b, d) embedding tile the kernel (a) computes squared distances
+    to the R queued centers held in VMEM, (b) folds them into the running
+    min-dist in place, (c) masks already-selected indices to -1, and (d)
+    emits per-block (max, argmax) partials of the (optionally weighted)
+    min-dist. A tiny O(N / N_b) host-side reduction over the partials
+    yields the next center — no second pass over the pool.
+
+    The R-center ("multi-center") form is what makes the Core-Set
+    warm-start cheap: M labeled centers fold into ceil(M / R) pool passes
+    instead of one pass per center (see ``ops.warm_start_min_dist``).
 """
 from __future__ import annotations
 
@@ -15,6 +47,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels import compat
 
 BIG = 3.4e38
 
@@ -83,8 +117,91 @@ def pairwise_min_argmin_pallas(x, c, *, n_block: int = 256,
             pltpu.VMEM((nb,), jnp.float32),
             pltpu.VMEM((nb,), jnp.int32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compat.CompilerParams(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(x, c)
     return mind[:N], argm[:N]
+
+
+def _greedy_kernel(x_ref, mind_ref, c_ref, sel_ref, w_ref,
+                   nmind_ref, bmax_ref, barg_ref, *, n: int, r: int,
+                   n_block: int):
+    i = pl.program_id(0)
+    x = x_ref[...].astype(jnp.float32)                  # (Nb, d)
+    c = c_ref[...].astype(jnp.float32)                  # (Rp, d)
+    x2 = jnp.sum(x * x, axis=-1, keepdims=True)         # (Nb, 1)
+    c2 = jnp.sum(c * c, axis=-1)                        # (Rp,)
+    xc = jax.lax.dot_general(x, c, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    d = jnp.maximum(x2 + c2[None, :] - 2.0 * xc, 0.0)   # (Nb, Rp)
+    col = jax.lax.broadcasted_iota(jnp.int32, d.shape, 1)
+    d = jnp.where(col < r, d, BIG)
+
+    nm = jnp.minimum(mind_ref[...], jnp.min(d, axis=-1))
+    gid2 = jax.lax.broadcasted_iota(jnp.int32, d.shape, 0) + i * n_block
+    hit = jnp.any(gid2 == sel_ref[...][None, :], axis=-1)
+    nm = jnp.where(hit, -1.0, nm)
+    nmind_ref[...] = nm
+
+    score = nm * w_ref[...]
+    mval = jnp.where(gid2[:, 0] < n, score, -BIG)       # mask padded rows
+    bmax_ref[...] = jnp.max(mval).reshape(1)
+    barg_ref[...] = (jnp.argmax(mval).astype(jnp.int32)
+                     + i * n_block).reshape(1)
+
+
+def greedy_round_pallas(x, mind, centers, sel_idx, weights=None, *,
+                        n_block: int = 256, interpret: bool = False):
+    """One fused greedy round: fold ``centers`` into the running min-dist,
+    mask ``sel_idx``, and return the next (weighted) farthest point.
+
+    x: (N, d) pool; mind: (N,) running min sq-dist (selected rows already
+    -1); centers: (R, d) newly queued centers; sel_idx: (R,) int32 pool
+    indices to mask this round (-1 = no mask); weights: optional (N,)
+    positive weights applied to the argmax score only.
+
+    Returns ``(new_mind (N,) f32, next_idx () i32, next_score () f32)``.
+    """
+    N, d = x.shape
+    R = centers.shape[0]
+    nb = min(n_block, N)
+    nn = -(-N // nb)
+    Np = nn * nb
+    Rp = -(-R // 8) * 8
+    if Np != N:
+        x = jnp.pad(x, ((0, Np - N), (0, 0)))
+        mind = jnp.pad(mind, (0, Np - N))
+    if Rp != R:
+        centers = jnp.pad(centers, ((0, Rp - R), (0, 0)))
+        sel_idx = jnp.pad(sel_idx, (0, Rp - R), constant_values=-1)
+    w = (jnp.ones((Np,), jnp.float32) if weights is None
+         else jnp.pad(weights.astype(jnp.float32), (0, Np - N)))
+    nmind, bmax, barg = pl.pallas_call(
+        functools.partial(_greedy_kernel, n=N, r=R, n_block=nb),
+        grid=(nn,),
+        in_specs=[
+            pl.BlockSpec((nb, d), lambda i: (i, 0)),
+            pl.BlockSpec((nb,), lambda i: (i,)),
+            pl.BlockSpec((Rp, d), lambda i: (0, 0)),
+            pl.BlockSpec((Rp,), lambda i: (0,)),
+            pl.BlockSpec((nb,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((nb,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Np,), jnp.float32),
+            jax.ShapeDtypeStruct((nn,), jnp.float32),
+            jax.ShapeDtypeStruct((nn,), jnp.int32),
+        ],
+        compiler_params=compat.CompilerParams(
+            dimension_semantics=("parallel",)),
+        interpret=interpret,
+    )(x, mind.astype(jnp.float32), centers.astype(jnp.float32),
+      sel_idx.astype(jnp.int32), w)
+    # O(N / N_b) reduction over block partials picks the next center.
+    win = jnp.argmax(bmax)
+    return nmind[:N], barg[win], bmax[win]

@@ -1,14 +1,23 @@
-"""Jit'd wrappers for pairwise distance reductions (kernel on TPU, jnp ref
-elsewhere)."""
+"""Wrappers for pairwise distance reductions and fused greedy-selection
+rounds (Pallas kernel on TPU, jnp ref elsewhere).
+
+Besides impl dispatch ("auto" / "ref" / "interpret" / "pallas"), this layer
+does HBM-pass accounting: inside ``track_ops()`` every wrapper records how
+many full (N, d) embedding-pool reads and full (N,) vector streams it
+issues, so benchmarks can verify the fused greedy round really costs one
+pool read per selected center (see kernel.py for the per-round ledger).
+"""
 from __future__ import annotations
 
+import contextlib
 import functools
 
 import jax
 import jax.numpy as jnp
 
 from repro.kernels.pairwise import ref
-from repro.kernels.pairwise.kernel import pairwise_min_argmin_pallas
+from repro.kernels.pairwise.kernel import (BIG, greedy_round_pallas,
+                                           pairwise_min_argmin_pallas)
 
 
 def _on_tpu() -> bool:
@@ -18,31 +27,140 @@ def _on_tpu() -> bool:
         return False
 
 
+# ------------------------------------------------------- op accounting ----
+_STATS = {"embedding_reads": 0, "vector_streams": 0, "hbm_bytes": 0}
+_TRACKING = [False]
+
+
+def reset_op_stats() -> None:
+    for k in _STATS:
+        _STATS[k] = 0
+
+
+def op_stats() -> dict:
+    return dict(_STATS)
+
+
+@contextlib.contextmanager
+def track_ops():
+    """Count embedding-pool reads / vector streams issued while active.
+
+    Only Python-level calls are counted (ops invoked from inside a traced
+    ``fori_loop`` body trace once) — drive rounds from a Python loop when
+    accounting, as the microbenchmark does.
+    """
+    reset_op_stats()
+    _TRACKING[0] = True
+    try:
+        yield _STATS
+    finally:
+        _TRACKING[0] = False
+
+
+def _record(x, emb_reads: int = 0, vec_streams: int = 0) -> None:
+    if not _TRACKING[0]:
+        return
+    n, d = x.shape
+    _STATS["embedding_reads"] += emb_reads
+    _STATS["vector_streams"] += vec_streams
+    _STATS["hbm_bytes"] += 4 * (emb_reads * n * d + vec_streams * n)
+
+
+# ------------------------------------------------- pairwise reductions ----
 @functools.partial(jax.jit, static_argnames=("impl",))
+def _pairwise_min_and_argmin(x, c, impl: str):
+    if impl == "auto":
+        impl = "pallas" if _on_tpu() else "ref"
+    if impl == "ref":
+        return ref.pairwise_min_and_argmin_ref(x, c)
+    return pairwise_min_argmin_pallas(x, c, interpret=(impl == "interpret"))
+
+
+def pairwise_min_and_argmin(x, c, impl: str = "auto"):
+    """Both (min_d (N,), argmin (N,)) from ONE kernel launch — call-sites
+    needing the pair must not pay two pool passes."""
+    _record(x, emb_reads=1, vec_streams=2)
+    return _pairwise_min_and_argmin(x, c, impl)
+
+
 def pairwise_min_dist(x, c, impl: str = "auto"):
-    if impl == "auto":
-        impl = "pallas" if _on_tpu() else "ref"
-    if impl == "ref":
-        return ref.pairwise_min_dist_ref(x, c)
-    return pairwise_min_argmin_pallas(x, c, interpret=(impl == "interpret"))[0]
+    return pairwise_min_and_argmin(x, c, impl)[0]
 
 
-@functools.partial(jax.jit, static_argnames=("impl",))
 def pairwise_argmin(x, c, impl: str = "auto"):
-    if impl == "auto":
-        impl = "pallas" if _on_tpu() else "ref"
-    if impl == "ref":
-        return ref.pairwise_argmin_ref(x, c)
-    return pairwise_min_argmin_pallas(x, c, interpret=(impl == "interpret"))[1]
+    return pairwise_min_and_argmin(x, c, impl)[1]
 
 
 @jax.jit
-def pairwise_sq_dists(x, c):
-    """Full (N, M) matrix — only for small M (DBAL centroid matching)."""
+def _pairwise_sq_dists(x, c):
     return ref.pairwise_sq_dists_ref(x, c)
 
 
+def pairwise_sq_dists(x, c):
+    """Full (N, M) matrix — only for small M (DBAL centroid matching)."""
+    _record(x, emb_reads=1)
+    return _pairwise_sq_dists(x, c)
+
+
 @jax.jit
-def sq_dist_to_center(x, center):
+def _sq_dist_to_center(x, center):
     diff = x.astype(jnp.float32) - center.astype(jnp.float32)[None, :]
     return jnp.sum(diff * diff, axis=-1)
+
+
+def sq_dist_to_center(x, center):
+    _record(x, emb_reads=1, vec_streams=1)
+    return _sq_dist_to_center(x, center)
+
+
+# ---------------------------------------------- fused greedy selection ----
+@functools.partial(jax.jit, static_argnames=("impl", "n_block"))
+def _greedy_round(x, mind, centers, sel_idx, weights, impl: str,
+                  n_block: int):
+    if impl == "auto":
+        impl = "pallas" if _on_tpu() else "ref"
+    if impl == "ref":
+        return ref.greedy_round_ref(x, mind, centers, sel_idx, weights)
+    return greedy_round_pallas(x, mind, centers, sel_idx, weights,
+                               n_block=n_block,
+                               interpret=(impl == "interpret"))
+
+
+def greedy_round(x, mind, centers, sel_idx, weights=None, impl: str = "auto",
+                 n_block: int = 256):
+    """One fused greedy round: one (N, d) pool read folds the (R, d) queued
+    ``centers`` into ``mind``, masks ``sel_idx``, and returns the next
+    (weighted) farthest point. -> (new_mind, next_idx, next_score)."""
+    _record(x, emb_reads=1, vec_streams=2)
+    return _greedy_round(x, mind, centers, sel_idx, weights, impl, n_block)
+
+
+@jax.jit
+def _greedy_round_unfused(x, mind, center, sel_idx):
+    d = _sq_dist_to_center(x, center)
+    nm = jnp.minimum(mind, d)
+    nm = nm.at[sel_idx].set(-1.0)
+    nxt = jnp.argmax(nm).astype(jnp.int32)
+    return nm, nxt, nm[nxt]
+
+
+def greedy_round_unfused(x, mind, center, sel_idx):
+    """The pre-fusion round (distance pass, minimum pass, scatter, argmax
+    pass as separate XLA ops) — kept as the microbenchmark baseline."""
+    _record(x, emb_reads=1, vec_streams=6)
+    return _greedy_round_unfused(x, mind, center, sel_idx)
+
+
+def warm_start_min_dist(x, centers, impl: str = "auto", r_block: int = 256):
+    """Min sq-dist from every pool row to ANY of (M, d) ``centers`` —
+    the Core-Set warm start. Folds up to ``r_block`` centers per fused
+    pass: ceil(M / r_block) pool reads instead of one per center."""
+    N = x.shape[0]
+    M = centers.shape[0]
+    mind = jnp.full((N,), BIG, jnp.float32)
+    for s in range(0, M, r_block):
+        chunk = centers[s:s + r_block]
+        mind = greedy_round(x, mind, chunk,
+                            jnp.full((chunk.shape[0],), -1, jnp.int32),
+                            impl=impl)[0]
+    return mind

@@ -1,4 +1,5 @@
-"""Pure-jnp oracle for pairwise squared-distance reductions."""
+"""Pure-jnp oracle for pairwise squared-distance reductions and the fused
+k-center greedy round."""
 from __future__ import annotations
 
 import jax.numpy as jnp
@@ -20,3 +21,26 @@ def pairwise_min_dist_ref(x, c):
 
 def pairwise_argmin_ref(x, c):
     return jnp.argmin(pairwise_sq_dists_ref(x, c), axis=-1).astype(jnp.int32)
+
+
+def pairwise_min_and_argmin_ref(x, c):
+    d = pairwise_sq_dists_ref(x, c)
+    return jnp.min(d, axis=-1), jnp.argmin(d, axis=-1).astype(jnp.int32)
+
+
+def greedy_round_ref(x, mind, centers, sel_idx, weights=None):
+    """Oracle for ``greedy_round_pallas`` (same contract; see kernel.py)."""
+    N = x.shape[0]
+    if centers.shape[0] == 1:
+        # broadcast-diff beats the matmul identity for a single center and
+        # matches the pre-fusion round bit-for-bit
+        diff = x.astype(jnp.float32) - centers[0].astype(jnp.float32)[None, :]
+        dmin = jnp.sum(diff * diff, axis=-1)
+    else:
+        dmin = jnp.min(pairwise_sq_dists_ref(x, centers), axis=-1)
+    nm = jnp.minimum(mind.astype(jnp.float32), dmin)
+    hit = jnp.any(jnp.arange(N)[:, None] == sel_idx[None, :], axis=-1)
+    nm = jnp.where(hit, -1.0, nm)
+    score = nm if weights is None else nm * weights.astype(jnp.float32)
+    nxt = jnp.argmax(score).astype(jnp.int32)
+    return nm, nxt, score[nxt]

@@ -20,6 +20,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import compat
+
 NEG = -1e30
 
 
@@ -96,7 +98,7 @@ def uncertainty_stats_pallas(logits, *, row_block: int = 256,
             pltpu.VMEM((rb,), jnp.float32),
             pltpu.VMEM((rb,), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compat.CompilerParams(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(logits)

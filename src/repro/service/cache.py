@@ -61,6 +61,7 @@ class EmbeddingCache:
 
     def put(self, key: str, value) -> None:
         size = self._size(value)
+        evicted = []
         with self._lock:
             if key in self._lru:
                 self._bytes -= self._sizes[key]
@@ -71,7 +72,13 @@ class EmbeddingCache:
             while self._bytes > self.max_bytes and len(self._lru) > 1:
                 old_key, old_val = self._lru.popitem(last=False)
                 self._bytes -= self._sizes.pop(old_key)
-                self._spill(old_key, old_val)
+                evicted.append((old_key, old_val))
+        # zstd compression + disk writes happen OUTSIDE the lock so readers
+        # are never blocked behind a spill. Two racing spills of one key can
+        # land in either order — safe because keys are content hashes, so
+        # every spill of a key carries the same value.
+        for old_key, old_val in evicted:
+            self._spill(old_key, old_val)
 
     def get(self, key: str):
         with self._lock:
@@ -103,8 +110,12 @@ class EmbeddingCache:
         blob = pickle.dumps(value, protocol=4)
         if zstd is not None:
             blob = zstd.ZstdCompressor(level=3).compress(blob)
-        with open(self._path(key), "wb") as f:
+        # write-then-rename: _unspill reads without the lock, so a spill
+        # file must never be observable half-written
+        tmp = self._path(key) + f".tmp.{threading.get_ident()}"
+        with open(tmp, "wb") as f:
             f.write(blob)
+        os.replace(tmp, self._path(key))
         self.spills += 1
 
     def _unspill(self, key: str):

@@ -72,6 +72,110 @@ def test_pairwise_kernel(nmd, dtype):
                                       np.asarray(ref.pairwise_argmin_ref(x, c)))
 
 
+def test_pairwise_min_and_argmin_single_launch():
+    from repro.kernels.pairwise import ops, ref
+
+    x, c = _arr((70, 24), jnp.float32), _arr((33, 24), jnp.float32)
+    mind, argm = ops.pairwise_min_and_argmin(x, c, impl="interpret")
+    np.testing.assert_allclose(mind, ref.pairwise_min_dist_ref(x, c),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_array_equal(np.asarray(argm),
+                                  np.asarray(ref.pairwise_argmin_ref(x, c)))
+    with ops.track_ops() as stats:
+        ops.pairwise_min_and_argmin(x, c, impl="ref")
+    assert stats["embedding_reads"] == 1       # the pair costs ONE pool pass
+
+
+# --------------------------------------------------- fused greedy round ----
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("nrd", [(64, 1, 16), (100, 3, 64), (33, 8, 100),
+                                 (257, 5, 130)])
+def test_greedy_round_kernel(nrd, dtype):
+    """Interpret-mode parity vs the jnp oracle on non-block-multiple N / R
+    and d not a multiple of 128."""
+    from repro.kernels.pairwise import ref
+    from repro.kernels.pairwise.kernel import greedy_round_pallas
+
+    N, R, d = nrd
+    x = _arr((N, d), dtype)
+    c = _arr((R, d), dtype)
+    mind = jnp.asarray(np.abs(rng.normal(size=(N,))) * 10, jnp.float32)
+    sel = jnp.asarray(rng.choice(N, R, replace=False), jnp.int32)
+    nm_k, ni_k, nv_k = greedy_round_pallas(x, mind, c, sel, n_block=16,
+                                           interpret=True)
+    nm_r, ni_r, nv_r = ref.greedy_round_ref(x, mind, c, sel)
+    tol = 1e-4 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(nm_k, nm_r, rtol=tol, atol=tol)
+    np.testing.assert_allclose(nv_k, nv_r, rtol=tol, atol=tol)
+    if dtype == jnp.float32:
+        assert int(ni_k) == int(ni_r)
+    # masked rows must be pinned to -1 and never win the argmax
+    np.testing.assert_array_equal(np.asarray(nm_k)[np.asarray(sel)], -1.0)
+    assert int(ni_k) not in set(np.asarray(sel).tolist())
+
+
+def test_greedy_round_weighted_argmax():
+    from repro.kernels.pairwise import ref
+    from repro.kernels.pairwise.kernel import greedy_round_pallas
+
+    N, R, d = 90, 2, 48
+    x = _arr((N, d), jnp.float32)
+    c = _arr((R, d), jnp.float32)
+    mind = jnp.asarray(np.abs(rng.normal(size=(N,))) * 10, jnp.float32)
+    sel = jnp.asarray([3, 77], jnp.int32)
+    w = jnp.asarray(np.abs(rng.normal(size=(N,))) + 0.1, jnp.float32)
+    nm_k, ni_k, nv_k = greedy_round_pallas(x, mind, c, sel, w, n_block=32,
+                                           interpret=True)
+    nm_r, ni_r, nv_r = ref.greedy_round_ref(x, mind, c, sel, w)
+    np.testing.assert_allclose(nm_k, nm_r, rtol=1e-4, atol=1e-4)
+    assert int(ni_k) == int(ni_r)
+    np.testing.assert_allclose(nv_k, nv_r, rtol=1e-4, atol=1e-4)
+
+
+def test_greedy_round_no_mask_sentinel():
+    """sel_idx = -1 must mask nothing."""
+    from repro.kernels.pairwise import ref
+    from repro.kernels.pairwise.kernel import greedy_round_pallas
+
+    x = _arr((40, 32), jnp.float32)
+    c = _arr((1, 32), jnp.float32)
+    mind = jnp.full((40,), 1e9, jnp.float32)
+    no_mask = jnp.full((1,), -1, jnp.int32)
+    nm_k, _, _ = greedy_round_pallas(x, mind, c, no_mask, n_block=16,
+                                     interpret=True)
+    np.testing.assert_allclose(nm_k, ref.pairwise_min_dist_ref(x, c),
+                               rtol=1e-4, atol=1e-4)
+    assert np.all(np.asarray(nm_k) >= 0.0)
+
+
+@pytest.mark.parametrize("impl", ["ref", "interpret"])
+def test_warm_start_chunked_matches_oneshot(impl):
+    """Core-Set warm start: chunked multi-center passes == one-shot min."""
+    from repro.kernels.pairwise import ops, ref
+
+    x = _arr((123, 130), jnp.float32)        # d not a multiple of 128
+    cen = _arr((37, 130), jnp.float32)       # M not a multiple of r_block
+    got = ops.warm_start_min_dist(x, cen, impl=impl, r_block=10)
+    np.testing.assert_allclose(got, ref.pairwise_min_dist_ref(x, cen),
+                               rtol=1e-4, atol=1e-4)
+    with ops.track_ops() as stats:
+        ops.warm_start_min_dist(x, cen, impl=impl, r_block=10)
+    assert stats["embedding_reads"] == 4     # ceil(37 / 10) pool passes
+
+
+def test_greedy_round_op_accounting():
+    from repro.kernels.pairwise import ops
+
+    x = _arr((64, 16), jnp.float32)
+    mind = jnp.full((64,), 1e9, jnp.float32)
+    with ops.track_ops() as stats:
+        for i in range(5):
+            mind, nxt, _ = ops.greedy_round(
+                x, mind, x[i][None, :], jnp.asarray([i], jnp.int32),
+                impl="ref")
+    assert stats["embedding_reads"] == 5     # exactly one pool read / round
+
+
 # -------------------------------------------------------- flash attention ----
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
 @pytest.mark.parametrize(

@@ -69,6 +69,25 @@ def test_cache_spill_roundtrip(tmp_path):
     assert c.stats()["spills"] >= 1
 
 
+def test_cache_spill_runs_outside_lock(tmp_path):
+    """Compression + disk writes must never happen while holding the cache
+    lock (readers would stall behind every spill)."""
+    c = EmbeddingCache(max_bytes=4 * 8 * 4, spill_dir=str(tmp_path))
+    lock_held_during_spill = []
+    orig = c._spill
+
+    def spy(key, value):
+        lock_held_during_spill.append(c._lock.locked())
+        orig(key, value)
+
+    c._spill = spy
+    for i in range(10):
+        c.put(f"k{i}", np.full(8, i, np.float32))
+    assert lock_held_during_spill, "expected evictions to spill"
+    assert not any(lock_held_during_spill)
+    assert c.get("k0") is not None                # spilled entries retrievable
+
+
 def test_content_key_stability():
     a = np.arange(12, dtype=np.float32).reshape(3, 4)
     assert content_key(a) == content_key(a.copy())

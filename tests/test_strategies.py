@@ -69,6 +69,83 @@ def test_coreset_avoids_labeled_regions():
     assert np.mean(idx >= 50) >= 0.8       # mostly from region B
 
 
+def _prefusion_k_center_greedy(key, budget, embeddings, init_centers=None):
+    """The pre-fusion reference loop (argmax pass + distance pass + minimum
+    pass + scatter per round), kept verbatim as the parity oracle."""
+    from repro.kernels.pairwise import ref
+    N, _ = embeddings.shape
+    emb = embeddings.astype(jnp.float32)
+    selected = jnp.zeros((budget,), jnp.int32)
+    start = 0
+    if init_centers is not None and init_centers.shape[0] > 0:
+        mindist = ref.pairwise_min_dist_ref(emb,
+                                            init_centers.astype(jnp.float32))
+    else:
+        first = jax.random.randint(key, (), 0, N).astype(jnp.int32)
+        selected = selected.at[0].set(first)
+        mindist = jnp.sum((emb - emb[first]) ** 2, axis=-1).at[first].set(-1.0)
+        start = 1
+
+    def body(i, carry):
+        mindist, selected = carry
+        idx = jnp.argmax(mindist).astype(jnp.int32)
+        selected = selected.at[i].set(idx)
+        d = jnp.sum((emb - emb[idx][None, :]) ** 2, axis=-1)
+        mindist = jnp.minimum(mindist, d).at[idx].set(-1.0)
+        return mindist, selected
+
+    _, selected = jax.lax.fori_loop(start, budget, body, (mindist, selected))
+    return selected
+
+
+@pytest.mark.parametrize("warm", [False, True])
+def test_kcg_matches_prefusion_reference(warm):
+    """Fused k-center greedy must pick the exact same centers as the
+    pre-fusion loop on identical seeds (cold and Core-Set warm start)."""
+    from repro.core.strategies.diversity import k_center_greedy
+    _, emb = _artifacts(300, d=24)
+    init = emb[:13] if warm else None
+    got = np.asarray(k_center_greedy(KEY, 48, emb, init_centers=init))
+    want = np.asarray(_prefusion_k_center_greedy(KEY, 48, emb,
+                                                 init_centers=init))
+    np.testing.assert_array_equal(got, want)
+
+
+@pytest.mark.parametrize("warm", [False, True])
+def test_kcg_interpret_no_duplicates(warm):
+    """Fused Pallas round (interpret mode): budget unique in-range indices,
+    for both the cold-start and warm-start (init_centers) paths."""
+    from repro.core.strategies.diversity import k_center_greedy
+    _, emb = _artifacts(120, d=20)
+    init = emb[:9] if warm else None
+    idx = np.asarray(k_center_greedy(KEY, 32, emb, init_centers=init,
+                                     impl="interpret"))
+    assert idx.shape == (32,)
+    assert len(set(idx.tolist())) == 32
+    assert idx.min() >= 0 and idx.max() < 120
+    ref_idx = np.asarray(k_center_greedy(KEY, 32, emb, init_centers=init,
+                                         impl="ref"))
+    np.testing.assert_array_equal(idx, ref_idx)
+
+
+def test_kmeans_seeding_ignores_unfilled_centroids():
+    """Zero-initialized centroid rows must NOT act as phantom centers at
+    the origin: a cluster sitting near the origin would otherwise never be
+    picked by farthest-point seeding."""
+    from repro.core.strategies.diversity import _kmeans
+    r = np.random.default_rng(3)
+    far = r.normal(size=(40, 8)) * 0.5 + 10.0     # cluster far from origin
+    near = r.normal(size=(40, 8)) * 0.02 + 0.05   # cluster AT the origin
+    x = jnp.asarray(np.concatenate([far, near]), jnp.float32)
+    # huge weight pins the first (random) seed inside the far cluster
+    w = jnp.ones((80,), jnp.float32).at[0].set(1e6)
+    cents = np.asarray(_kmeans(jax.random.PRNGKey(0), x, 2, iters=0,
+                               weights=w))
+    d_near = np.linalg.norm(cents - np.full(8, 0.05), axis=1).min()
+    assert d_near < 1.0, f"seeding never reached the near-origin cluster: " \
+                         f"{d_near}"
+
+
 def test_dbal_diversity():
     """DBAL selections must span clusters even when uncertainty is uniform."""
     from repro.core.strategies.zoo import get_strategy
