@@ -14,19 +14,22 @@ import numpy as np
 
 from benchmarks.common import make_pool, make_server, row
 
-STRATEGIES = ["random", "lc", "mc", "rc", "es", "kcg", "coreset", "dbal"]
+STRATEGIES = ["random", "lc", "mc", "rc", "es", "kcg", "coreset", "dbal",
+              "badge", "margin_density", "weighted_kcenter"]
 
 MICRO_N, MICRO_D, MICRO_B = 4096, 64, 64
 
 
-def _greedy_select(x, budget, round_fn):
+def _greedy_select(x, budget, round_fn, weights=None):
     """Seed with row 0, then ``budget - 1`` greedy rounds driven from
     Python (so op accounting sees every round)."""
     import jax.numpy as jnp
     from repro.kernels.pairwise import ops
     mind = ops.sq_dist_to_center(x, x[0]).at[0].set(-1.0)
     sel = [0]
-    nxt = jnp.argmax(mind).astype(jnp.int32)
+    score = (mind if weights is None
+             else ops.masked_weighted_score(mind, weights))
+    nxt = jnp.argmax(score).astype(jnp.int32)
     for _ in range(budget - 1):
         sel.append(int(nxt))
         mind, nxt, _ = round_fn(x, mind, nxt)
@@ -89,8 +92,43 @@ def run_micro() -> list:
                    f"{(reads['unfused']['hbm_bytes'] - reads['fused']['hbm_bytes']) / 1e6:.1f}"
                    f"|parity={match}/{MICRO_B}"))
 
+    # Weighted hybrid round: the SAME fused pass with per-row uncertainty
+    # weights (the margin_density / weighted_kcenter / BADGE substrate) —
+    # must also cost exactly ONE pool read per selected center.
+    w = jnp.asarray(rng.uniform(0.05, 1.0, size=(MICRO_N,)), jnp.float32)
+
+    def weighted(x, mind, i):
+        return ops.greedy_round(x, mind, x[i][None, :], i[None], weights=w)
+
+    _greedy_select(x, MICRO_B, weighted, weights=w)        # warm up jits
+    with ops.track_ops() as stats:
+        t0 = time.perf_counter()
+        sel_w = _greedy_select(x, MICRO_B, weighted, weights=w)
+        dt_w = time.perf_counter() - t0
+        st_w = dict(stats)
+    wrpc = st_w["embedding_reads"] / MICRO_B
+    if wrpc != 1.0:
+        raise AssertionError(
+            "weighted hybrid round must read the pool exactly once per "
+            f"center, got {wrpc:.2f}")
+    if len(set(sel_w)) != MICRO_B:
+        raise AssertionError("weighted selections are not unique")
+    out.append(row(
+        f"fig4b_micro/greedy_weighted", dt_w * 1e6 / MICRO_B,
+        f"emb_reads_per_center={wrpc:.2f}"
+        f"|vector_streams={st_w['vector_streams']}"
+        f"|hbm_mb={st_w['hbm_bytes'] / 1e6:.1f}"))
+
+    # Autotuned launch blocks for this pool shape (what ops.greedy_round /
+    # warm_start_min_dist use when n_block / r_block are left unset).
+    ch = ops.autotuned_blocks(MICRO_N, MICRO_D, jnp.float32)
+    out.append(row("fig4b_micro/autotune", ch.wall_s * 1e6,
+                   f"n_block={ch.n_block}|r_block={ch.r_block}"
+                   f"|round_hbm_mb={ch.hbm_bytes / 1e6:.2f}"
+                   f"|source={ch.source}"))
+
     # Core-Set warm start: M centers fold into ceil(M / r_block) pool reads
-    M, RB = 512, 256
+    M, RB = 512, ch.r_block
     cen = jnp.asarray(rng.normal(size=(M, MICRO_D)), jnp.float32)
     ops.warm_start_min_dist(x, cen, r_block=RB)   # warm up
     with ops.track_ops() as stats:

@@ -67,7 +67,8 @@ def distributed_top_k(scores: jax.Array, budget: int, mesh: Mesh,
 def distributed_k_center(embeddings: jax.Array, budget: int, mesh: Mesh,
                          axis: str = "data",
                          init_center: Optional[jax.Array] = None,
-                         impl: str = "auto") -> jax.Array:
+                         impl: str = "auto",
+                         weights: Optional[jax.Array] = None) -> jax.Array:
     """Greedy k-center over a data-sharded (N, d) embedding pool.
 
     Per round: all_gather the previous round's (value, global index, vector)
@@ -75,14 +76,23 @@ def distributed_k_center(embeddings: jax.Array, budget: int, mesh: Mesh,
     pass (repro/kernels/pairwise.greedy_round) folds the winning vector into
     the local min-dists, masks the winner on its home shard, and yields the
     next local candidate. Returns (budget,) global indices.
+
+    ``weights`` (optional (N,), sharded like the pool) makes every local
+    pass the *weighted* fused round: local candidates — and therefore the
+    cross-shard argmax, which compares the rounds' returned scores — rank
+    by ``min_dist * weight``. The hybrid strategies ship uncertainty here.
     """
     from repro.kernels.pairwise import ops
     n_dev = mesh.shape[axis]
     N, d = embeddings.shape
     shard = N // n_dev
+    weighted = weights is not None
+    w_arr = (jnp.ones((N,), jnp.float32) if weights is None
+             else weights.astype(jnp.float32))
 
-    def local(emb):
+    def local(emb, wloc):
         emb = emb.reshape(shard, d).astype(jnp.float32)
+        wloc = wloc.reshape(shard)
         base = jax.lax.axis_index(axis) * shard
         sel = jnp.zeros((budget,), jnp.int32)
         start = 0
@@ -97,8 +107,12 @@ def distributed_k_center(embeddings: jax.Array, budget: int, mesh: Mesh,
         if init_center is None:
             on_shard0 = jax.lax.axis_index(axis) == 0
             mind = jnp.where((jnp.arange(shard) == 0) & on_shard0, -1.0, mind)
-        li = jnp.argmax(mind).astype(jnp.int32)
-        lv = mind[li]
+        if weighted:
+            score0 = ops.masked_weighted_score(mind, wloc)
+        else:
+            score0 = mind
+        li = jnp.argmax(score0).astype(jnp.int32)
+        lv = score0[li]
 
         def body(i, carry):
             mind, sel, li, lv = carry
@@ -111,16 +125,18 @@ def distributed_k_center(embeddings: jax.Array, budget: int, mesh: Mesh,
             # never re-pick the winner on its home shard
             is_mine = (cand_i[w] >= base) & (cand_i[w] < base + shard)
             mask = jnp.where(is_mine, cand_i[w] - base, -1).astype(jnp.int32)
-            mind, li, lv = ops.greedy_round(emb, mind, center[None, :],
-                                            mask[None], impl=impl)
+            mind, li, lv = ops.greedy_round(
+                emb, mind, center[None, :], mask[None],
+                weights=wloc if weighted else None, impl=impl)
             return mind, sel, li, lv
 
         _, sel, _, _ = jax.lax.fori_loop(start, budget, body,
                                          (mind, sel, li, lv))
         return sel
 
-    fn = shard_map(local, mesh=mesh, in_specs=P(axis), out_specs=P())
-    return fn(embeddings)
+    fn = shard_map(local, mesh=mesh, in_specs=(P(axis), P(axis)),
+                   out_specs=P())
+    return fn(embeddings, w_arr)
 
 
 def sharded_scores(logits: jax.Array, kind: str, mesh: Mesh,

@@ -38,3 +38,15 @@ def top_k_select(scores: jax.Array, budget: int) -> jax.Array:
     """Indices of the ``budget`` highest scores (higher = more informative)."""
     _, idx = jax.lax.top_k(scores, budget)
     return idx.astype(jnp.int32)
+
+
+def unit_weights(scores: jax.Array, floor: float = 1e-3) -> jax.Array:
+    """Min-max normalize scores into [floor, 1] selection weights.
+
+    The fused greedy round multiplies weights into the argmax score, so
+    they must be non-negative and should not collapse to zero for whole
+    regions — the floor keeps every row eligible (a zero weight would make
+    a far-but-confident point permanently unselectable)."""
+    s = scores.astype(jnp.float32)
+    s = (s - s.min()) / jnp.maximum(s.max() - s.min(), 1e-9)
+    return floor + (1.0 - floor) * s

@@ -17,12 +17,19 @@ from repro.core.strategies.uncertainty import lc_scores
 
 
 def k_center_greedy(rng, budget: int, embeddings, init_centers=None,
-                    impl: str = "auto"):
+                    impl: str = "auto", weights=None):
     """2-approx k-center: repeatedly take the point farthest from all
-    centers. init_centers: (M,d) existing (labeled) centers or None."""
+    centers. init_centers: (M,d) existing (labeled) centers or None.
+
+    ``weights`` (optional (N,) non-negative f32) turns each round into the
+    *weighted* fused pass: the next center maximizes ``min_dist * weight``
+    while the min-dist fold itself stays unweighted — uncertainty decides
+    among the far points, distance still defines "far". ``weights=None``
+    takes the identical unweighted path as before (regression anchor)."""
     from repro.kernels.pairwise import ops
     N, _ = embeddings.shape
     emb = embeddings.astype(jnp.float32)
+    w = None if weights is None else weights.astype(jnp.float32)
     selected = jnp.zeros((budget,), jnp.int32)
     start = 0
     if init_centers is not None and init_centers.shape[0] > 0:
@@ -36,15 +43,20 @@ def k_center_greedy(rng, budget: int, embeddings, init_centers=None,
         selected = selected.at[0].set(first)
         mindist = ops.sq_dist_to_center(emb, emb[first]).at[first].set(-1.0)
         start = 1
-    nxt = jnp.argmax(mindist).astype(jnp.int32)
+    if w is None:
+        nxt = jnp.argmax(mindist).astype(jnp.int32)
+    else:
+        # same masked-score rule as the kernel: selected rows never win
+        nxt = jnp.argmax(ops.masked_weighted_score(mindist, w)).astype(
+            jnp.int32)
 
     def body(i, carry):
         mindist, selected, nxt = carry
         selected = selected.at[i].set(nxt)
         # one fused pool pass: fold the new center in, mask it, get the
-        # following round's argmax
+        # following round's (weighted) argmax
         mindist, nxt, _ = ops.greedy_round(emb, mindist, emb[nxt][None, :],
-                                           nxt[None], impl=impl)
+                                           nxt[None], weights=w, impl=impl)
         return mindist, selected, nxt
 
     _, selected, _ = jax.lax.fori_loop(start, budget, body,

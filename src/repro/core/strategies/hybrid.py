@@ -1,38 +1,63 @@
 """Hybrid strategies (uncertainty x diversity) — beyond the paper's zoo.
 
+All three hybrids ride the SAME fused Pallas substrate as pure k-center
+(repro/kernels/pairwise.greedy_round): one (N, d) pool read per selected
+center, with per-row weights folded into the round's argmax.
+
 BADGE-lite: k-means++ sampling over uncertainty-scaled embeddings — the
 gradient-embedding magnitude of BADGE [2] collapses to (1 - p_max) * h for
 the last-layer bias-free case, which keeps the embedding dimension at d
-instead of V*d (V up to 256k here).
+instead of V*d (V up to 256k here). The D^2 sampling step is a weighted
+fused round via the Gumbel-max trick (see ``kmeans_pp_sample``).
+
+margin_density: weighted k-center greedy where the weight is margin
+uncertainty x local density — uncertain points in dense regions win the
+per-round argmax, min-dist keeps the batch spread out.
+
+weighted_kcenter: k-center greedy with least-confidence weights (and the
+Core-Set warm start when labeled embeddings are attached).
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.strategies.base import Strategy
+from repro.core.strategies.base import Strategy, unit_weights
 from repro.core.strategies.uncertainty import lc_scores, mc_scores
 
 
-def kmeans_pp_sample(rng, x, k: int):
-    """k-means++ seeding AS the selection (BADGE's sampler). x: (N,d)."""
+def kmeans_pp_sample(rng, x, k: int, impl: str = "auto"):
+    """k-means++ seeding AS the selection (BADGE's sampler). x: (N,d).
+
+    D^2 sampling rides the fused greedy round: drawing
+    ``idx ~ Categorical(p ∝ min_dist)`` equals
+    ``argmax(min_dist * exp(gumbel))`` (Gumbel-max trick, exp is monotone),
+    which is exactly the kernel's weighted argmax. Each round is therefore
+    ONE (N, d) pool pass — min-dist fold, selected-row masking, and the
+    next *sample* all in the same read — instead of the separate
+    distance / minimum / scatter / categorical passes of the naive loop.
+    """
     N, _ = x.shape
+    x = x.astype(jnp.float32)
+    from repro.kernels.pairwise import ops
     keys = jax.random.split(rng, k + 1)
     first = jax.random.randint(keys[0], (), 0, N).astype(jnp.int32)
     sel0 = jnp.zeros((k,), jnp.int32).at[0].set(first)
-    d0 = jnp.sum((x - x[first]) ** 2, axis=-1)
+    mind0 = ops.sq_dist_to_center(x, x[first]).at[first].set(-1.0)
+    # sampling weights for pick i are drawn from keys[i]; the round that
+    # folds center i-1 already computes pick i's weighted argmax
+    w1 = jnp.exp(jax.random.gumbel(keys[1], (N,), jnp.float32))
+    nxt0 = jnp.argmax(ops.masked_weighted_score(mind0, w1)).astype(jnp.int32)
 
     def body(i, carry):
-        mind, sel = carry
-        p = mind / jnp.maximum(jnp.sum(mind), 1e-12)
-        idx = jax.random.categorical(keys[i], jnp.log(p + 1e-12)).astype(
-            jnp.int32)
-        sel = sel.at[i].set(idx)
-        nd = jnp.sum((x - x[idx]) ** 2, axis=-1)
-        mind = jnp.minimum(mind, nd).at[idx].set(0.0)
-        return mind, sel
+        mind, sel, nxt = carry
+        sel = sel.at[i].set(nxt)
+        w = jnp.exp(jax.random.gumbel(keys[i + 1], (N,), jnp.float32))
+        mind, nxt, _ = ops.greedy_round(x, mind, x[nxt][None, :], nxt[None],
+                                        weights=w, impl=impl)
+        return mind, sel, nxt
 
-    _, sel = jax.lax.fori_loop(1, k, body, (d0.at[first].set(0.0), sel0))
+    _, sel, _ = jax.lax.fori_loop(1, k, body, (mind0, sel0, nxt0))
     return sel
 
 
@@ -42,20 +67,47 @@ def _badge_select(rng, budget, *, probs, embeddings, labeled_embeddings=None):
     return kmeans_pp_sample(rng, g, budget)
 
 
+def density_scores(rng, embeddings, n_ref: int = 256):
+    """Local density in [0, 1] (higher = denser): negated mean sq-dist to a
+    *random* reference subset, min-max normalized. The subset is drawn with
+    ``rng`` — NOT the first rows, which would make density depend on pool
+    order — so the estimate is permutation-invariant in expectation."""
+    from repro.kernels.pairwise import ops
+    emb = embeddings.astype(jnp.float32)
+    N = emb.shape[0]
+    n_ref = min(n_ref, N)
+    ridx = jax.random.choice(rng, N, (n_ref,), replace=False)
+    d = ops.pairwise_sq_dists(emb, emb[ridx]).mean(-1)
+    return 1.0 - (d - d.min()) / jnp.maximum(d.max() - d.min(), 1e-9)
+
+
 def _margin_density_select(rng, budget, *, probs, embeddings,
                            labeled_embeddings=None):
-    """Margin x local-density: prefer uncertain points in dense regions."""
-    from repro.kernels.pairwise import ops
-    m = mc_scores(probs).astype(jnp.float32)
-    m = (m - m.min()) / jnp.maximum(m.max() - m.min(), 1e-9)
-    # density ~ mean sq-dist to a random reference subset (lower = denser)
-    ref = embeddings[:256].astype(jnp.float32)
-    d = ops.pairwise_sq_dists(embeddings.astype(jnp.float32), ref).mean(-1)
-    dens = 1.0 - (d - d.min()) / jnp.maximum(d.max() - d.min(), 1e-9)
-    from repro.core.strategies.base import top_k_select
-    return top_k_select(m * dens, budget)
+    """Margin x local-density: prefer uncertain points in dense regions.
+
+    Runs as a *weighted fused* k-center greedy: weight = margin x density,
+    so every selection round is one pool pass and the returned batch is
+    diverse instead of the top-k clump of a pure score sort."""
+    from repro.core.strategies.diversity import k_center_greedy
+    k_ref, k_sel = jax.random.split(rng)
+    m = unit_weights(mc_scores(probs))
+    dens = density_scores(k_ref, embeddings)
+    w = unit_weights(m * dens)
+    return k_center_greedy(k_sel, budget, embeddings, weights=w)
+
+
+def _weighted_kcenter_select(rng, budget, *, probs, embeddings,
+                             labeled_embeddings=None):
+    """K-center greedy with least-confidence weights — the canonical
+    uncertainty-weighted diversity strategy on the fused substrate."""
+    from repro.core.strategies.diversity import k_center_greedy
+    w = unit_weights(lc_scores(probs))
+    return k_center_greedy(rng, budget, embeddings,
+                           init_centers=labeled_embeddings, weights=w)
 
 
 badge = Strategy("badge", ("probs", "embeddings"), _badge_select)
 margin_density = Strategy("margin_density", ("probs", "embeddings"),
                           _margin_density_select)
+weighted_kcenter = Strategy("weighted_kcenter", ("probs", "embeddings"),
+                            _weighted_kcenter_select)

@@ -6,7 +6,8 @@ from typing import Dict
 from repro.core.strategies.base import Strategy
 from repro.core.strategies.diversity import (core_set, dbal, k_center,
                                              random_sampling)
-from repro.core.strategies.hybrid import badge, margin_density
+from repro.core.strategies.hybrid import (badge, margin_density,
+                                          weighted_kcenter)
 from repro.core.strategies.uncertainty import (entropy_sampling,
                                                least_confidence,
                                                margin_confidence,
@@ -16,12 +17,16 @@ ZOO: Dict[str, Strategy] = {
     s.name: s for s in [
         least_confidence, margin_confidence, ratio_confidence,
         entropy_sampling, k_center, core_set, dbal, random_sampling,
-        badge, margin_density,
+        badge, margin_density, weighted_kcenter,
     ]
 }
 
 # the 7 candidates PSHEA launches (paper §4.3.3) + lower-bound baseline
 PAPER_SEVEN = ["lc", "mc", "rc", "es", "kcg", "coreset", "dbal"]
+
+# the hybrids every agent may additionally race once the pool has both
+# probs and embeddings — all ride the fused weighted greedy round
+HYBRIDS = ["badge", "margin_density", "weighted_kcenter"]
 
 
 def get_strategy(name: str) -> Strategy:

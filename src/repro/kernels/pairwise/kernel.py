@@ -144,8 +144,13 @@ def _greedy_kernel(x_ref, mind_ref, c_ref, sel_ref, w_ref,
     nm = jnp.where(hit, -1.0, nm)
     nmind_ref[...] = nm
 
+    # Selected (nm < 0) and padded rows are pinned to -BIG *before* the
+    # weight multiply: with -1 * w a zero-weight masked row scores -0.0 and
+    # ties (first-index wins) against legitimate zero-score rows, so a
+    # masked row could win the argmax. -BIG can never tie a real score.
     score = nm * w_ref[...]
-    mval = jnp.where(gid2[:, 0] < n, score, -BIG)       # mask padded rows
+    valid = (gid2[:, 0] < n) & jnp.logical_not(nm < 0.0)
+    mval = jnp.where(valid, score, -BIG)
     bmax_ref[...] = jnp.max(mval).reshape(1)
     barg_ref[...] = (jnp.argmax(mval).astype(jnp.int32)
                      + i * n_block).reshape(1)
@@ -159,12 +164,21 @@ def greedy_round_pallas(x, mind, centers, sel_idx, weights=None, *,
     x: (N, d) pool; mind: (N,) running min sq-dist (selected rows already
     -1); centers: (R, d) newly queued centers; sel_idx: (R,) int32 pool
     indices to mask this round (-1 = no mask); weights: optional (N,)
-    positive weights applied to the argmax score only.
+    non-negative weights applied to the argmax score only — the returned
+    min-dist is never weighted. Selected rows (new or carried-in -1) and
+    padded rows score -BIG, so they cannot win the argmax even against
+    zero-weight or zero-distance rows; exact score ties break to the
+    lowest pool index independent of ``n_block`` (per-block argmax takes
+    the first max in the block, the host reduction the first max block).
 
     Returns ``(new_mind (N,) f32, next_idx () i32, next_score () f32)``.
     """
     N, d = x.shape
     R = centers.shape[0]
+    if sel_idx.shape[0] != R:
+        raise ValueError(
+            f"sel_idx must mask exactly the queued centers: got "
+            f"{sel_idx.shape[0]} indices for {R} centers")
     nb = min(n_block, N)
     nn = -(-N // nb)
     Np = nn * nb

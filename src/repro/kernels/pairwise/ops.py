@@ -15,7 +15,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.pairwise import ref
+from repro.kernels.pairwise import autotune, ref
 from repro.kernels.pairwise.kernel import (BIG, greedy_round_pallas,
                                            pairwise_min_argmin_pallas)
 
@@ -126,11 +126,35 @@ def _greedy_round(x, mind, centers, sel_idx, weights, impl: str,
                                interpret=(impl == "interpret"))
 
 
+def autotuned_blocks(n: int, d: int, dtype=jnp.float32):
+    """The autotuner's cached (n_block, r_block) winner for this shape."""
+    return autotune.autotune_blocks(n, d, dtype)
+
+
+def masked_weighted_score(mind, weights=None):
+    """Host-side mirror of the fused round's argmax score rule: selected
+    rows (mind < 0) pin to -BIG BEFORE the weight multiply. Every pre-loop
+    argmax must use this, never re-derive it — drifting from the kernel's
+    in-round rule is how masked rows leak back into selections."""
+    score = mind if weights is None else mind * weights
+    return jnp.where(mind < 0.0, -BIG, score)
+
+
 def greedy_round(x, mind, centers, sel_idx, weights=None, impl: str = "auto",
-                 n_block: int = 256):
+                 n_block: int | None = None):
     """One fused greedy round: one (N, d) pool read folds the (R, d) queued
     ``centers`` into ``mind``, masks ``sel_idx``, and returns the next
-    (weighted) farthest point. -> (new_mind, next_idx, next_score)."""
+    (weighted) farthest point. -> (new_mind, next_idx, next_score).
+    ``n_block=None`` uses the autotuned block for (N, d, dtype)."""
+    if sel_idx.shape[0] != centers.shape[0]:
+        # enforce the contract on EVERY dispatch path (the ref oracle would
+        # otherwise silently leave queued centers unmasked on CPU)
+        raise ValueError(
+            f"sel_idx must mask exactly the queued centers: got "
+            f"{sel_idx.shape[0]} indices for {centers.shape[0]} centers")
+    if n_block is None:
+        n_block = autotune.autotune_blocks(x.shape[0], x.shape[1],
+                                           x.dtype).n_block
     _record(x, emb_reads=1, vec_streams=2)
     return _greedy_round(x, mind, centers, sel_idx, weights, impl, n_block)
 
@@ -151,10 +175,15 @@ def greedy_round_unfused(x, mind, center, sel_idx):
     return _greedy_round_unfused(x, mind, center, sel_idx)
 
 
-def warm_start_min_dist(x, centers, impl: str = "auto", r_block: int = 256):
+def warm_start_min_dist(x, centers, impl: str = "auto",
+                        r_block: int | None = None):
     """Min sq-dist from every pool row to ANY of (M, d) ``centers`` —
     the Core-Set warm start. Folds up to ``r_block`` centers per fused
-    pass: ceil(M / r_block) pool reads instead of one per center."""
+    pass: ceil(M / r_block) pool reads instead of one per center.
+    ``r_block=None`` uses the autotuned block for (N, d, dtype)."""
+    if r_block is None:
+        r_block = autotune.autotune_blocks(x.shape[0], x.shape[1],
+                                           x.dtype).r_block
     N = x.shape[0]
     M = centers.shape[0]
     mind = jnp.full((N,), BIG, jnp.float32)

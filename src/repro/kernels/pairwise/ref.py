@@ -28,8 +28,16 @@ def pairwise_min_and_argmin_ref(x, c):
     return jnp.min(d, axis=-1), jnp.argmin(d, axis=-1).astype(jnp.int32)
 
 
+BIG = 3.4e38
+
+
 def greedy_round_ref(x, mind, centers, sel_idx, weights=None):
-    """Oracle for ``greedy_round_pallas`` (same contract; see kernel.py)."""
+    """Oracle for ``greedy_round_pallas`` (same contract; see kernel.py).
+
+    Weights only scale the argmax score; selected rows (nm < 0) are pinned
+    to -BIG so they can never win — not even with zero weights, where
+    -1 * 0 would tie legitimate zero-score rows.
+    """
     N = x.shape[0]
     if centers.shape[0] == 1:
         # broadcast-diff beats the matmul identity for a single center and
@@ -42,5 +50,6 @@ def greedy_round_ref(x, mind, centers, sel_idx, weights=None):
     hit = jnp.any(jnp.arange(N)[:, None] == sel_idx[None, :], axis=-1)
     nm = jnp.where(hit, -1.0, nm)
     score = nm if weights is None else nm * weights.astype(jnp.float32)
+    score = jnp.where(nm < 0.0, -BIG, score)
     nxt = jnp.argmax(score).astype(jnp.int32)
     return nm, nxt, score[nxt]

@@ -120,6 +120,39 @@ _COND_RE = re.compile(r"condition=%?([\w.\-]+)")
 _LHS_C_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
 
 
+def _split_operands(operand_str: str) -> List[str]:
+    """Operand names from an HLO operand list.
+
+    Depending on the XLA version, operands print bare (``%a, %b``) or with
+    their full types (``f32[256,256]{1,0} %a, ...``); shapes contain commas,
+    so splitting must track bracket/brace depth, and the name is the LAST
+    token of each top-level part (stripped of ``%``)."""
+    parts: List[str] = []
+    depth = 0
+    cur: List[str] = []
+    for ch in operand_str:
+        if ch in "([{":
+            depth += 1
+        elif ch in ")]}":
+            depth -= 1
+        if ch == "," and depth == 0:
+            parts.append("".join(cur))
+            cur = []
+        else:
+            cur.append(ch)
+    if cur:
+        parts.append("".join(cur))
+    out = []
+    for p in parts:
+        toks = p.split()
+        if not toks:
+            continue
+        name = next((t for t in reversed(toks) if t.startswith("%")),
+                    toks[-1])
+        out.append(name.lstrip("%"))
+    return out
+
+
 def parse_computations(hlo: str) -> Tuple[Dict[str, List[Instr]], Optional[str]]:
     comps: Dict[str, List[Instr]] = {}
     entry = None
@@ -151,9 +184,7 @@ def parse_computations(hlo: str) -> Tuple[Dict[str, List[Instr]], Optional[str]]
                 if depth == 0:
                     break
         operand_str, attrs = rest[:i], rest[i + 1:]
-        operands = [o.strip().lstrip("%") for o in operand_str.split(",")
-                    if o.strip()]
-        operands = [o.split(" ")[0] for o in operands]
+        operands = _split_operands(operand_str)
         elems, byts = _shape_elems_and_bytes(type_str)
         comps[cur].append(Instr(name, type_str, opcode, operands, attrs,
                                 elems, byts, is_root))

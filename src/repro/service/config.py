@@ -113,6 +113,9 @@ class ALServiceConfig:
     cache_spill_dir: Optional[str] = None
     target_accuracy: float = 0.95
     budget_max: int = 10000
+    # PSHEA candidate set: "paper" = the paper's 7; "hybrid" adds the
+    # weighted fused-round strategies (badge/margin_density/weighted_kcenter)
+    auto_candidates: str = "paper"
 
     @classmethod
     def from_dict(cls, d: Dict[str, Any]) -> "ALServiceConfig":
@@ -133,6 +136,7 @@ class ALServiceConfig:
             replicas=int(worker.get("replicas", 1)),
             target_accuracy=float(al.get("target_accuracy", 0.95)),
             budget_max=int(al.get("budget_max", 10000)),
+            auto_candidates=strat.get("candidates", "paper"),
         )
 
     @classmethod

@@ -47,25 +47,52 @@ class StagePipeline:
               for _ in range(len(self.stages) + 1)]
         out: List[Any] = []
         errors: List[BaseException] = []
+        # A mid-stage exception must tear the WHOLE pipeline down: stages
+        # upstream of the failed one would otherwise block forever on their
+        # bounded output queue (the dead stage no longer drains it) and
+        # join() would deadlock. Every blocking put/get is therefore a
+        # short-timeout poll that aborts once the flag is set.
+        abort = threading.Event()
+
+        def put(q: queue.Queue, item) -> bool:
+            while not abort.is_set():
+                try:
+                    q.put(item, timeout=0.05)
+                    return True
+                except queue.Full:
+                    continue
+            return False
+
+        def get(q: queue.Queue):
+            while not abort.is_set():
+                try:
+                    return q.get(timeout=0.05)
+                except queue.Empty:
+                    continue
+            return _SENTINEL
 
         def worker(stage: Stage, qin: queue.Queue, qout: queue.Queue):
             while True:
                 t0 = time.perf_counter()
-                item = qin.get()
+                item = get(qin)
                 stage.stats.wait_s += time.perf_counter() - t0
                 if item is _SENTINEL:
-                    qout.put(_SENTINEL)
+                    put(qout, _SENTINEL)
                     return
                 t0 = time.perf_counter()
                 try:
                     res = stage.fn(item)
                 except BaseException as e:  # propagate to caller
                     errors.append(e)
-                    qout.put(_SENTINEL)
+                    abort.set()
+                    put(qout, _SENTINEL)
                     return
                 stage.stats.busy_s += time.perf_counter() - t0
                 stage.stats.items += 1
-                qout.put(res)
+                if not put(qout, res):
+                    return
+                if abort.is_set():
+                    return
 
         threads = [
             threading.Thread(target=worker, args=(s, qs[i], qs[i + 1]),
@@ -76,22 +103,34 @@ class StagePipeline:
             t.start()
 
         def feeder():
-            for it in items:
-                qs[0].put(it)
-            qs[0].put(_SENTINEL)
+            # the items iterable itself may raise (lazy loaders): that must
+            # abort the pipeline like a stage error, not strand the workers
+            try:
+                for it in items:
+                    if not put(qs[0], it):
+                        return
+            except BaseException as e:
+                errors.append(e)
+                abort.set()
+                return
+            put(qs[0], _SENTINEL)
 
         tf = threading.Thread(target=feeder, daemon=True)
         tf.start()
         while True:
-            item = qs[-1].get()
+            item = get(qs[-1])
             if item is _SENTINEL:
                 break
             out.append(item)
+        abort_was_set = abort.is_set()
+        abort.set()        # release any worker still parked on a full queue
         for t in threads:
             t.join()
         tf.join()
         if errors:
             raise errors[0]
+        if abort_was_set:  # aborted without a recorded error (defensive)
+            raise RuntimeError("pipeline aborted")
         return out
 
     def run_serial(self, items: Iterable[Any]) -> List[Any]:

@@ -22,7 +22,7 @@ import jax
 import numpy as np
 
 from repro.core.agent.controller import run_pshea
-from repro.core.strategies.zoo import PAPER_SEVEN, get_strategy
+from repro.core.strategies.zoo import HYBRIDS, PAPER_SEVEN, get_strategy
 from repro.service.backends import FeatureBackend, HeadState, make_backend
 from repro.service.batcher import DynamicBatcher
 from repro.service.cache import EmbeddingCache, content_key
@@ -169,14 +169,27 @@ class ALServer:
                 "indices": idx.tolist(), "strategy": strategy,
                 "cache": self.cache.stats()}
 
+    def _auto_candidates(self) -> List[str]:
+        """The PSHEA agent's strategy registry: the paper's 7, plus the
+        weighted fused-round hybrids when configured ("hybrid")."""
+        mode = self.config.auto_candidates
+        if mode == "hybrid":
+            return PAPER_SEVEN + HYBRIDS
+        if mode != "paper":
+            # a typo must not silently degrade to the default set
+            raise ValueError(f"auto_candidates must be 'paper' or 'hybrid', "
+                             f"got {mode!r}")
+        return list(PAPER_SEVEN)
+
     def _query_auto(self, budget: int, target_accuracy: float) -> dict:
         """PSHEA (paper Alg. 1) — needs an attached oracle."""
         assert self._oracle is not None, "PSHEA needs attach_oracle(...)"
         server = self
+        candidates = self._auto_candidates()
 
         class Task:
             def __init__(self):
-                self.labeled: Dict[str, List[str]] = {s: [] for s in PAPER_SEVEN}
+                self.labeled: Dict[str, List[str]] = {s: [] for s in candidates}
                 self.rng = 0
 
             def initial_accuracy(self):
@@ -198,9 +211,9 @@ class ALServer:
                 head = server.backend.fit_head(feats, np.asarray(labels))
                 return server.backend.evaluate(*server._eval_set, head)
 
-        n_strats = len(PAPER_SEVEN)
+        n_strats = len(candidates)
         round_budget = max(budget // (2 * n_strats), 1)
-        result = run_pshea(Task(), PAPER_SEVEN,
+        result = run_pshea(Task(), candidates,
                            target_accuracy=target_accuracy,
                            budget_max=budget, round_budget=round_budget)
         return {"strategy": result.best_strategy,

@@ -119,6 +119,35 @@ def test_distributed_kcenter_covers_clusters():
 
 
 @pytest.mark.slow
+def test_distributed_kcenter_weighted():
+    """Weighted distributed k-center: ones-weights reproduce the unweighted
+    selections exactly, and random weights still give unique in-range
+    indices that favor the heavily-weighted region."""
+    out = _run_sub("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.core.selection import distributed_k_center
+        from repro.launch.mesh import make_debug_mesh, set_mesh
+        rng = np.random.default_rng(0)
+        pts = jnp.asarray(rng.normal(size=(256, 16)), jnp.float32)
+        mesh = make_debug_mesh((8,), ("data",))
+        with set_mesh(mesh):
+            base = distributed_k_center(pts, 12, mesh)
+            ones = distributed_k_center(pts, 12, mesh,
+                                        weights=jnp.ones((256,), jnp.float32))
+            w = jnp.asarray(rng.uniform(0.001, 1.0, size=(256,)), jnp.float32)
+            w = w.at[128:].set(w[128:] * 1000.0)   # favor the upper half
+            wsel = distributed_k_center(pts, 12, mesh, weights=w)
+        assert np.array_equal(np.asarray(base), np.asarray(ones)), \\
+            (base, ones)
+        wi = np.asarray(wsel)
+        assert len(set(wi.tolist())) == 12 and wi.min() >= 0 and wi.max() < 256
+        assert np.mean(wi[1:] >= 128) >= 0.7, wi   # seed (idx 0) is unweighted
+        print("KCW_OK")
+    """)
+    assert "KCW_OK" in out
+
+
+@pytest.mark.slow
 def test_compressed_psum_close_to_exact():
     out = _run_sub("""
         import jax, jax.numpy as jnp, numpy as np

@@ -5,6 +5,9 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+# the whole module is the kernel lane: run it alone with `pytest -m interpret`
+pytestmark = pytest.mark.interpret
+
 rng = np.random.default_rng(0)
 
 
@@ -174,6 +177,172 @@ def test_greedy_round_op_accounting():
                 x, mind, x[i][None, :], jnp.asarray([i], jnp.int32),
                 impl="ref")
     assert stats["embedding_reads"] == 5     # exactly one pool read / round
+
+
+# ------------------------------------------ fused round edge cases (PR 2) ----
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+@pytest.mark.parametrize("nblock", [16, 64])
+def test_greedy_round_weighted_random_parity(seed, nblock):
+    """Random weights, N not divisible by n_block: kernel == oracle, with a
+    bit-identical argmax."""
+    from repro.kernels.pairwise import ref
+    from repro.kernels.pairwise.kernel import greedy_round_pallas
+
+    r = np.random.default_rng(seed)
+    N, R, d = 50, 3, 24
+    x = jnp.asarray(r.normal(size=(N, d)), jnp.float32)
+    c = jnp.asarray(r.normal(size=(R, d)), jnp.float32)
+    mind = jnp.asarray(np.abs(r.normal(size=(N,))) * 5, jnp.float32)
+    sel = jnp.asarray(r.choice(N, R, replace=False), jnp.int32)
+    w = jnp.asarray(r.uniform(0.0, 2.0, size=(N,)), jnp.float32)
+    nm_k, ni_k, nv_k = greedy_round_pallas(x, mind, c, sel, w,
+                                           n_block=nblock, interpret=True)
+    nm_r, ni_r, nv_r = ref.greedy_round_ref(x, mind, c, sel, w)
+    np.testing.assert_allclose(nm_k, nm_r, rtol=1e-4, atol=1e-4)
+    assert int(ni_k) == int(ni_r)
+    np.testing.assert_allclose(nv_k, nv_r, rtol=1e-4, atol=1e-4)
+
+
+def test_greedy_round_fully_masked_block():
+    """An ENTIRE n_block of rows is selected this round: the winner must
+    come from the other blocks, never the all-masked one."""
+    from repro.kernels.pairwise.kernel import greedy_round_pallas
+
+    N, d, nb = 48, 32, 16
+    x = _arr((N, d), jnp.float32)
+    sel = jnp.arange(16, 32, dtype=jnp.int32)          # all of block 1
+    c = x[16:32]                                       # fold those 16 centers
+    mind = jnp.full((N,), 1e6, jnp.float32)
+    nm, ni, _ = greedy_round_pallas(x, mind, c, sel, n_block=nb,
+                                    interpret=True)
+    assert not (16 <= int(ni) < 32)
+    np.testing.assert_array_equal(np.asarray(nm)[16:32], -1.0)
+    # centers/sel length mismatch must be a loud error, not silent
+    # mispadding — on the kernel AND on every ops dispatch path (the ref
+    # oracle would otherwise quietly leave queued centers unmasked)
+    from repro.kernels.pairwise import ops
+    with pytest.raises(ValueError):
+        greedy_round_pallas(x, mind, x[:1], sel, n_block=nb, interpret=True)
+    with pytest.raises(ValueError):
+        ops.greedy_round(x, mind, x[:1], sel, impl="ref")
+
+
+@pytest.mark.parametrize("impl_interpret", [False, True])
+def test_greedy_round_all_but_one_selected(impl_interpret):
+    """Every row but one carries the selected -1 marker (or is masked this
+    round): the argmax must return the single live row — even when its
+    weight is ZERO, where the old ``-1 * w`` masking tied at -0.0 and could
+    leak a masked row."""
+    from repro.kernels.pairwise import ref
+    from repro.kernels.pairwise.kernel import greedy_round_pallas
+
+    N, d, live = 40, 16, 23
+    x = _arr((N, d), jnp.float32)
+    c = _arr((1, d), jnp.float32)
+    mind = jnp.full((N,), -1.0, jnp.float32).at[live].set(50.0)
+    sel = jnp.full((1,), -1, jnp.int32)
+    w = jnp.zeros((N,), jnp.float32)                   # zero weights
+    if impl_interpret:
+        _, ni, _ = greedy_round_pallas(x, mind, c, sel, w, n_block=16,
+                                       interpret=True)
+    else:
+        _, ni, _ = ref.greedy_round_ref(x, mind, c, sel, w)
+    assert int(ni) == live
+
+
+def test_greedy_round_zero_weight_masked_row_never_wins():
+    """Masked row 0 with weight 0 scored -0.0 under ``-1 * w`` masking and
+    argmax-tied (first index wins) against legitimate zero-score rows; it
+    must lose now that masked rows pin to -BIG."""
+    from repro.kernels.pairwise import ref
+    from repro.kernels.pairwise.kernel import greedy_round_pallas
+
+    N, d = 24, 16
+    x = _arr((N, d), jnp.float32)
+    x = x.at[5].set(x[0])                              # row 5 duplicates row 0
+    c = x[0][None, :]
+    mind = jnp.full((N,), 1e6, jnp.float32)
+    sel = jnp.zeros((1,), jnp.int32)                   # mask row 0
+    w = jnp.zeros((N,), jnp.float32)                   # all scores 0 or -BIG
+    for got in (greedy_round_pallas(x, mind, c, sel, w, n_block=8,
+                                    interpret=True)[1],
+                ref.greedy_round_ref(x, mind, c, sel, w)[1]):
+        assert int(got) != 0                           # never the masked row
+        assert int(got) == 1                           # first live row ties win
+
+
+@pytest.mark.parametrize("nblock", [8, 16, 32, 64])
+def test_greedy_round_tiebreak_stable_across_n_block(nblock):
+    """Exact score ties must break to the LOWEST pool index for every
+    n_block (per-block argmax takes the first max, the host reduction the
+    first max block) — selections must not depend on the launch tiling."""
+    from repro.kernels.pairwise import ref
+    from repro.kernels.pairwise.kernel import greedy_round_pallas
+
+    N, d = 64, 16
+    base = _arr((N, d), jnp.float32)
+    # rows 9, 27, 58 identical -> identical distance and weight -> 3-way tie
+    x = base.at[27].set(base[9]).at[58].set(base[9])
+    far = base[9] + 100.0                              # make them the winners
+    x = x * 0.01 + 0.0
+    x = x.at[9].set(far).at[27].set(far).at[58].set(far)
+    c = jnp.zeros((1, d), jnp.float32)
+    mind = jnp.full((N,), 1e9, jnp.float32)
+    sel = jnp.full((1,), -1, jnp.int32)
+    w = jnp.ones((N,), jnp.float32)
+    _, ni, _ = greedy_round_pallas(x, mind, c, sel, w, n_block=nblock,
+                                   interpret=True)
+    _, ni_r, _ = ref.greedy_round_ref(x, mind, c, sel, w)
+    assert int(ni) == int(ni_r) == 9
+
+
+# ------------------------------------------------------------- autotuner ----
+def test_autotune_blocks_cached_and_feasible():
+    from repro.kernels.pairwise import autotune
+
+    autotune.clear_cache()
+    ch = autotune.autotune_blocks(4096, 64, jnp.float32, measure=False)
+    assert ch.n_block in autotune.N_BLOCK_CANDIDATES
+    assert ch.r_block in autotune.R_BLOCK_CANDIDATES
+    assert autotune.tile_vmem_bytes(64, 4, ch.n_block, ch.r_block) \
+        <= autotune.VMEM_BUDGET_BYTES
+    assert autotune.autotune_blocks(4096, 64, jnp.float32) is ch  # cached
+    assert (4096, 64, "float32") in autotune.report()
+    # a huge feature dim must force smaller tiles, not blow the budget
+    ch_wide = autotune.autotune_blocks(4096, 8192, jnp.float32, measure=False)
+    assert autotune.tile_vmem_bytes(8192, 4, ch_wide.n_block,
+                                    ch_wide.r_block) \
+        <= autotune.VMEM_BUDGET_BYTES
+    assert ch_wide.n_block <= ch.n_block
+
+
+def test_autotune_model_amortizes_r_block():
+    """Bytes-per-folded-center must be non-increasing in r_block (that is
+    the whole point of the multi-center warm start)."""
+    from repro.kernels.pairwise import autotune
+
+    per_center = [
+        autotune.round_hbm_bytes(4096, 64, 4, 256, rb) / rb
+        for rb in autotune.R_BLOCK_CANDIDATES
+    ]
+    assert all(a >= b for a, b in zip(per_center, per_center[1:]))
+
+
+def test_greedy_round_autotuned_default_matches_ref():
+    """ops.greedy_round with n_block unset (autotuned) stays bit-identical
+    to the oracle on the interpret path."""
+    from repro.kernels.pairwise import ops, ref
+
+    x = _arr((100, 24), jnp.float32)
+    c = _arr((2, 24), jnp.float32)
+    mind = jnp.asarray(np.abs(rng.normal(size=(100,))) * 5, jnp.float32)
+    sel = jnp.asarray([7, 42], jnp.int32)
+    w = jnp.asarray(rng.uniform(0.1, 1.0, size=(100,)), jnp.float32)
+    nm_k, ni_k, _ = ops.greedy_round(x, mind, c, sel, weights=w,
+                                     impl="interpret")
+    nm_r, ni_r, _ = ref.greedy_round_ref(x, mind, c, sel, w)
+    np.testing.assert_allclose(nm_k, nm_r, rtol=1e-4, atol=1e-4)
+    assert int(ni_k) == int(ni_r)
 
 
 # -------------------------------------------------------- flash attention ----

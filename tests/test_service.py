@@ -1,4 +1,5 @@
 """Service layer: pipeline overlap, cache, batcher, config, server, TCP."""
+import threading
 import time
 
 import numpy as np
@@ -46,6 +47,87 @@ def test_pipeline_propagates_errors():
     p = StagePipeline([Stage("b", boom)])
     with pytest.raises(ValueError):
         p.run([1])
+
+
+def test_pipeline_midstage_error_no_deadlock():
+    """A mid-stage exception with bounded queues and many queued items:
+    upstream stages must be torn down (not left blocked on a full queue)
+    and run() must raise the original error instead of deadlocking."""
+    def mid(x):
+        if x == 10:
+            raise ValueError("boom@10")
+        return x
+
+    stages = [Stage("a", lambda x: x), Stage("b", mid),
+              Stage("c", lambda x: x)]
+    p = StagePipeline(stages, max_queue=2)
+    result = {}
+
+    def drive():
+        try:
+            p.run(list(range(200)))
+            result["outcome"] = "returned"
+        except ValueError as e:
+            result["outcome"] = f"raised:{e}"
+        except BaseException as e:  # pragma: no cover - diagnostic
+            result["outcome"] = f"other:{e!r}"
+
+    t = threading.Thread(target=drive, daemon=True)
+    t.start()
+    t.join(timeout=10)
+    assert not t.is_alive(), "pipeline deadlocked after mid-stage exception"
+    assert result["outcome"] == "raised:boom@10"
+
+
+def test_pipeline_feeder_error_no_deadlock():
+    """The items ITERABLE raising mid-iteration (lazy loader hits a bad
+    record) must abort the pipeline like a stage error — not strand the
+    workers waiting on an input queue that will never see a sentinel."""
+    def gen():
+        for i in range(50):
+            if i == 7:
+                raise OSError("bad record")
+            yield i
+
+    p = StagePipeline([Stage("a", lambda x: x)], max_queue=2)
+    result = {}
+
+    def drive():
+        try:
+            p.run(gen())
+            result["outcome"] = "returned"
+        except OSError:
+            result["outcome"] = "raised"
+
+    t = threading.Thread(target=drive, daemon=True)
+    t.start()
+    t.join(timeout=10)
+    assert not t.is_alive(), "pipeline deadlocked after feeder exception"
+    assert result["outcome"] == "raised"
+
+
+def test_pipeline_error_in_last_stage_no_deadlock():
+    """Same, with the FAILING stage at the end: the feeder and both live
+    stages are parked on bounded queues when the error hits."""
+    def last(x):
+        time.sleep(0.001)
+        if x == 5:
+            raise RuntimeError("tail")
+        return x
+
+    p = StagePipeline([Stage("a", lambda x: x), Stage("z", last)],
+                      max_queue=1)
+    done = []
+
+    def drive():
+        with pytest.raises(RuntimeError):
+            p.run(iter(range(500)))
+        done.append(True)
+
+    t = threading.Thread(target=drive, daemon=True)
+    t.start()
+    t.join(timeout=10)
+    assert not t.is_alive() and done
 
 
 # ------------------------------------------------------------------ cache --
@@ -99,6 +181,42 @@ def test_content_key_stability():
 def test_bucket_size():
     assert [bucket_size(n, 64) for n in (1, 2, 3, 5, 33, 64, 200)] == \
         [1, 2, 4, 8, 64, 64, 64]
+
+
+def test_batcher_timeout_flush():
+    """Fewer items than max_batch must still flush once timeout_s elapses —
+    the batcher may not hold a partial batch waiting for a full one."""
+    b = DynamicBatcher(lambda stacked, n: [stacked[i] for i in range(n)],
+                       max_batch=64, timeout_s=0.02)
+    try:
+        t0 = time.perf_counter()
+        futs = [b.submit(np.full(4, i, np.float32)) for i in range(3)]
+        outs = [f.result(timeout=2.0) for f in futs]
+        dt = time.perf_counter() - t0
+        for i, o in enumerate(outs):
+            np.testing.assert_array_equal(o, np.full(4, i, np.float32))
+        assert dt < 1.0, f"timeout flush took {dt:.3f}s"
+        assert b.stats()["batches"] == 1      # one partial batch, one flush
+        assert b.stats()["items"] == 3
+    finally:
+        b.close()
+
+
+def test_batcher_close_serves_pending():
+    """close() with requests still queued must drain them (every future
+    resolves) before the worker thread exits — no dropped work."""
+    def slow(stacked, n):
+        time.sleep(0.02)
+        return [stacked[i] * 2 for i in range(n)]
+
+    b = DynamicBatcher(slow, max_batch=4, timeout_s=0.5)
+    xs = [np.full(4, i, np.float32) for i in range(12)]
+    futs = [b.submit(x) for x in xs]
+    b.close()                                  # pending batches still queued
+    assert not b._thread.is_alive()
+    for i, f in enumerate(futs):
+        assert f.done(), f"future {i} dropped on close"
+        np.testing.assert_array_equal(f.result(timeout=0), xs[i] * 2)
 
 
 def test_batcher_batches_and_results():
@@ -194,6 +312,24 @@ def test_server_pshea_auto(pool):
     assert len(res["eliminated"]) >= 1
     assert res["stop_reason"] in ("budget_exhausted", "target_accuracy",
                                   "converged", "max_rounds")
+
+
+def test_server_pshea_hybrid_registry(pool):
+    """auto_candidates="hybrid" races the weighted fused-round hybrids in
+    the PSHEA agent alongside the paper's seven."""
+    from repro.core.strategies.zoo import HYBRIDS, PAPER_SEVEN
+    X, Y, EX, EY = pool
+    srv = ALServer(ALServiceConfig(batch_size=32, auto_candidates="hybrid"))
+    keys = srv.push_data(list(X))
+    key2y = dict(zip(keys, Y))
+    srv.attach_oracle(lambda ks: [key2y[k] for k in ks], EX, EY)
+    res = srv.query(budget=150, strategy="auto", target_accuracy=0.99)
+    assert res["strategy"] in PAPER_SEVEN + HYBRIDS
+    assert set(res["history"]) == set(PAPER_SEVEN + HYBRIDS)
+    # a candidate-set typo must fail loudly, not degrade to the default
+    bad = ALServer(ALServiceConfig(auto_candidates="hybrids"))
+    with pytest.raises(ValueError):
+        bad._auto_candidates()
 
 
 def test_tcp_roundtrip(pool):

@@ -111,6 +111,7 @@ def test_kcg_matches_prefusion_reference(warm):
     np.testing.assert_array_equal(got, want)
 
 
+@pytest.mark.interpret
 @pytest.mark.parametrize("warm", [False, True])
 def test_kcg_interpret_no_duplicates(warm):
     """Fused Pallas round (interpret mode): budget unique in-range indices,
@@ -126,6 +127,123 @@ def test_kcg_interpret_no_duplicates(warm):
     ref_idx = np.asarray(k_center_greedy(KEY, 32, emb, init_centers=init,
                                          impl="ref"))
     np.testing.assert_array_equal(idx, ref_idx)
+
+
+def _ref_weighted_kcg(key, budget, embeddings, w):
+    """Pure-oracle weighted loop (ref.greedy_round_ref per round) — the
+    parity target for the fused weighted path."""
+    from repro.kernels.pairwise import ref
+    N, _ = embeddings.shape
+    emb = embeddings.astype(jnp.float32)
+    first = jax.random.randint(key, (), 0, N).astype(jnp.int32)
+    mind = jnp.sum((emb - emb[first]) ** 2, axis=-1).at[first].set(-1.0)
+    score = jnp.where(mind < 0.0, -ref.BIG, mind * w)
+    nxt = jnp.argmax(score).astype(jnp.int32)
+    sel = [int(first)]
+    for _ in range(budget - 1):
+        sel.append(int(nxt))
+        mind, nxt, _ = ref.greedy_round_ref(emb, mind, emb[nxt][None, :],
+                                            nxt[None], w)
+    return np.asarray(sel, np.int32)
+
+
+@pytest.mark.parametrize("seed", [0, 3, 11])
+def test_weighted_kcg_matches_ref_loop(seed):
+    """Weighted fused selection must be bit-identical to the pure-oracle
+    weighted loop on the CPU ref path."""
+    from repro.core.strategies.diversity import k_center_greedy
+    r = np.random.default_rng(seed)
+    emb = jnp.asarray(r.normal(size=(180, 20)), jnp.float32)
+    w = jnp.asarray(r.uniform(0.01, 1.0, size=(180,)), jnp.float32)
+    key = jax.random.PRNGKey(seed)
+    got = np.asarray(k_center_greedy(key, 24, emb, weights=w, impl="ref"))
+    want = _ref_weighted_kcg(key, 24, emb, w)
+    np.testing.assert_array_equal(got, want)
+
+
+@pytest.mark.parametrize("warm", [False, True])
+def test_kcg_weights_none_is_unweighted_anchor(warm):
+    """weights=None must reproduce the PR-1 unweighted selections exactly,
+    and all-ones weights must not change them either (the weighted score
+    path degenerates to the unweighted one)."""
+    from repro.core.strategies.diversity import k_center_greedy
+    _, emb = _artifacts(250, d=24)
+    init = emb[:11] if warm else None
+    base = np.asarray(k_center_greedy(KEY, 40, emb, init_centers=init))
+    anchor = np.asarray(_prefusion_k_center_greedy(KEY, 40, emb,
+                                                   init_centers=init))
+    np.testing.assert_array_equal(base, anchor)
+    ones = np.asarray(k_center_greedy(KEY, 40, emb, init_centers=init,
+                                      weights=jnp.ones((250,), jnp.float32)))
+    np.testing.assert_array_equal(base, ones)
+
+
+def test_weighted_kcenter_prefers_uncertain_regions():
+    """weighted_kcenter must spend most of its budget where uncertainty is
+    high while plain k-center splits evenly between the two blobs."""
+    r = np.random.default_rng(9)
+    a = r.normal(size=(60, 12)) + 8.0       # confident region
+    b = r.normal(size=(60, 12)) - 8.0       # uncertain region
+    emb = jnp.asarray(np.concatenate([a, b]), jnp.float32)
+    probs = np.zeros((120, 10))
+    probs[:60, 0] = 0.99; probs[:60, 1:] = 0.01 / 9     # confident
+    probs[60:] = 0.1                                    # maximally uncertain
+    idx = np.asarray(get_strategy("weighted_kcenter").select(
+        KEY, 10, probs=jnp.asarray(probs), embeddings=emb))
+    assert np.mean(idx >= 60) >= 0.7, idx
+
+
+def test_margin_density_budget_and_diversity():
+    """margin_density rides the weighted fused round: unique indices and
+    no top-k clumping (selections must span more than one tight cluster)."""
+    r = np.random.default_rng(4)
+    centers = r.normal(size=(6, 16)) * 15
+    pts = np.concatenate([c + r.normal(size=(40, 16)) * 0.2
+                          for c in centers]).astype(np.float32)
+    lab = np.repeat(np.arange(6), 40)
+    probs, _ = _artifacts(240)
+    idx = np.asarray(get_strategy("margin_density").select(
+        KEY, 12, probs=probs, embeddings=jnp.asarray(pts)))
+    assert len(set(idx.tolist())) == 12
+    assert len(set(lab[idx].tolist())) >= 4      # spans clusters
+
+
+def test_density_scores_permutation_invariant_in_expectation():
+    """The density reference subset is rng-drawn, not embeddings[:256], so
+    E[density] must not depend on pool order: averaging over seeds, the
+    per-row density of a permuted pool matches the permuted density."""
+    from repro.core.strategies.hybrid import density_scores
+    r = np.random.default_rng(2)
+    emb = jnp.asarray(r.normal(size=(300, 12)), jnp.float32)
+    perm = r.permutation(300)
+    emb_p = emb[perm]
+    n_seeds = 30
+    d0 = np.zeros(300)
+    d1 = np.zeros(300)
+    for s in range(n_seeds):
+        d0 += np.asarray(density_scores(jax.random.PRNGKey(s), emb,
+                                        n_ref=64))
+        d1 += np.asarray(density_scores(jax.random.PRNGKey(1000 + s), emb_p,
+                                        n_ref=64))
+    d0, d1 = d0 / n_seeds, d1 / n_seeds
+    # compare the SAME rows: permute the unpermuted estimate
+    corr = np.corrcoef(d0[perm], d1)[0, 1]
+    assert corr > 0.95, corr
+    np.testing.assert_allclose(d0[perm], d1, atol=0.12)
+
+
+def test_badge_kmeanspp_is_d2_sampling():
+    """Gumbel-max fused sampling must behave like D^2 sampling: an isolated
+    far point must be picked as the second center almost always."""
+    from repro.core.strategies.hybrid import kmeans_pp_sample
+    r = np.random.default_rng(6)
+    x = np.asarray(r.normal(size=(100, 8)), np.float32) * 0.01
+    x[77] += 100.0                          # lone far outlier
+    x = jnp.asarray(x)
+    hits = sum(
+        77 in np.asarray(kmeans_pp_sample(jax.random.PRNGKey(s), x, 2))
+        for s in range(30))
+    assert hits >= 28, hits
 
 
 def test_kmeans_seeding_ignores_unfilled_centroids():
