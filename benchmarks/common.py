@@ -19,8 +19,9 @@ def make_pool(seed: int = 0, n: int = POOL_N, noise: float = NOISE):
 
 
 def make_server(X, Y, EX, EY, *, batch_size: int = 32,
-                fetch_latency_s: float = 0.0, push: bool = True):
-    srv = ALServer(ALServiceConfig(batch_size=batch_size),
+                fetch_latency_s: float = 0.0, push: bool = True,
+                **config_kw):
+    srv = ALServer(ALServiceConfig(batch_size=batch_size, **config_kw),
                    fetch_latency_s=fetch_latency_s)
     key2y = {}
     if push:

@@ -1,12 +1,15 @@
 """Benchmark harness — one module per paper table/figure (deliverable d).
 
-Prints ``name,us_per_call,derived`` CSV.
+Prints ``name,us_per_call,derived`` CSV; ``--json PATH`` additionally
+writes the parsed rows as JSON (CI uploads table2's as a workflow
+artifact).
 
   PYTHONPATH=src python -m benchmarks.run [--only table2,fig4a,...]
 """
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import time
 import types
@@ -19,6 +22,8 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma-separated subset of " + ",".join(BENCHES))
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write the rows as JSON to PATH")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else set(BENCHES)
 
@@ -39,18 +44,28 @@ def main() -> None:
     }
     print("name,us_per_call,derived")
     failures = 0
+    records = []
+
+    def emit(line: str):
+        print(line, flush=True)
+        name, us, derived = line.split(",", 2)
+        records.append({"name": name, "us_per_call": float(us),
+                        "derived": derived})
+
     for name in BENCHES:
         if name not in only:
             continue
         t0 = time.perf_counter()
         try:
             for line in mods[name].run():
-                print(line, flush=True)
+                emit(line)
         except Exception as e:  # keep the harness going
             failures += 1
-            print(f"{name}/ERROR,0.0,{type(e).__name__}: {e}", flush=True)
-        print(f"{name}/_wall,{(time.perf_counter()-t0)*1e6:.0f},done",
-              flush=True)
+            emit(f"{name}/ERROR,0.0,{type(e).__name__}: {e}")
+        emit(f"{name}/_wall,{(time.perf_counter()-t0)*1e6:.0f},done")
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"rows": records, "failures": failures}, f, indent=1)
     if failures:
         sys.exit(1)
 

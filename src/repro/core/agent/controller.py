@@ -6,12 +6,21 @@ negative-exponential forecaster on each history, and eliminates the strategy
 with the lowest *predicted* next-round accuracy while more than one remains.
 Stops on: target accuracy reached, budget exhausted, or convergence.
 
+With ``max_workers > 1`` the surviving candidates advance concurrently on a
+thread pool, so a round costs max(candidate) wall clock instead of
+sum(candidate). All cross-strategy state (budget accounting, history,
+forecasts, elimination) is aggregated AFTER the fan-out in the fixed
+candidate order, so a parallel run is bit-identical to the serial schedule —
+provided the task derives any randomness from (strategy, round) rather than
+shared mutable state (the ALServer task does).
+
 The controller is generic over an ``ALTask`` — anything that can select,
 label and train/eval. Concrete tasks: synthetic CIFAR-like (benchmarks),
 LLM-pool scoring (examples/al_train_loop.py).
 """
 from __future__ import annotations
 
+import concurrent.futures as cf
 import dataclasses
 from typing import Dict, List, Optional, Protocol, Sequence
 
@@ -51,7 +60,8 @@ class PSHEAResult:
 def run_pshea(task: ALTask, strategies: Sequence[str], *,
               target_accuracy: float, budget_max: int, round_budget: int,
               max_rounds: int = 32, converge_eps: float = 1e-3,
-              converge_patience: int = 2) -> PSHEAResult:
+              converge_patience: int = 2,
+              max_workers: Optional[int] = None) -> PSHEAResult:
     a0 = task.initial_accuracy()                      # line 5
     a_max = a0                                        # line 6
     live = list(strategies)
@@ -63,36 +73,52 @@ def run_pshea(task: ALTask, strategies: Sequence[str], *,
     stall = 0
     stop = "max_rounds"
 
-    while r < max_rounds:                             # line 10
-        if a_max >= target_accuracy:                  # line 11
-            stop = "target_accuracy"
-            break
-        if b_total >= budget_max:                     # line 12
-            stop = "budget_exhausted"
-            break
-        if stall >= converge_patience:                # line 13
-            stop = "converged"
-            break
+    def advance(s):
+        spent = task.select_and_label(s, round_budget)
+        return spent, task.train_and_eval(s)
 
-        preds = {}
-        for s in live:                                # lines 14-19
-            b_total += task.select_and_label(s, round_budget)
-            acc = task.train_and_eval(s)
-            history[s].append(acc)
-            nxt = predict_next(range(len(history[s])), history[s],
-                               len(history[s]))       # line 17-18
-            preds[s] = nxt
-            predictions[s].append(nxt)
+    pool = None
+    if max_workers and max_workers > 1 and len(live) > 1:
+        pool = cf.ThreadPoolExecutor(
+            max_workers=min(max_workers, len(live)),
+            thread_name_prefix="pshea")
+    try:
+        while r < max_rounds:                         # line 10
+            if a_max >= target_accuracy:              # line 11
+                stop = "target_accuracy"
+                break
+            if b_total >= budget_max:                 # line 12
+                stop = "budget_exhausted"
+                break
+            if stall >= converge_patience:            # line 13
+                stop = "converged"
+                break
 
-        r += 1                                        # line 21
-        new_max = max(h[-1] for h in history.values())  # line 22
-        stall = stall + 1 if new_max - a_max < converge_eps else 0
-        a_max = max(a_max, new_max)
+            if pool is not None and len(live) > 1:    # lines 14-19
+                results = list(pool.map(advance, live))
+            else:
+                results = [advance(s) for s in live]
+            preds = {}
+            for s, (spent, acc) in zip(live, results):
+                b_total += spent
+                history[s].append(acc)
+                nxt = predict_next(range(len(history[s])), history[s],
+                                   len(history[s]))   # line 17-18
+                preds[s] = nxt
+                predictions[s].append(nxt)
 
-        if len(live) > 1:                             # lines 23-24
-            worst = min(live, key=lambda s: preds[s])
-            live.remove(worst)
-            eliminated.append(worst)
+            r += 1                                    # line 21
+            new_max = max(h[-1] for h in history.values())  # line 22
+            stall = stall + 1 if new_max - a_max < converge_eps else 0
+            a_max = max(a_max, new_max)
+
+            if len(live) > 1:                         # lines 23-24
+                worst = min(live, key=lambda s: preds[s])
+                live.remove(worst)
+                eliminated.append(worst)
+    finally:
+        if pool is not None:
+            pool.shutdown(wait=True)
 
     best = max(history, key=lambda s: history[s][-1])
     return PSHEAResult(

@@ -94,6 +94,19 @@ class EmbeddingCache:
         self.misses += 1
         return None
 
+    def require(self, key: str):
+        """``get`` that refuses to return None: a miss (entry evicted with
+        no spill_dir, or never inserted) raises a clear KeyError instead of
+        letting callers feed None into np.stack and crash elsewhere."""
+        val = self.get(key)
+        if val is None:
+            where = ("no spill file found" if self.spill_dir
+                     else "no spill_dir configured")
+            raise KeyError(f"cache entry {key!r} unavailable: evicted from "
+                           f"RAM and {where}; raise cache_bytes or set "
+                           f"cache_spill_dir")
+        return val
+
     def __contains__(self, key: str) -> bool:
         with self._lock:
             if key in self._lru:

@@ -1,9 +1,20 @@
-"""ALClient — the paper's few-LoC client API (Fig. 2):
+"""ALClient — the paper's few-LoC client API (Fig. 2), session-aware:
 
     client = ALClient(local=server)            # in-process
     client = ALClient(url="host:port")         # msgpack TCP
     client.push_data(data_list)
     selected = client.query(budget=10)
+
+Multi-tenant: every client may claim its own server-side session — an
+isolated pool/labels/head — so many clients share one server (and its
+content-addressed embedding cache) without seeing each other's data:
+
+    a = ALClient(url=u, session="new")         # fresh isolated session
+    b = ALClient(url=u, session="new")
+    a.push_data(xs)                            # invisible to b
+
+``session=None`` (default) addresses the server's default session — the
+original single-tenant behaviour.
 """
 from __future__ import annotations
 
@@ -16,63 +27,125 @@ from repro.service.server import ALServer
 
 
 def serve_tcp(server: ALServer, host: str = "127.0.0.1",
-              port: int = 0) -> transport.RPCServer:
+              port: int = 0,
+              max_workers: Optional[int] = None) -> transport.RPCServer:
+    def open_session(p, s, ctx):
+        sid = server.create_session()
+        # remembered per connection: if the client vanishes without
+        # close_session, on_close reclaims the session (and its raw copies)
+        ctx.setdefault("sessions", set()).add(sid)
+        return {"session": sid}
+
+    def close_session(p, s, ctx):
+        server.close_session(s)
+        ctx.get("sessions", set()).discard(s)
+        return {}
+
+    def on_close(ctx):
+        for sid in ctx.get("sessions", ()):
+            server.close_session(sid)
+
     handlers = {
-        "push_data": lambda p: {"keys": server.push_data(list(p["items"]))},
-        "query": lambda p: server.query(
+        "push_data": lambda p, s, c: {
+            "keys": server.push_data(list(p["items"]), session=s)},
+        "query": lambda p, s, c: server.query(
             int(p["budget"]), p.get("strategy"),
-            p.get("target_accuracy")),
-        "label": lambda p: server.label(p["keys"], p["labels"]) or {},
-        "stats": lambda p: server.stats(),
-        "train_eval": lambda p: {"accuracy": server.train_and_eval()},
+            p.get("target_accuracy"), int(p.get("rng_seed") or 0),
+            session=s),
+        "label": lambda p, s, c: server.label(p["keys"], p["labels"],
+                                              session=s) or {},
+        "stats": lambda p, s, c: server.stats(session=s),
+        "train_eval": lambda p, s, c: {
+            "accuracy": server.train_and_eval(session=s)},
+        "open_session": open_session,
+        "close_session": close_session,
     }
-    rpc = transport.RPCServer(handlers, host, port)
+    if max_workers is None:
+        max_workers = server.config.server_workers
+    rpc = transport.RPCServer(handlers, host, port, max_workers=max_workers,
+                              on_close=on_close)
     rpc.start()
     return rpc
 
 
 class ALClient:
     def __init__(self, local: Optional[ALServer] = None,
-                 url: Optional[str] = None):
+                 url: Optional[str] = None,
+                 session: Optional[str] = None):
         assert (local is None) != (url is None), "pass local= xor url="
         self._local = local
         self._rpc = None
+        self._owns_session = False
         if url:
             host, port = url.rsplit(":", 1)
             self._rpc = transport.RPCClient(host, int(port))
+        if session == "new":
+            session = self.open_session()
+        self._session = session
+
+    @property
+    def session(self) -> Optional[str]:
+        return self._session
+
+    def open_session(self) -> str:
+        """Claim a fresh isolated session and address it from now on."""
+        if self._local is not None:
+            sid = self._local.create_session()
+        else:
+            sid = self._rpc.call("open_session")["session"]
+        self._session = sid
+        self._owns_session = True
+        return sid
+
+    def close_session(self):
+        if self._session is None or not self._owns_session:
+            return
+        if self._local is not None:
+            self._local.close_session(self._session)
+        else:
+            self._rpc.call("close_session", session=self._session)
+        self._session = None
+        self._owns_session = False
 
     def push_data(self, data_list: Sequence[np.ndarray],
                   asynchronous: bool = False) -> List[str]:
         if self._local is not None:
-            return self._local.push_data(data_list)
+            return self._local.push_data(data_list, session=self._session)
         return self._rpc.call("push_data",
-                              {"items": [np.asarray(d) for d in data_list]}
-                              )["keys"]
+                              {"items": [np.asarray(d) for d in data_list]},
+                              session=self._session)["keys"]
 
     def query(self, budget: int, strategy: Optional[str] = None,
-              target_accuracy: Optional[float] = None) -> dict:
+              target_accuracy: Optional[float] = None,
+              rng_seed: int = 0) -> dict:
         if self._local is not None:
-            return self._local.query(budget, strategy, target_accuracy)
+            return self._local.query(budget, strategy, target_accuracy,
+                                     rng_seed, session=self._session)
         return self._rpc.call("query", {"budget": budget,
                                         "strategy": strategy,
-                                        "target_accuracy": target_accuracy})
+                                        "target_accuracy": target_accuracy,
+                                        "rng_seed": rng_seed},
+                              session=self._session)
 
     def label(self, keys: Sequence[str], labels: Sequence[int]):
         if self._local is not None:
-            return self._local.label(keys, labels)
+            return self._local.label(keys, labels, session=self._session)
         return self._rpc.call("label", {"keys": list(keys),
-                                        "labels": [int(x) for x in labels]})
+                                        "labels": [int(x) for x in labels]},
+                              session=self._session)
 
     def train_eval(self) -> float:
         if self._local is not None:
-            return self._local.train_and_eval()
-        return self._rpc.call("train_eval")["accuracy"]
+            return self._local.train_and_eval(session=self._session)
+        return self._rpc.call("train_eval",
+                              session=self._session)["accuracy"]
 
     def stats(self) -> dict:
         if self._local is not None:
-            return self._local.stats()
-        return self._rpc.call("stats")
+            return self._local.stats(session=self._session)
+        return self._rpc.call("stats", session=self._session)
 
     def close(self):
+        self.close_session()
         if self._rpc:
             self._rpc.close()

@@ -116,6 +116,14 @@ class ALServiceConfig:
     # PSHEA candidate set: "paper" = the paper's 7; "hybrid" adds the
     # weighted fused-round strategies (badge/margin_density/weighted_kcenter)
     auto_candidates: str = "paper"
+    # PSHEA racing: >1 fans surviving candidates across that many worker
+    # threads per round (bit-identical to serial; 0/1 = serial)
+    pshea_workers: int = 0
+    # memoize (feats, probs) pool artifacts per (pool, head) version
+    artifact_cache: bool = True
+    # hard cap on concurrent TCP client connections (one transport worker
+    # per live connection; extra clients queue until one disconnects)
+    server_workers: int = 16
 
     @classmethod
     def from_dict(cls, d: Dict[str, Any]) -> "ALServiceConfig":
@@ -137,6 +145,9 @@ class ALServiceConfig:
             target_accuracy=float(al.get("target_accuracy", 0.95)),
             budget_max=int(al.get("budget_max", 10000)),
             auto_candidates=strat.get("candidates", "paper"),
+            pshea_workers=int(al.get("pshea_workers", 0)),
+            artifact_cache=bool(al.get("artifact_cache", True)),
+            server_workers=int(worker.get("workers", 16)),
         )
 
     @classmethod

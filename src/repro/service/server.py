@@ -1,4 +1,12 @@
-"""ALServer — the paper's AL-as-a-service backend (Fig. 1).
+"""ALServer — the paper's AL-as-a-service backend (Fig. 1), multi-tenant.
+
+One ``ALServer`` owns the *shared* resources — scorer backend, the
+content-addressed ``EmbeddingCache``, config — and hosts many independent
+``ALSession`` objects (one per client/tenant). A session carries everything
+that used to be server-global: the pool key list, raw copies, labels, the
+trained head, the oracle, and a versioned pool-artifact cache. Content
+addressing makes sharing the embedding cache across sessions safe: two
+tenants pushing the same sample compute its features once.
 
 Data path (stage-level pipeline, Fig. 3c):
   fetch (URI/bytes -> raw)  ->  preprocess  ->  infer (batched features via
@@ -7,7 +15,15 @@ Data path (stage-level pipeline, Fig. 3c):
 Query path:
   strategy != "auto": run one zoo strategy over the pooled artifacts.
   strategy == "auto": run the PSHEA agent (performance predictor + successive
-  halving) against the attached oracle, per paper Alg. 1.
+  halving) against the attached oracle, per paper Alg. 1. With
+  ``pshea_workers > 1`` the surviving candidates race on a thread pool, so a
+  round costs max(candidate) instead of sum(candidate); per-(strategy, round)
+  rng streams keep the parallel schedule bit-identical to the serial one.
+
+Pool artifacts ((feats, probs) over the full pool) are memoized per session
+keyed on (pool_version, head_version) and invalidated by push_data / label /
+train_and_eval — so PSHEA's 7-10 candidates share ONE artifact build per
+round instead of re-stacking the pool per candidate.
 
 The server is usable in-process (ALClient(local=server)) or over the msgpack
 TCP transport in transport.py (gRPC stand-in; see DESIGN.md).
@@ -16,6 +32,8 @@ from __future__ import annotations
 
 import threading
 import time
+import uuid
+import zlib
 from typing import Callable, Dict, List, Optional, Sequence
 
 import jax
@@ -29,8 +47,259 @@ from repro.service.cache import EmbeddingCache, content_key
 from repro.service.config import ALServiceConfig
 from repro.service.pipeline import Stage, StagePipeline
 
+DEFAULT_SESSION = "default"
+
+
+def _strategy_seed(strategy: str, round_index: int) -> int:
+    """Deterministic per-(strategy, round) rng stream. Independent of how
+    many candidates are live and of the order they execute in — the property
+    that makes parallel PSHEA bit-identical to the serial schedule."""
+    return zlib.crc32(f"{strategy}/{round_index}".encode())
+
+
+class ALSession:
+    """Per-tenant AL state: pool, labels, head, oracle, artifact cache."""
+
+    def __init__(self, server: "ALServer", session_id: str):
+        self.server = server
+        self.session_id = session_id
+        self._keys: List[str] = []
+        self._raw: Dict[str, np.ndarray] = {}
+        self._labels: Dict[str, int] = {}
+        self._labeled_keys: List[str] = []
+        self._head: Optional[HeadState] = None
+        self._eval_set: Optional[tuple] = None
+        self._oracle: Optional[Callable[[Sequence[str]], Sequence[int]]] = None
+        self._lock = threading.RLock()
+        self.last_pipeline_stats = None
+        # -- versioned pool-artifact cache ------------------------------
+        # (feats, probs) over the FULL pool, keyed on (pool_version,
+        # head_version). pool_version bumps on push_data AND label (label
+        # is conservative: it changes the unlabeled set, not the artifact
+        # itself); head_version bumps on train_and_eval.
+        self.pool_version = 0
+        self.head_version = 0
+        self.artifact_builds = 0           # counts _build_artifacts calls
+        self._artifact = None              # ((pv, hv), keys, feats, probs, idx)
+        self._artifact_lock = threading.Lock()
+
+    # ------------------------------------------------------------- data --
+    def push_data(self, items: Sequence[np.ndarray],
+                  pipelined: bool = True) -> List[str]:
+        keys = [content_key(np.asarray(it)) for it in items]
+        todo = [(k, it) for k, it in zip(keys, items)
+                if k not in self.server.cache]
+        with self._lock:
+            new = False
+            for k, it in zip(keys, items):
+                if k not in self._raw:
+                    self._raw[k] = np.asarray(it)
+                    self._keys.append(k)
+                    new = True
+            if new:
+                self.pool_version += 1
+        if todo:
+            self.last_pipeline_stats = self.server._process(
+                todo, pipelined=pipelined)
+        return keys
+
+    # ------------------------------------------------------ label/oracle --
+    def attach_oracle(self, oracle: Callable[[Sequence[str]], Sequence[int]],
+                      eval_x: np.ndarray, eval_y: np.ndarray):
+        """Oracle = the paper's human annotator; eval set scores rounds."""
+        backend = self.server.backend
+        self._oracle = oracle
+        ex = backend.preprocess(np.asarray(eval_x))
+        self._eval_set = (backend.features(ex), np.asarray(eval_y))
+
+    def label(self, keys: Sequence[str], labels: Sequence[int]):
+        with self._lock:
+            changed = False
+            for k, y in zip(keys, labels):
+                if k not in self._labels:
+                    self._labels[k] = int(y)
+                    self._labeled_keys.append(k)
+                    changed = True
+            if changed:
+                self.pool_version += 1
+
+    # --------------------------------------------------------- artifacts --
+    def _feats_for(self, keys: Sequence[str]) -> np.ndarray:
+        """Features for ``keys``, recomputing entries the EmbeddingCache
+        evicted (tiny cache_bytes + no spill_dir) from the session's raw
+        copies instead of feeding None into np.stack."""
+        cache = self.server.cache
+        out: Dict[str, np.ndarray] = {}
+        missing: List[str] = []
+        for k in keys:
+            v = cache.get(k)
+            if v is None:
+                missing.append(k)
+            else:
+                out[k] = v
+        if missing:
+            for k in missing:
+                if k not in self._raw:
+                    cache.require(k)   # no raw copy: canonical KeyError
+            backend = self.server.backend
+            raw = np.stack([np.asarray(self._raw[k]) for k in missing])
+            feats = backend.features(backend.preprocess(raw))
+            for k, f in zip(missing, feats):
+                f = np.asarray(f)
+                cache.put(k, f)
+                out[k] = f
+        return np.stack([out[k] for k in keys])
+
+    def _build_artifacts(self):
+        keys = list(self._keys)
+        feats = self._feats_for(keys)
+        head = self._head or self.server.backend.init_head()
+        probs = self.server.backend.probs(feats, head)
+        index = {k: i for i, k in enumerate(keys)}
+        self.artifact_builds += 1
+        return keys, feats, probs, index
+
+    def _pool_artifacts(self):
+        """(keys, feats, probs, key->row) over the FULL pool; memoized on
+        (pool_version, head_version) when config.artifact_cache is set. The
+        build runs under a lock so racing PSHEA candidates share one build
+        instead of stampeding."""
+        if not self.server.config.artifact_cache:
+            return self._build_artifacts()
+        with self._artifact_lock:
+            version = (self.pool_version, self.head_version)
+            if self._artifact is None or self._artifact[0] != version:
+                self._artifact = (version,) + self._build_artifacts()
+            return self._artifact[1:]
+
+    def train_and_eval(self) -> float:
+        keys = list(self._labeled_keys)
+        if not keys:
+            return 0.0
+        backend = self.server.backend
+        feats = self._feats_for(keys)
+        labels = np.asarray([self._labels[k] for k in keys])
+        with self._lock:
+            self._head = backend.fit_head(feats, labels, head=None)
+            self.head_version += 1
+        if self._eval_set is None:  # no eval set: train-set accuracy proxy
+            return backend.evaluate(feats, labels, self._head)
+        return backend.evaluate(*self._eval_set, self._head)
+
+    # ------------------------------------------------------------- query --
+    def query(self, budget: int, strategy: Optional[str] = None,
+              target_accuracy: Optional[float] = None, rng_seed: int = 0,
+              pshea_workers: Optional[int] = None) -> dict:
+        config = self.server.config
+        strategy = strategy or config.strategy
+        with self._lock:   # consistent (pool, labels) snapshot
+            unlabeled = [k for k in self._keys if k not in self._labels]
+        if strategy != "auto":
+            return self._query_one(unlabeled, budget, strategy, rng_seed)
+        workers = (config.pshea_workers
+                   if pshea_workers is None else pshea_workers)
+        return self._query_auto(budget,
+                                target_accuracy or config.target_accuracy,
+                                workers)
+
+    def _query_one(self, unlabeled, budget, strategy, rng_seed) -> dict:
+        strat = get_strategy(strategy)
+        keys_all, feats_all, probs_all, index = self._pool_artifacts()
+        # a concurrent push_data may have appended keys after this query's
+        # artifact version was pinned; score only what the artifact covers
+        # (the query ordered before the push)
+        unlabeled = [k for k in unlabeled if k in index]
+        budget = min(budget, len(unlabeled))
+        rows = np.asarray([index[k] for k in unlabeled], np.int64)
+        feats = feats_all[rows]
+        probs = probs_all[rows]
+        labeled_emb = None
+        if self._labeled_keys:
+            lab_rows = [index[k] for k in self._labeled_keys if k in index]
+            if lab_rows:
+                labeled_emb = feats_all[np.asarray(lab_rows, np.int64)]
+        import jax.numpy as jnp
+        idx = strat.select(
+            jax.random.PRNGKey(rng_seed), budget,
+            probs=jnp.asarray(probs) if "probs" in strat.needs else None,
+            embeddings=jnp.asarray(feats) if "embeddings" in strat.needs else None,
+            labeled_embeddings=(jnp.asarray(labeled_emb)
+                                if labeled_emb is not None else None))
+        idx = np.asarray(idx)
+        return {"keys": [unlabeled[i] for i in idx],
+                "indices": idx.tolist(), "strategy": strategy,
+                "cache": self.server.cache.stats()}
+
+    def _query_auto(self, budget: int, target_accuracy: float,
+                    workers: int) -> dict:
+        """PSHEA (paper Alg. 1) — needs an attached oracle."""
+        assert self._oracle is not None, "PSHEA needs attach_oracle(...)"
+        session = self
+        candidates = self.server._auto_candidates()
+
+        class Task:
+            """One independent AL line per strategy. Thread-safe: each
+            strategy only touches its own labeled list + round counter, and
+            the rng stream is a pure function of (strategy, round)."""
+
+            def __init__(self):
+                self.labeled: Dict[str, List[str]] = {s: [] for s in candidates}
+                self.round: Dict[str, int] = {s: 0 for s in candidates}
+
+            def initial_accuracy(self):
+                return (session.train_and_eval()
+                        if session._labeled_keys else 0.1)
+
+            def select_and_label(self, strategy, round_budget):
+                self.round[strategy] += 1
+                pool = [k for k in session._keys
+                        if k not in self.labeled[strategy]]
+                res = session._query_one(
+                    pool, round_budget, strategy,
+                    _strategy_seed(strategy, self.round[strategy]))
+                keys = res["keys"]
+                self.labeled[strategy].extend(keys)
+                return len(keys)
+
+            def train_and_eval(self, strategy):
+                keys = self.labeled[strategy]
+                labels = session._oracle(keys)
+                feats = session._feats_for(keys)
+                head = session.server.backend.fit_head(
+                    feats, np.asarray(labels))
+                return session.server.backend.evaluate(
+                    *session._eval_set, head)
+
+        n_strats = len(candidates)
+        round_budget = max(budget // (2 * n_strats), 1)
+        result = run_pshea(Task(), candidates,
+                           target_accuracy=target_accuracy,
+                           budget_max=budget, round_budget=round_budget,
+                           max_workers=workers)
+        return {"strategy": result.best_strategy,
+                "accuracy": result.best_accuracy,
+                "stop_reason": result.stop_reason,
+                "rounds": result.rounds,
+                "eliminated": result.eliminated,
+                "history": result.history,
+                "budget_spent": result.budget_spent}
+
+    # -------------------------------------------------------------- misc --
+    def stats(self) -> dict:
+        return {"pool": len(self._keys), "labeled": len(self._labeled_keys),
+                "pool_version": self.pool_version,
+                "head_version": self.head_version,
+                "artifact_builds": self.artifact_builds,
+                "pipeline": self.last_pipeline_stats}
+
 
 class ALServer:
+    """Hosts many ``ALSession`` tenants over one backend + embedding cache.
+
+    All per-pool methods take ``session=`` (a session id from
+    ``create_session``); omitted, they address the always-present default
+    session — the original single-tenant API keeps working verbatim."""
+
     def __init__(self, config: Optional[ALServiceConfig] = None,
                  config_path: Optional[str] = None,
                  backend: Optional[FeatureBackend] = None,
@@ -45,32 +314,39 @@ class ALServer:
                                     config.cache_spill_dir)
         self.fetch_fn = fetch_fn or (lambda x: x)
         self.fetch_latency_s = fetch_latency_s
-        self._keys: List[str] = []
-        self._raw: Dict[str, np.ndarray] = {}
-        self._labels: Dict[str, int] = {}
-        self._labeled_keys: List[str] = []
-        self._head: Optional[HeadState] = None
-        self._eval_set: Optional[tuple] = None
-        self._oracle: Optional[Callable[[Sequence[str]], Sequence[int]]] = None
-        self._lock = threading.Lock()
-        self.last_pipeline_stats = None
+        self._sessions: Dict[str, ALSession] = {}
+        self._sessions_lock = threading.Lock()
+        self.create_session(DEFAULT_SESSION)
 
-    # ------------------------------------------------------------- data --
-    def push_data(self, items: Sequence[np.ndarray],
-                  pipelined: bool = True) -> List[str]:
-        """Ingest unlabeled pool items through the stage pipeline; returns
-        content keys. Cached items skip preprocessing+inference entirely."""
-        keys = [content_key(np.asarray(it)) for it in items]
-        todo = [(k, it) for k, it in zip(keys, items) if k not in self.cache]
-        with self._lock:
-            for k, it in zip(keys, items):
-                if k not in self._raw:
-                    self._raw[k] = np.asarray(it)
-                    self._keys.append(k)
-        if todo:
-            self._process(todo, pipelined=pipelined)
-        return keys
+    # ---------------------------------------------------------- sessions --
+    def create_session(self, session_id: Optional[str] = None) -> str:
+        sid = session_id or uuid.uuid4().hex[:16]
+        with self._sessions_lock:
+            if sid in self._sessions:
+                raise ValueError(f"session {sid!r} already exists")
+            self._sessions[sid] = ALSession(self, sid)
+        return sid
 
+    def session(self, session_id: Optional[str] = None) -> ALSession:
+        sid = session_id or DEFAULT_SESSION
+        with self._sessions_lock:
+            try:
+                return self._sessions[sid]
+            except KeyError:
+                raise KeyError(f"unknown session {sid!r}; call "
+                               f"create_session() first") from None
+
+    def close_session(self, session_id: str) -> None:
+        if session_id == DEFAULT_SESSION:
+            raise ValueError("the default session cannot be closed")
+        with self._sessions_lock:
+            self._sessions.pop(session_id, None)
+
+    def session_ids(self) -> List[str]:
+        with self._sessions_lock:
+            return list(self._sessions)
+
+    # -------------------------------------------- shared feature pipeline --
     def _process(self, todo, *, pipelined: bool, chunk: int = 64):
         bs = max(self.config.batch_size, 1)
         batcher = DynamicBatcher(self._infer_batch, max_batch=bs)
@@ -95,79 +371,17 @@ class ALServer:
         pipe = StagePipeline(stages)
         chunks = [todo[i:i + chunk] for i in range(0, len(todo), chunk)]
         runner = pipe.run if pipelined else pipe.run_serial
-        for out in runner(chunks):
-            for k, f in out:
-                self.cache.put(k, np.asarray(f))
-        self.last_pipeline_stats = pipe.stats()
-        batcher.close()
+        try:
+            for out in runner(chunks):
+                for k, f in out:
+                    self.cache.put(k, np.asarray(f))
+        finally:
+            batcher.close()
+        return pipe.stats()
 
     def _infer_batch(self, stacked: np.ndarray, n_valid: int):
         feats = self.backend.features(stacked)
         return [feats[i] for i in range(n_valid)]
-
-    # ------------------------------------------------------- label/oracle --
-    def attach_oracle(self, oracle: Callable[[Sequence[str]], Sequence[int]],
-                      eval_x: np.ndarray, eval_y: np.ndarray):
-        """Oracle = the paper's human annotator; eval set scores rounds."""
-        self._oracle = oracle
-        ex = self.backend.preprocess(np.asarray(eval_x))
-        self._eval_set = (self.backend.features(ex), np.asarray(eval_y))
-
-    def label(self, keys: Sequence[str], labels: Sequence[int]):
-        with self._lock:
-            for k, y in zip(keys, labels):
-                if k not in self._labels:
-                    self._labels[k] = int(y)
-                    self._labeled_keys.append(k)
-
-    # --------------------------------------------------------- artifacts --
-    def _pool_artifacts(self, keys: Sequence[str]):
-        feats = np.stack([self.cache.get(k) for k in keys])
-        head = self._head or self.backend.init_head()
-        probs = self.backend.probs(feats, head)
-        return feats, probs
-
-    def train_and_eval(self) -> float:
-        keys = list(self._labeled_keys)
-        if not keys:
-            return 0.0
-        feats = np.stack([self.cache.get(k) for k in keys])
-        labels = np.asarray([self._labels[k] for k in keys])
-        self._head = self.backend.fit_head(feats, labels, head=None)
-        if self._eval_set is None:  # no eval set: train-set accuracy proxy
-            return self.backend.evaluate(feats, labels, self._head)
-        return self.backend.evaluate(*self._eval_set, self._head)
-
-    # ------------------------------------------------------------- query --
-    def query(self, budget: int, strategy: Optional[str] = None,
-              target_accuracy: Optional[float] = None,
-              rng_seed: int = 0) -> dict:
-        strategy = strategy or self.config.strategy
-        unlabeled = [k for k in self._keys if k not in self._labels]
-        if strategy != "auto":
-            return self._query_one(unlabeled, budget, strategy, rng_seed)
-        return self._query_auto(budget, target_accuracy
-                                or self.config.target_accuracy)
-
-    def _query_one(self, unlabeled, budget, strategy, rng_seed) -> dict:
-        budget = min(budget, len(unlabeled))
-        strat = get_strategy(strategy)
-        feats, probs = self._pool_artifacts(unlabeled)
-        labeled_emb = None
-        if self._labeled_keys:
-            labeled_emb = np.stack(
-                [self.cache.get(k) for k in self._labeled_keys])
-        import jax.numpy as jnp
-        idx = strat.select(
-            jax.random.PRNGKey(rng_seed), budget,
-            probs=jnp.asarray(probs) if "probs" in strat.needs else None,
-            embeddings=jnp.asarray(feats) if "embeddings" in strat.needs else None,
-            labeled_embeddings=(jnp.asarray(labeled_emb)
-                                if labeled_emb is not None else None))
-        idx = np.asarray(idx)
-        return {"keys": [unlabeled[i] for i in idx],
-                "indices": idx.tolist(), "strategy": strategy,
-                "cache": self.cache.stats()}
 
     def _auto_candidates(self) -> List[str]:
         """The PSHEA agent's strategy registry: the paper's 7, plus the
@@ -181,50 +395,36 @@ class ALServer:
                              f"got {mode!r}")
         return list(PAPER_SEVEN)
 
-    def _query_auto(self, budget: int, target_accuracy: float) -> dict:
-        """PSHEA (paper Alg. 1) — needs an attached oracle."""
-        assert self._oracle is not None, "PSHEA needs attach_oracle(...)"
-        server = self
-        candidates = self._auto_candidates()
+    # --------------------------------------- single-tenant facade (compat) --
+    def push_data(self, items: Sequence[np.ndarray], pipelined: bool = True,
+                  session: Optional[str] = None) -> List[str]:
+        return self.session(session).push_data(items, pipelined=pipelined)
 
-        class Task:
-            def __init__(self):
-                self.labeled: Dict[str, List[str]] = {s: [] for s in candidates}
-                self.rng = 0
+    def attach_oracle(self, oracle: Callable[[Sequence[str]], Sequence[int]],
+                      eval_x: np.ndarray, eval_y: np.ndarray,
+                      session: Optional[str] = None):
+        return self.session(session).attach_oracle(oracle, eval_x, eval_y)
 
-            def initial_accuracy(self):
-                return server.train_and_eval() if server._labeled_keys else 0.1
+    def label(self, keys: Sequence[str], labels: Sequence[int],
+              session: Optional[str] = None):
+        return self.session(session).label(keys, labels)
 
-            def select_and_label(self, strategy, round_budget):
-                self.rng += 1
-                pool = [k for k in server._keys
-                        if k not in self.labeled[strategy]]
-                res = server._query_one(pool, round_budget, strategy, self.rng)
-                keys = res["keys"]
-                self.labeled[strategy].extend(keys)
-                return len(keys)
+    def train_and_eval(self, session: Optional[str] = None) -> float:
+        return self.session(session).train_and_eval()
 
-            def train_and_eval(self, strategy):
-                keys = self.labeled[strategy]
-                labels = server._oracle(keys)
-                feats = np.stack([server.cache.get(k) for k in keys])
-                head = server.backend.fit_head(feats, np.asarray(labels))
-                return server.backend.evaluate(*server._eval_set, head)
+    def query(self, budget: int, strategy: Optional[str] = None,
+              target_accuracy: Optional[float] = None, rng_seed: int = 0,
+              session: Optional[str] = None,
+              pshea_workers: Optional[int] = None) -> dict:
+        return self.session(session).query(budget, strategy, target_accuracy,
+                                           rng_seed, pshea_workers)
 
-        n_strats = len(candidates)
-        round_budget = max(budget // (2 * n_strats), 1)
-        result = run_pshea(Task(), candidates,
-                           target_accuracy=target_accuracy,
-                           budget_max=budget, round_budget=round_budget)
-        return {"strategy": result.best_strategy,
-                "accuracy": result.best_accuracy,
-                "stop_reason": result.stop_reason,
-                "eliminated": result.eliminated,
-                "history": result.history,
-                "budget_spent": result.budget_spent}
+    @property
+    def last_pipeline_stats(self):
+        return self.session().last_pipeline_stats
 
-    # -------------------------------------------------------------- misc --
-    def stats(self) -> dict:
-        return {"pool": len(self._keys), "labeled": len(self._labeled_keys),
-                "cache": self.cache.stats(),
-                "pipeline": self.last_pipeline_stats}
+    def stats(self, session: Optional[str] = None) -> dict:
+        s = self.session(session).stats()
+        s["cache"] = self.cache.stats()
+        s["sessions"] = len(self.session_ids())
+        return s

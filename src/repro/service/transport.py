@@ -1,10 +1,20 @@
 """msgpack-over-TCP transport (offline stand-in for the paper's gRPC).
 
 Framing: 4-byte big-endian length + msgpack blob. numpy arrays are encoded
-as {"__nd__": True, "d": dtype, "s": shape, "b": bytes}.
+as {"__nd__": True, "d": dtype, "s": shape, "b": bytes}. Every request may
+carry a ``session`` id, delivered to the handler as its second argument —
+the multi-tenant hook the AL service uses to address per-client pools; a
+per-connection ``ctx`` dict (third argument) lets handlers park state that
+must be reclaimed when the connection dies (``on_close(ctx)``).
+
+Connections are served from a bounded thread pool: one worker per LIVE
+connection, so ``max_workers`` is a hard cap on concurrent clients — client
+max_workers+1 queues until another disconnects, it is not interleaved
+per-request. Size it for the expected tenant count.
 """
 from __future__ import annotations
 
+import concurrent.futures as cf
 import socket
 import struct
 import threading
@@ -58,22 +68,31 @@ def _recv_exact(sock, n):
 
 
 class RPCServer:
-    """Serve a dict of op -> handler(payload) over TCP."""
+    """Serve a dict of op -> handler(payload, session, ctx) over TCP."""
 
-    def __init__(self, handlers: Dict[str, Callable], host: str, port: int):
+    def __init__(self, handlers: Dict[str, Callable], host: str, port: int,
+                 max_workers: int = 16,
+                 on_close: Callable[[dict], None] = None):
         self.handlers = handlers
         self.host, self.port = host, port
+        self.max_workers = max(int(max_workers), 1)
+        self.on_close = on_close
         self._sock: socket.socket = None
         self._stop = threading.Event()
         self._thread: threading.Thread = None
+        self._pool: cf.ThreadPoolExecutor = None
+        self._conns: set = set()
+        self._conns_lock = threading.Lock()
 
     def start(self) -> int:
         self._sock = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
         self._sock.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
         self._sock.bind((self.host, self.port))
         self.port = self._sock.getsockname()[1]
-        self._sock.listen(16)
+        self._sock.listen(self.max_workers)
         self._sock.settimeout(0.2)
+        self._pool = cf.ThreadPoolExecutor(max_workers=self.max_workers,
+                                           thread_name_prefix="rpc")
         self._thread = threading.Thread(target=self._loop, daemon=True)
         self._thread.start()
         return self.port
@@ -84,36 +103,66 @@ class RPCServer:
                 conn, _ = self._sock.accept()
             except socket.timeout:
                 continue
-            threading.Thread(target=self._handle, args=(conn,),
-                             daemon=True).start()
+            with self._conns_lock:
+                self._conns.add(conn)
+            self._pool.submit(self._handle, conn)
         self._sock.close()
 
     def _handle(self, conn):
-        with conn:
-            while True:
-                msg = recv_msg(conn)
-                if msg is None:
-                    return
-                op = msg.get("op")
-                try:
-                    fn = self.handlers[op]
-                    result = fn(msg.get("payload") or {})
-                    send_msg(conn, {"ok": True, "result": result})
-                except Exception as e:
-                    send_msg(conn, {"ok": False, "error": repr(e)})
+        # one pool worker per live connection; requests on a connection are
+        # served in order, different connections run concurrently. ctx is
+        # per-connection state (e.g. sessions opened here) handed to
+        # on_close so a vanished client cannot leak server-side resources.
+        ctx: dict = {}
+        try:
+            with conn:
+                while not self._stop.is_set():
+                    try:
+                        msg = recv_msg(conn)
+                    except OSError:   # socket torn down under us (stop())
+                        return
+                    if msg is None:
+                        return
+                    op = msg.get("op")
+                    try:
+                        fn = self.handlers[op]
+                        result = fn(msg.get("payload") or {},
+                                    msg.get("session"), ctx)
+                        send_msg(conn, {"ok": True, "result": result})
+                    except Exception as e:
+                        send_msg(conn, {"ok": False, "error": repr(e)})
+        finally:
+            with self._conns_lock:
+                self._conns.discard(conn)
+            if self.on_close:
+                self.on_close(ctx)
 
     def stop(self):
         self._stop.set()
         if self._thread:
             self._thread.join(timeout=2)
+        # workers block in recv_msg on live connections; closing the
+        # sockets unblocks them so shutdown() below can actually complete
+        # (otherwise concurrent.futures' atexit join hangs the process)
+        with self._conns_lock:
+            conns = list(self._conns)
+        for conn in conns:
+            try:
+                conn.shutdown(socket.SHUT_RDWR)
+            except OSError:
+                pass
+            conn.close()
+        if self._pool:
+            self._pool.shutdown(wait=True)
 
 
 class RPCClient:
     def __init__(self, host: str, port: int, timeout: float = 60.0):
         self.sock = socket.create_connection((host, port), timeout=timeout)
 
-    def call(self, op: str, payload: Any = None):
-        send_msg(self.sock, {"op": op, "payload": payload})
+    def call(self, op: str, payload: Any = None, session: Any = None):
+        send_msg(self.sock, {"op": op, "payload": payload,
+                             "session": session})
         resp = recv_msg(self.sock)
         if resp is None:
             raise ConnectionError("server closed connection")

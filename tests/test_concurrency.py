@@ -1,0 +1,174 @@
+"""Concurrency stress: multi-tenant server hammering + pipeline teardown.
+
+Marked ``slow``: CI runs these in the tier-2 lane (`-m slow`) so tier-1
+stays fast.
+"""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.data.synthetic import image_pool
+from repro.service.backends import MLPBackend
+from repro.service.batcher import DynamicBatcher
+from repro.service.client import ALClient, serve_tcp
+from repro.service.config import ALServiceConfig
+from repro.service.pipeline import Stage, StagePipeline
+from repro.service.server import ALServer
+
+pytestmark = pytest.mark.slow
+
+
+def _mlp_server(**cfg):
+    return ALServer(ALServiceConfig(batch_size=16, **cfg),
+                    backend=MLPBackend(in_dim=192, feat_dim=32))
+
+
+def _wait_threads(baseline, timeout=5.0):
+    deadline = time.time() + timeout
+    while threading.active_count() > baseline and time.time() < deadline:
+        time.sleep(0.02)
+    return threading.active_count()
+
+
+# ------------------------------------------------------ tenant hammering --
+def test_multitenant_hammer_no_deadlock_no_leakage():
+    """N threads interleave push_data/label/query/train on one server, each
+    in its own session: every thread must finish (no deadlock) and only
+    ever see its own keys (no cross-session leakage)."""
+    srv = _mlp_server()
+    n_threads, iters, per_push = 6, 4, 20
+    errors = []
+    seen = {}
+
+    def tenant(tid):
+        try:
+            sid = srv.create_session()
+            mine = set()
+            X, Y = image_pool(iters * per_push, seed=100 + tid)
+            for it in range(iters):
+                xs = list(X[it * per_push:(it + 1) * per_push])
+                ys = Y[it * per_push:(it + 1) * per_push]
+                keys = srv.push_data(xs, session=sid)
+                mine.update(keys)
+                res = srv.query(budget=4, strategy="lc", session=sid)
+                assert set(res["keys"]) <= mine, "cross-session leakage"
+                srv.label(keys[:4], ys[:4], session=sid)
+                srv.train_and_eval(session=sid)
+            assert srv.stats(session=sid)["pool"] == len(mine)
+            seen[tid] = mine
+        except Exception as e:  # surfaced below; keep other threads going
+            errors.append((tid, e))
+
+    before = threading.active_count()
+    threads = [threading.Thread(target=tenant, args=(i,), daemon=True)
+               for i in range(n_threads)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=120)
+    assert not any(t.is_alive() for t in threads), "hammer deadlocked"
+    assert not errors, errors
+    # distinct seeds -> distinct content keys -> fully disjoint pools
+    all_keys = [k for s in seen.values() for k in s]
+    assert len(all_keys) == len(set(all_keys))
+    assert srv.stats()["pool"] == 0                   # default untouched
+    assert _wait_threads(before) <= before + 1        # no thread leak
+
+
+def test_tcp_concurrent_clients_no_deadlock():
+    """Same interleaving through the TCP transport's worker pool."""
+    srv = _mlp_server()
+    rpc = serve_tcp(srv, max_workers=8)
+    url = f"127.0.0.1:{rpc.port}"
+    errors = []
+
+    def client(tid):
+        try:
+            cli = ALClient(url=url, session="new")
+            X, Y = image_pool(30, seed=200 + tid)
+            keys = cli.push_data(list(X))
+            res = cli.query(budget=5, strategy="mc")
+            assert set(res["keys"]) <= set(keys)
+            cli.label(res["keys"], [0] * len(res["keys"]))
+            cli.train_eval()
+            assert cli.stats()["pool"] == 30
+            cli.close()
+        except Exception as e:
+            errors.append((tid, e))
+
+    threads = [threading.Thread(target=client, args=(i,), daemon=True)
+               for i in range(4)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=120)
+    try:
+        assert not any(t.is_alive() for t in threads), "TCP clients hung"
+        assert not errors, errors
+        assert srv.session_ids() == ["default"]
+    finally:
+        rpc.stop()
+
+
+# ------------------------------------- pipeline + batcher failure storms --
+def test_pipeline_under_batcher_random_failure_clean_teardown():
+    """StagePipeline whose infer stage rides a DynamicBatcher, with a stage
+    failing at a random item each iteration: every iteration must raise the
+    injected error and tear down cleanly (no leaked worker threads, batcher
+    close() returns)."""
+    rng = np.random.default_rng(0)
+    baseline = threading.active_count()
+    for it in range(8):
+        fail_at = int(rng.integers(0, 40))
+        batcher = DynamicBatcher(
+            lambda stacked, n: [stacked[i] * 2 for i in range(n)],
+            max_batch=8, timeout_s=0.005)
+
+        def flaky(x, fail_at=fail_at):
+            if x == fail_at:
+                raise ValueError(f"boom@{fail_at}")
+            return x
+
+        stages = [Stage("pre", lambda x: x), Stage("flaky", flaky),
+                  Stage("infer",
+                        lambda x: batcher.score([np.full(4, x)])[0])]
+        pipe = StagePipeline(stages, max_queue=2)
+        outcome = {}
+
+        def drive():
+            try:
+                pipe.run(list(range(60)))
+                outcome["r"] = "returned"
+            except ValueError as e:
+                outcome["r"] = f"raised:{e}"
+
+        t = threading.Thread(target=drive, daemon=True)
+        t.start()
+        t.join(timeout=15)
+        assert not t.is_alive(), f"iteration {it} deadlocked"
+        assert outcome["r"] == f"raised:boom@{fail_at}"
+        batcher.close()
+        assert not batcher._thread.is_alive()
+        after = _wait_threads(baseline)
+        assert after <= baseline, \
+            f"iteration {it} leaked threads ({after} > {baseline})"
+
+
+def test_parallel_pshea_on_server_matches_serial():
+    """End-to-end on a real (cheap-backend) server: the racing controller
+    must reproduce the serial schedule bit-for-bit."""
+    X, Y = image_pool(160, seed=5)
+    EX, EY = image_pool(80, seed=6)
+    srv = _mlp_server()
+    keys = srv.push_data(list(X))
+    key2y = dict(zip(keys, Y))
+    srv.attach_oracle(lambda ks: [key2y[k] for k in ks], EX, EY)
+    srv.label(keys[:16], Y[:16])
+    srv.train_and_eval()
+    serial = srv.query(budget=112, strategy="auto", target_accuracy=0.99,
+                       pshea_workers=1)
+    parallel = srv.query(budget=112, strategy="auto", target_accuracy=0.99,
+                         pshea_workers=7)
+    assert serial == parallel

@@ -1,4 +1,6 @@
 """PSHEA agent: predictor fit quality + Algorithm-1 controller semantics."""
+import threading
+
 import numpy as np
 import pytest
 
@@ -28,18 +30,21 @@ def test_predictor_short_history_fallback():
 
 
 class FakeTask:
-    """Deterministic curves per strategy; counts labels spent."""
+    """Deterministic curves per strategy; counts labels spent. Thread-safe
+    so the parallel controller can drive it."""
 
     def __init__(self, curves, round_budget_cost=10):
         self.curves = curves
         self.rounds = {s: 0 for s in curves}
         self.spent = 0
+        self._lock = threading.Lock()
 
     def initial_accuracy(self):
         return 0.1
 
     def select_and_label(self, strategy, round_budget):
-        self.spent += round_budget
+        with self._lock:
+            self.spent += round_budget
         return round_budget
 
     def train_and_eval(self, strategy):
@@ -88,6 +93,18 @@ def test_pshea_converges_on_plateau():
                     converge_eps=1e-3, converge_patience=2, max_rounds=30)
     assert res.stop_reason == "converged"
     assert res.rounds < 30
+
+
+def test_pshea_parallel_bit_identical_to_serial():
+    """Racing the candidates on a worker pool must reproduce the serial
+    schedule exactly — budget, histories, forecasts, elimination order."""
+    kw = dict(target_accuracy=2.0, budget_max=10_000, round_budget=10,
+              max_rounds=6, converge_patience=100)
+    serial = run_pshea(FakeTask(CURVES), list(CURVES), max_workers=1, **kw)
+    for workers in (2, 8):
+        parallel = run_pshea(FakeTask(CURVES), list(CURVES),
+                             max_workers=workers, **kw)
+        assert serial == parallel
 
 
 def test_pshea_saves_budget_vs_bruteforce():

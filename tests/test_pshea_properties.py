@@ -1,0 +1,113 @@
+"""PSHEA invariants as properties (hypothesis; skips cleanly when absent).
+
+Marked ``slow``: CI runs these in the tier-2 lane (`-m slow`).
+"""
+import threading
+
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st
+
+from repro.core.agent.controller import run_pshea
+from repro.core.agent.predictor import predict_next
+
+pytestmark = pytest.mark.slow
+
+SET = settings(max_examples=20, deadline=None)
+
+
+class CurveTask:
+    """Deterministic neg-exp curves per strategy; thread-safe accounting of
+    every (strategy, budget) charge so parallel runs can be audited."""
+
+    def __init__(self, curves):
+        self.curves = curves
+        self.rounds = {s: 0 for s in curves}
+        self.charges = []
+        self._lock = threading.Lock()
+
+    def initial_accuracy(self):
+        return 0.1
+
+    def select_and_label(self, strategy, round_budget):
+        with self._lock:
+            self.charges.append((strategy, round_budget))
+        return round_budget
+
+    def train_and_eval(self, strategy):
+        self.rounds[strategy] += 1
+        a, b, c = self.curves[strategy]
+        return float(a - b * np.exp(-c * self.rounds[strategy]))
+
+
+def curves_strategy():
+    curve = st.tuples(st.floats(0.3, 0.99), st.floats(0.05, 0.8),
+                      st.floats(0.05, 3.0))
+    return st.lists(curve, min_size=2, max_size=8).map(
+        lambda cs: {f"s{i}": c for i, c in enumerate(cs)})
+
+
+PSHEA_KW = st.fixed_dictionaries({
+    "round_budget": st.integers(1, 20),
+    "budget_max": st.integers(10, 400),
+    "target_accuracy": st.floats(0.3, 2.0),
+    "max_rounds": st.integers(1, 12),
+    "converge_patience": st.integers(1, 100),
+})
+
+
+@SET
+@given(curves=curves_strategy(), kw=PSHEA_KW, workers=st.sampled_from([2, 4, 8]))
+def test_parallel_bit_identical_to_serial(curves, kw, workers):
+    serial = run_pshea(CurveTask(curves), list(curves), max_workers=1, **kw)
+    parallel = run_pshea(CurveTask(curves), list(curves),
+                         max_workers=workers, **kw)
+    assert serial == parallel          # dataclass eq: every field, bitwise
+
+
+@SET
+@given(curves=curves_strategy(), kw=PSHEA_KW)
+def test_eliminated_plus_survivors_partition_candidates(curves, kw):
+    res = run_pshea(CurveTask(curves), list(curves), **kw)
+    candidates = set(curves)
+    eliminated = res.eliminated
+    survivors = [s for s in curves if s not in eliminated]
+    assert len(eliminated) == len(set(eliminated))    # no double elimination
+    assert set(eliminated) <= candidates
+    assert set(eliminated) | set(survivors) == candidates
+    assert set(eliminated).isdisjoint(survivors)
+    assert len(survivors) >= 1                        # never eliminate all
+    assert set(res.history) == candidates             # history covers all
+    assert res.best_strategy in candidates
+
+
+@SET
+@given(curves=curves_strategy(), kw=PSHEA_KW,
+       workers=st.sampled_from([1, 4]))
+def test_budget_spent_matches_per_round_sums(curves, kw, workers):
+    task = CurveTask(curves)
+    res = run_pshea(task, list(curves), max_workers=workers, **kw)
+    # every charge the task saw is accounted, and equals the per-round sum
+    # of live-candidate charges reconstructed from the histories
+    assert res.budget_spent == sum(b for _, b in task.charges)
+    per_strategy_rounds = {s: len(h) - 1 for s, h in res.history.items()}
+    assert res.budget_spent == \
+        sum(r * kw["round_budget"] for r in per_strategy_rounds.values())
+    assert sum(per_strategy_rounds.values()) == len(task.charges)
+
+
+@SET
+@given(accs=st.lists(st.floats(0.0, 1.0), min_size=1, max_size=2))
+def test_predict_next_short_history_last_value_fallback(accs):
+    nxt = predict_next(range(len(accs)), accs, len(accs))
+    assert nxt == accs[-1]             # <3 points: no reliable fit
+
+
+@SET
+@given(accs=st.lists(st.floats(-5.0, 5.0), min_size=3, max_size=12),
+       horizon=st.integers(0, 20))
+def test_predict_next_clipped_to_unit_interval(accs, horizon):
+    nxt = predict_next(range(len(accs)), accs, horizon)
+    assert 0.0 <= nxt <= 1.0

@@ -177,6 +177,18 @@ def test_content_key_stability():
     assert content_key(a) != content_key(a.astype(np.float64))
 
 
+def test_cache_require_raises_clear_keyerror():
+    """A no-spill-dir eviction makes get() return None; require() must turn
+    that into an actionable KeyError instead of letting np.stack crash."""
+    c = EmbeddingCache(max_bytes=2 * 8 * 4)
+    for i in range(6):
+        c.put(f"k{i}", np.full(8, i, np.float32))
+    assert c.get("k0") is None
+    with pytest.raises(KeyError, match="evicted .* spill_dir"):
+        c.require("k0")
+    np.testing.assert_array_equal(c.require("k5"), np.full(8, 5, np.float32))
+
+
 # ---------------------------------------------------------------- batcher --
 def test_bucket_size():
     assert [bucket_size(n, 64) for n in (1, 2, 3, 5, 33, 64, 200)] == \
@@ -359,3 +371,158 @@ def test_pipelined_push_equals_serial_push(pool):
     f1 = np.stack([s1.cache.get(k) for k in k1])
     f2 = np.stack([s2.cache.get(k) for k in k2])
     np.testing.assert_allclose(f1, f2, rtol=1e-5, atol=1e-5)
+
+
+# --------------------------------------------------------------- sessions --
+def _mlp_server(**cfg):
+    """Cheap multi-tenant server (random-projection backend, no resnet)."""
+    from repro.service.backends import MLPBackend
+    return ALServer(ALServiceConfig(batch_size=16, **cfg),
+                    backend=MLPBackend(in_dim=192, feat_dim=32))
+
+
+def test_sessions_are_isolated(pool):
+    X, Y = pool[0], pool[1]
+    srv = _mlp_server()
+    a = srv.create_session()
+    b = srv.create_session()
+    ka = srv.push_data(list(X[:40]), session=a)
+    kb = srv.push_data(list(X[40:70]), session=b)
+    assert srv.stats(session=a)["pool"] == 40
+    assert srv.stats(session=b)["pool"] == 30
+    assert srv.stats()["pool"] == 0                   # default untouched
+    srv.label(ka[:10], Y[:10], session=a)
+    assert srv.stats(session=a)["labeled"] == 10
+    assert srv.stats(session=b)["labeled"] == 0
+    res = srv.query(budget=5, strategy="lc", session=b)
+    assert set(res["keys"]) <= set(kb)                # b never sees a's pool
+    assert srv.train_and_eval(session=a) >= 0.0
+    assert srv.train_and_eval(session=b) == 0.0       # b has no labels
+
+
+def test_session_lifecycle_errors():
+    srv = _mlp_server()
+    with pytest.raises(KeyError, match="unknown session"):
+        srv.query(1, strategy="lc", session="nope")
+    with pytest.raises(ValueError):
+        srv.create_session("default")                 # already exists
+    with pytest.raises(ValueError):
+        srv.close_session("default")                  # cannot close default
+    sid = srv.create_session()
+    srv.close_session(sid)
+    assert sid not in srv.session_ids()
+
+
+def test_tcp_sessions_isolated(pool):
+    X = pool[0]
+    srv = _mlp_server()
+    rpc = serve_tcp(srv)
+    url = f"127.0.0.1:{rpc.port}"
+    a = ALClient(url=url, session="new")
+    b = ALClient(url=url, session="new")
+    try:
+        a.push_data(list(X[:24]))
+        b.push_data(list(X[24:40]))
+        assert a.stats()["pool"] == 24
+        assert b.stats()["pool"] == 16
+        assert a.session != b.session
+        res = a.query(4, "mc")
+        assert len(res["keys"]) == 4
+    finally:
+        a.close()
+        b.close()
+        rpc.stop()
+    assert srv.session_ids() == ["default"]           # close() cleaned up
+
+
+def test_tcp_disconnect_reclaims_session(pool):
+    """A client that vanishes without close_session must not leak its
+    server-side session (raw pool copies and all)."""
+    srv = _mlp_server()
+    rpc = serve_tcp(srv)
+    try:
+        cli = ALClient(url=f"127.0.0.1:{rpc.port}", session="new")
+        cli.push_data(list(pool[0][:8]))
+        assert len(srv.session_ids()) == 2
+        cli._rpc.close()                              # crash: no close_session
+        deadline = time.time() + 5
+        while len(srv.session_ids()) > 1 and time.time() < deadline:
+            time.sleep(0.02)
+        assert srv.session_ids() == ["default"]
+    finally:
+        rpc.stop()
+
+
+# --------------------------------------------------------- artifact cache --
+def test_artifact_cache_invalidation_matrix(pool):
+    """Hit on repeated query; miss after each of push_data / label /
+    train_and_eval (pool or head version bumped)."""
+    X, Y = pool[0], pool[1]
+    srv = _mlp_server()
+    keys = srv.push_data(list(X[:60]))
+    sess = srv.session()
+
+    srv.query(budget=5, strategy="lc")
+    assert sess.artifact_builds == 1
+    srv.query(budget=5, strategy="mc")
+    srv.query(budget=5, strategy="kcg")
+    assert sess.artifact_builds == 1                  # hits across strategies
+
+    srv.push_data(list(pool[2][:4]))                  # new content -> miss
+    srv.query(budget=5, strategy="lc")
+    assert sess.artifact_builds == 2
+
+    srv.label(keys[:10], Y[:10])                      # label -> miss
+    srv.query(budget=5, strategy="lc")
+    assert sess.artifact_builds == 3
+
+    srv.train_and_eval()                              # new head -> miss
+    srv.query(budget=5, strategy="lc")
+    assert sess.artifact_builds == 4
+    srv.query(budget=5, strategy="es")
+    assert sess.artifact_builds == 4
+
+
+def test_artifact_cache_off_matches_on(pool):
+    """Cache on/off must produce bit-identical selections (both build over
+    the full pool; off just doesn't memoize)."""
+    X, Y = pool[0], pool[1]
+    picks = {}
+    for cached in (True, False):
+        srv = _mlp_server(artifact_cache=cached)
+        keys = srv.push_data(list(X[:80]))
+        srv.label(keys[:12], Y[:12])
+        srv.train_and_eval()
+        picks[cached] = {
+            s: srv.query(budget=8, strategy=s, rng_seed=3)["keys"]
+            for s in ("lc", "kcg", "coreset")}
+    assert picks[True] == picks[False]
+    srv_off = _mlp_server(artifact_cache=False)
+    srv_off.push_data(list(X[:30]))
+    sess = srv_off.session()
+    srv_off.query(budget=4, strategy="lc")
+    srv_off.query(budget=4, strategy="lc")
+    assert sess.artifact_builds == 2                  # one build per query
+
+
+def test_tiny_cache_recomputes_evicted_embeddings(pool):
+    """Regression: with cache_bytes smaller than the pool and no spill dir,
+    eviction used to make EmbeddingCache.get return None and crash
+    np.stack inside query/train paths; the session now recomputes from its
+    raw copies (or raises a clear KeyError)."""
+    X, Y = pool[0], pool[1]
+    srv = _mlp_server(cache_bytes=10 * 32 * 4)        # ~10 of 60 feats fit
+    keys = srv.push_data(list(X[:60]))
+    assert srv.cache.stats()["entries"] < 60          # eviction happened
+    res = srv.query(budget=6, strategy="lc")          # full-pool artifacts
+    assert len(res["keys"]) == 6
+    srv.label(keys[:20], Y[:20])
+    acc = srv.train_and_eval()                        # labeled-feats path
+    assert 0.0 <= acc <= 1.0
+    # raw copy gone AND evicted -> clear KeyError, not a np.stack crash
+    sess = srv.session()
+    missing = [k for k in keys if srv.cache.get(k) is None]
+    if missing:
+        del sess._raw[missing[0]]
+        with pytest.raises(KeyError, match="evicted"):
+            sess._feats_for([missing[0]])
