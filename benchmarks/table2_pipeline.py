@@ -25,6 +25,13 @@
    PSHEA run does ONE artifact build per (pool_version, head_version)
    where cache-off builds once per candidate query — both asserted, with
    cache-on/off selections bit-identical.
+
+5. replica sharding: selections with the pool hash-sharded across
+   replicas=4 are asserted bit-identical to replicas=1 for four
+   strategies spanning the uncertainty / k-center / D²-sampling families,
+   and ingest throughput with push_data(asynchronous=True) (server-side
+   queue, per-shard parallel embedding, one version bump per drained
+   batch) is asserted >= 1.3x the synchronous push loop at 4 shards.
 """
 from __future__ import annotations
 
@@ -217,9 +224,74 @@ def _artifact_cache_matrix(n: int = 256, budget: int = 140) -> list:
         f"candidate_rounds={calls};bit_identical=True")]
 
 
+def _replica_sharding(n: int = 240, budget: int = 24,
+                      n_push: int = 40, per_push: int = 8) -> list:
+    """Sharding section: bit-identical sharded selection + async ingest
+    throughput (both asserted)."""
+    X, Y, EX, EY = make_pool(n=n)
+    # -- selection equivalence: replicas=4 vs replicas=1 ------------------
+    picks = {}
+    for replicas in (1, 4):
+        srv, key2y = make_server(X, Y, EX, EY, batch_size=32,
+                                 replicas=replicas)
+        warm_start(srv, key2y)
+        picks[replicas] = {
+            s: srv.query(budget=budget, strategy=s, rng_seed=7)["keys"]
+            for s in ("lc", "kcg", "coreset", "badge")}
+    assert picks[4] == picks[1], \
+        "sharded selections must be bit-identical to replicas=1"
+    out = [row("table2/sharded_selection", 0.0,
+               f"replicas=4;strategies=lc+kcg+coreset+badge;"
+               f"budget={budget};bit_identical=True")]
+
+    # -- ingest throughput: async (queued, per-shard parallel) vs sync ----
+    # the synchronous loop pays the emulated S3-fetch RTT once per push;
+    # the ingest queue folds queued pushes into large drained batches, so
+    # the RTT is paid once per batch-chunk and overlaps shard embedding
+    PX, _, _, _ = make_pool(seed=7, n=n_push * per_push)
+    chunks = [list(PX[i * per_push:(i + 1) * per_push])
+              for i in range(n_push)]
+    times = {}
+    for mode in ("sync", "async"):
+        srv = ALServer(ALServiceConfig(batch_size=32, replicas=4),
+                       fetch_latency_s=0.05)
+        t0 = time.perf_counter()
+        if mode == "sync":
+            for ch in chunks:
+                srv.push_data(ch)
+        else:
+            tickets = [srv.push_data(ch, asynchronous=True)
+                       for ch in chunks]
+            srv.flush()
+            assert all(t.done() for t in tickets)
+        times[mode] = time.perf_counter() - t0
+        st = srv.stats()
+        assert st["pool"] == n_push * per_push, st
+        if mode == "async":
+            # one version bump per row-appending drained batch, never per
+            # push (all chunks here are distinct and no ingest fails, so
+            # the bound is tight)
+            assert 1 <= st["pool_version"] <= st["ingest_batches"] < n_push
+    total = n_push * per_push
+    speed = times["sync"] / times["async"]
+    assert speed >= 1.3, (
+        f"async ingest {speed:.2f}x sync at 4 shards (need >=1.3x); "
+        f"sync={times['sync']:.2f}s async={times['async']:.2f}s")
+    return out + [
+        row("table2/ingest_sync", times["sync"] / n_push * 1e6,
+            f"pushes={n_push};throughput_img_s={total / times['sync']:.1f}"),
+        row("table2/ingest_async", times["async"] / n_push * 1e6,
+            f"pushes={n_push};throughput_img_s="
+            f"{total / times['async']:.1f}"),
+        row("table2/ingest_speedup", 0.0,
+            f"async_over_sync={speed:.2f}x;replicas=4;asserted_ge=1.3x"),
+    ]
+
+
 def run() -> list:
     out = _pipeline_vs_serial()
     out += _concurrent_clients()
     out += _parallel_pshea()
     out += _artifact_cache_matrix()
+    out += _replica_sharding()
     return out

@@ -1,4 +1,5 @@
-"""Distributed AL selection over a device mesh (pod-scale data selection).
+"""Distributed AL selection over a device mesh (pod-scale data selection)
+and host-level replica sharding (service scale-out).
 
 The paper's stage-level parallelism scales out here: every data shard scores
 its slice of the pool locally, then
@@ -12,14 +13,35 @@ its slice of the pool locally, then
 both as ``shard_map`` programs over the ``data`` axis with ``jax.lax``
 collectives. Selection cost per round is O(pool/n_devices) compute +
 O(n_devices x d) comm — independent of global pool size.
+
+The second half of this module generalizes the same local-propose /
+global-merge round structure to *host-level replica shards* — the serving
+layer's ``replicas: N`` config. A pool is hash-partitioned by content key
+(``replica_of``), each shard scores its rows on a thread-pool worker, and
+the merges (``replica_top_k`` for the uncertainty family,
+``replica_greedy_select`` for every greedy/k-center-lineage strategy) are
+constructed to be bit-identical to the single-pool path:
+
+  * every per-row computation (distances, uncertainty scores, weights) is
+    slice-invariant — a shard's rows produce the same floats they would
+    inside the full matrix;
+  * shard-local row order preserves global pool order, so a shard-local
+    argmax tie-break (lowest local index) IS the lowest global index within
+    that shard;
+  * cross-shard merges order candidates by (value desc, global index asc),
+    exactly ``jnp.argmax`` / ``jax.lax.top_k`` semantics on the
+    concatenated vector.
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
-from typing import Optional, Tuple
+import zlib
+from typing import Callable, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental.shard_map import shard_map as _shard_map
 from jax.sharding import Mesh, PartitionSpec as P
 
@@ -150,3 +172,185 @@ def sharded_scores(logits: jax.Array, kind: str, mesh: Mesh,
     fn = shard_map(local, mesh=mesh, in_specs=P(axis, None),
                    out_specs=P(axis))
     return fn(logits)
+
+
+# ===========================================================================
+# Host-level replica sharding (the serving layer's ``replicas: N``)
+# ===========================================================================
+
+def replica_of(key: str, replicas: int) -> int:
+    """Content-hash shard assignment: stable across pool mutations, so a
+    sample lands on the same replica no matter when (or how often) it is
+    pushed."""
+    return zlib.crc32(key.encode()) % max(int(replicas), 1)
+
+
+@dataclasses.dataclass
+class ShardView:
+    """One replica shard's slice of the (unlabeled) pool.
+
+    Rows are in global pool order; ``gidx[i]`` is row ``i``'s position in
+    that global order. Preserving the order inside each shard is what makes
+    shard-local argmax tie-breaks (lowest local index) compose with the
+    cross-shard merge (lowest global index) into exactly the single-pool
+    ``jnp.argmax`` rule.
+    """
+    feats: np.ndarray                 # (n, d)
+    probs: Optional[np.ndarray]       # (n, C) or None
+    gidx: np.ndarray                  # (n,) int64 global positions
+
+    @property
+    def n(self) -> int:
+        return int(self.gidx.shape[0])
+
+
+def replica_map(fn: Callable, items: Sequence, executor=None) -> list:
+    """Apply ``fn`` to every item — across the shard thread pool when one
+    is given (per-shard scoring runs in parallel), serially otherwise."""
+    items = list(items)
+    if executor is None or len(items) <= 1:
+        return [fn(it) for it in items]
+    return list(executor.map(fn, items))
+
+
+def replica_total(shards: Sequence[ShardView]) -> int:
+    return sum(s.n for s in shards)
+
+
+def locate_row(shards: Sequence[ShardView], gidx: int) -> Tuple[int, int]:
+    """(shard, local row) of a global pool position."""
+    for si, s in enumerate(shards):
+        j = int(np.searchsorted(s.gidx, gidx))
+        if j < s.n and int(s.gidx[j]) == gidx:
+            return si, j
+    raise IndexError(f"global row {gidx} not on any shard")
+
+
+def gather_rows(shards: Sequence[ShardView], rows: Sequence[int],
+                arrays: Optional[Sequence[np.ndarray]] = None) -> np.ndarray:
+    """Gather global pool rows into one array — the coordinator-side
+    collect for warm starts, density references, DBAL's prefiltered subset
+    and per-row scalars (``arrays`` may have any trailing shape; defaults
+    to the shard feature matrices)."""
+    if arrays is None:
+        arrays = [np.asarray(s.feats) for s in shards]
+    out = []
+    for g in rows:
+        si, li = locate_row(shards, int(g))
+        out.append(np.asarray(arrays[si])[li])
+    if not out:
+        a0 = np.asarray(arrays[0])
+        return np.zeros((0,) + a0.shape[1:], a0.dtype)
+    return np.stack(out)
+
+
+def replica_top_k(shards: Sequence[ShardView],
+                  scores_list: Sequence[jax.Array], budget: int,
+                  executor=None) -> Tuple[np.ndarray, np.ndarray]:
+    """Exact ``jax.lax.top_k`` over a sharded score vector.
+
+    Each shard ships only its local top-min(budget, n) candidates; the merge
+    orders them by (value desc, global index asc) — ``lax.top_k``'s
+    documented tie rule — so the returned (indices, values) match the
+    single-pool call bit-for-bit.
+    """
+    def local(args):
+        s, sc = args
+        if s.n == 0:
+            return np.zeros((0,), np.float32), np.zeros((0,), np.int64)
+        b = min(budget, s.n)
+        v, i = jax.lax.top_k(jnp.asarray(sc), b)
+        return np.asarray(v), s.gidx[np.asarray(i)]
+
+    parts = replica_map(local, list(zip(shards, scores_list)), executor)
+    vals = np.concatenate([p[0] for p in parts])
+    gidx = np.concatenate([p[1] for p in parts])
+    order = np.lexsort((gidx, -vals))[:budget]
+    return gidx[order], vals[order]
+
+
+def replica_seed_min_dist(shards: Sequence[ShardView],
+                          emb_list: Sequence[jax.Array], first: int):
+    """Per-shard min sq-dists to the seed center at global row ``first``,
+    with the seed's own row masked (-1.0) on its home shard — the shared
+    init for every greedy loop whose first center is a random draw
+    (k-center greedy, BADGE's D² sampling)."""
+    from repro.kernels.pairwise import ops
+    fsi, fli = locate_row(shards, first)
+    mind = []
+    for i, s in enumerate(shards):
+        if s.n == 0:
+            mind.append(None)
+            continue
+        m = ops.sq_dist_to_center(emb_list[i], emb_list[fsi][fli])
+        if i == fsi:
+            m = m.at[fli].set(-1.0)
+        mind.append(m)
+    return mind
+
+
+def _merge_proposals(props):
+    """Cross-shard winner: max value, ties to the lowest global index —
+    the sharded spelling of ``jnp.argmax`` over the concatenated scores."""
+    best = None
+    for p in props:
+        if p is None:
+            continue
+        if best is None or p[0] > best[0] or (p[0] == best[0]
+                                              and p[1] < best[1]):
+            best = p
+    return best
+
+
+def replica_greedy_select(shards: Sequence[ShardView],
+                          emb_list: Sequence[jax.Array], budget: int, *,
+                          mind_list: Sequence[Optional[jax.Array]],
+                          sel: np.ndarray, start: int,
+                          weight_for_slot: Callable[[int, int], Optional[jax.Array]],
+                          executor=None, impl: str = "auto") -> np.ndarray:
+    """Local-propose / global-dedup greedy rounds over replica shards —
+    ``distributed_k_center``'s round structure generalized to hash-sharded
+    pools and per-slot weights (static weights for weighted k-center,
+    fresh Gumbel draws per slot for BADGE's D² sampling).
+
+    Per slot: every shard runs ONE fused ``greedy_round`` over its rows
+    (min-dist fold + winner masking + local weighted argmax), proposes
+    ``(score, global index)``, and the coordinator merge picks the winner.
+    ``weight_for_slot(slot, shard)`` supplies the weights ranking the
+    candidate for ``slot``. Bit-identical to the single-pool greedy loop:
+    the per-row floats are slice-invariant and both tie-break layers reduce
+    to the lowest global index.
+    """
+    from repro.kernels.pairwise import ops
+    nsh = len(shards)
+    mind = list(mind_list)
+
+    def propose(i):
+        s = shards[i]
+        if s.n == 0:
+            return None
+        sc = ops.masked_weighted_score(mind[i], weight_for_slot(start, i))
+        li = int(jnp.argmax(sc))
+        return (float(sc[li]), int(s.gidx[li]), i, li)
+
+    props = replica_map(propose, range(nsh), executor)
+    for slot in range(start, budget):
+        _, g, win_shard, win_local = _merge_proposals(props)
+        sel[slot] = g
+        center = emb_list[win_shard][win_local]
+
+        def fold(i, win_shard=win_shard, win_local=win_local,
+                 center=center, slot=slot):
+            s = shards[i]
+            if s.n == 0:
+                return None
+            mask = jnp.asarray(
+                [win_local if i == win_shard else -1], jnp.int32)
+            nm, li, lv = ops.greedy_round(
+                emb_list[i], mind[i], center[None, :], mask,
+                weights=weight_for_slot(slot + 1, i), impl=impl)
+            mind[i] = nm
+            return (float(lv), int(s.gidx[int(li)]), i, int(li))
+
+        props = replica_map(fold, range(nsh), executor)
+    return sel

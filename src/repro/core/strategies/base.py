@@ -9,6 +9,7 @@ the distributed scorer.
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Callable, Dict, Optional, Sequence
 
 import jax
@@ -20,6 +21,9 @@ class Strategy:
     name: str
     needs: Sequence[str]          # subset of {"probs", "embeddings"}
     select_fn: Callable           # (rng, budget, **artifacts) -> (budget,) i32
+    # replica-sharded implementation, bit-identical to select_fn:
+    # (rng, budget, shards, *, labeled_embeddings, executor) -> (budget,) idx
+    sharded_fn: Optional[Callable] = None
 
     def select(self, rng, budget: int, *, probs=None, embeddings=None,
                labeled_embeddings=None) -> jax.Array:
@@ -32,6 +36,18 @@ class Strategy:
             kw["embeddings"] = embeddings
             kw["labeled_embeddings"] = labeled_embeddings
         return self.select_fn(rng, budget, **kw)
+
+    def select_sharded(self, rng, budget: int, shards, *,
+                       labeled_embeddings=None, executor=None):
+        """Run the strategy over replica shards (``core.selection``'s
+        ``ShardView`` list). Returns global pool positions, bit-identical
+        to ``select`` over the concatenated pool."""
+        if self.sharded_fn is None:
+            raise NotImplementedError(
+                f"strategy {self.name!r} has no sharded implementation")
+        return self.sharded_fn(rng, budget, shards,
+                               labeled_embeddings=labeled_embeddings,
+                               executor=executor)
 
 
 def top_k_select(scores: jax.Array, budget: int) -> jax.Array:
@@ -50,3 +66,23 @@ def unit_weights(scores: jax.Array, floor: float = 1e-3) -> jax.Array:
     s = scores.astype(jnp.float32)
     s = (s - s.min()) / jnp.maximum(s.max() - s.min(), 1e-9)
     return floor + (1.0 - floor) * s
+
+
+def global_min_max(parts):
+    """(min, max) scalars over a sharded vector: min-of-mins is the exact
+    elementwise minimum, so no float drift vs the concatenated reduce.
+    Empty shards are skipped."""
+    nonempty = [p for p in parts if p.shape[0]]
+    lo = functools.reduce(jnp.minimum, [jnp.min(p) for p in nonempty])
+    hi = functools.reduce(jnp.maximum, [jnp.max(p) for p in nonempty])
+    return lo, hi
+
+
+def unit_weights_parts(scores_list, floor: float = 1e-3) -> list:
+    """``unit_weights`` over a sharded score vector: one global min/max,
+    then the identical per-row transform on every shard — bit-identical to
+    ``unit_weights`` over the concatenated vector."""
+    parts = [s.astype(jnp.float32) for s in scores_list]
+    lo, hi = global_min_max(parts)
+    span = jnp.maximum(hi - lo, 1e-9)
+    return [floor + (1.0 - floor) * ((p - lo) / span) for p in parts]

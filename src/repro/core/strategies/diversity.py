@@ -11,8 +11,9 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-from repro.core.strategies.base import Strategy
+from repro.core.strategies.base import Strategy, unit_weights
 from repro.core.strategies.uncertainty import lc_scores
 
 
@@ -109,22 +110,23 @@ def _kmeans(rng, x, k: int, iters: int = 10, weights=None):
     return cents
 
 
-def diverse_mini_batch(rng, budget: int, probs, embeddings, beta: int = 10):
-    """DBAL [55]: prefilter beta*budget by LC, weighted k-means, then pick
-    the nearest pool point to each centroid (unique via masking)."""
+def _dbal_match(rng, budget: int, x, top_scores, top_idx, match_weights=None):
+    """DBAL's tail shared by the single-pool and sharded paths: weighted
+    k-means over the prefiltered subset ``x``, then match each centroid to
+    a unique pool point. With ``match_weights`` (per-row of ``x``,
+    non-negative) the matching cost is ``d2 / weight`` — the min-problem
+    mirror of the fused round's ``min_dist * weight`` argmax, so uncertain
+    points win centroid ties instead of being coin-flipped away."""
     from repro.kernels.pairwise import ops
-    scores = lc_scores(probs)
-    m = min(beta * budget, scores.shape[0])
-    top_scores, top_idx = jax.lax.top_k(scores, m)
-    x = embeddings[top_idx].astype(jnp.float32)
+    m = x.shape[0]
     cents = _kmeans(rng, x, budget, weights=jnp.maximum(top_scores, 1e-6))
-
-    # nearest point to each centroid without duplicates
     d2 = ops.pairwise_sq_dists(cents, x)                  # (k, m)
+    cost = (d2 if match_weights is None
+            else d2 / jnp.maximum(match_weights, 1e-6)[None, :])
 
     def body(i, carry):
         taken_mask, sel = carry
-        row = jnp.where(taken_mask, jnp.inf, d2[i])
+        row = jnp.where(taken_mask, jnp.inf, cost[i])
         j = jnp.argmin(row)
         return taken_mask.at[j].set(True), sel.at[i].set(top_idx[j])
 
@@ -134,8 +136,27 @@ def diverse_mini_batch(rng, budget: int, probs, embeddings, beta: int = 10):
     return sel
 
 
+def diverse_mini_batch(rng, budget: int, probs, embeddings, beta: int = 10,
+                       weights=None):
+    """DBAL [55]: prefilter beta*budget by LC, weighted k-means, then pick
+    the nearest pool point to each centroid (unique via masking).
+
+    ``weights`` (optional (N,) over the pool) threads into the
+    centroid-matching step (``weights=None`` keeps the unweighted match)."""
+    scores = lc_scores(probs)
+    m = min(beta * budget, scores.shape[0])
+    top_scores, top_idx = jax.lax.top_k(scores, m)
+    x = embeddings[top_idx].astype(jnp.float32)
+    mw = None if weights is None else weights[top_idx]
+    return _dbal_match(rng, budget, x, top_scores, top_idx, match_weights=mw)
+
+
 def _dbal_select(rng, budget, *, probs, embeddings, labeled_embeddings=None):
-    return diverse_mini_batch(rng, budget, probs, embeddings)
+    # centroid matching rides the same LC weighting as the fused hybrids
+    # (ROADMAP PR-2 open item): among near-equidistant candidates the more
+    # uncertain point is matched first
+    return diverse_mini_batch(rng, budget, probs, embeddings,
+                              weights=unit_weights(lc_scores(probs)))
 
 
 def _random_select(rng, budget, *, probs=None):
@@ -143,7 +164,82 @@ def _random_select(rng, budget, *, probs=None):
     return jax.random.permutation(rng, n)[:budget].astype(jnp.int32)
 
 
-k_center = Strategy("kcg", ("embeddings",), _kcg_select)
-core_set = Strategy("coreset", ("embeddings",), _coreset_select)
-dbal = Strategy("dbal", ("probs", "embeddings"), _dbal_select)
-random_sampling = Strategy("random", ("probs",), _random_select)
+# ------------------------------------------------- replica-sharded paths --
+def sharded_k_center(rng, budget: int, shards, *, init_centers=None,
+                     weights_list=None, executor=None, impl: str = "auto"):
+    """Replica-sharded ``k_center_greedy``: per-shard fused rounds +
+    cross-shard (value, global index) merges — selections bit-identical to
+    the single-pool path for every shard count (see core.selection)."""
+    from repro.core import selection
+    from repro.kernels.pairwise import ops
+    N = selection.replica_total(shards)
+    emb_list = [jnp.asarray(s.feats, jnp.float32) for s in shards]
+    sel = np.zeros((budget,), np.int64)
+    if weights_list is None:
+        def weight_for_slot(slot, i):
+            return None
+    else:
+        def weight_for_slot(slot, i):
+            return weights_list[i]
+    if init_centers is not None and init_centers.shape[0] > 0:
+        init = jnp.asarray(init_centers, jnp.float32)
+        mind = [ops.warm_start_min_dist(emb_list[i], init, impl=impl)
+                if s.n else None for i, s in enumerate(shards)]
+        start = 0
+    else:
+        # the random seed IS the first returned center, as in the single
+        # path (same rng call, same N -> same draw)
+        first = int(jax.random.randint(rng, (), 0, N))
+        mind = selection.replica_seed_min_dist(shards, emb_list, first)
+        sel[0] = first
+        start = 1
+    return selection.replica_greedy_select(
+        shards, emb_list, budget, mind_list=mind, sel=sel, start=start,
+        weight_for_slot=weight_for_slot, executor=executor, impl=impl)
+
+
+def _kcg_sharded(rng, budget, shards, *, labeled_embeddings=None,
+                 executor=None):
+    return sharded_k_center(rng, budget, shards, executor=executor)
+
+
+def _coreset_sharded(rng, budget, shards, *, labeled_embeddings=None,
+                     executor=None):
+    return sharded_k_center(rng, budget, shards,
+                            init_centers=labeled_embeddings,
+                            executor=executor)
+
+
+def _dbal_sharded(rng, budget, shards, *, labeled_embeddings=None,
+                  executor=None, beta: int = 10):
+    """Sharded DBAL: shards propose their local LC top-(beta*budget), the
+    merged prefilter subset is gathered to the coordinator, and the k-means
+    + weighted matching tail is the exact single-pool code over it."""
+    from repro.core import selection
+    from repro.core.strategies.base import unit_weights_parts
+    scores = selection.replica_map(
+        lambda s: lc_scores(jnp.asarray(s.probs)), shards, executor)
+    N = selection.replica_total(shards)
+    m = min(beta * budget, N)
+    top_idx, top_scores = selection.replica_top_k(shards, scores, m,
+                                                  executor)
+    x = jnp.asarray(selection.gather_rows(shards, top_idx), jnp.float32)
+    mw = jnp.asarray(selection.gather_rows(
+        shards, top_idx, arrays=unit_weights_parts(scores)), jnp.float32)
+    return np.asarray(_dbal_match(rng, budget, x, jnp.asarray(top_scores),
+                                  jnp.asarray(top_idx), match_weights=mw))
+
+
+def _random_sharded(rng, budget, shards, *, labeled_embeddings=None,
+                    executor=None):
+    from repro.core import selection
+    n = selection.replica_total(shards)
+    return np.asarray(jax.random.permutation(rng, n)[:budget])
+
+
+k_center = Strategy("kcg", ("embeddings",), _kcg_select, _kcg_sharded)
+core_set = Strategy("coreset", ("embeddings",), _coreset_select,
+                    _coreset_sharded)
+dbal = Strategy("dbal", ("probs", "embeddings"), _dbal_select, _dbal_sharded)
+random_sampling = Strategy("random", ("probs",), _random_select,
+                           _random_sharded)

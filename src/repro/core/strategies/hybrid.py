@@ -21,8 +21,10 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-from repro.core.strategies.base import Strategy, unit_weights
+from repro.core.strategies.base import (Strategy, unit_weights,
+                                        unit_weights_parts)
 from repro.core.strategies.uncertainty import lc_scores, mc_scores
 
 
@@ -106,8 +108,100 @@ def _weighted_kcenter_select(rng, budget, *, probs, embeddings,
                            init_centers=labeled_embeddings, weights=w)
 
 
-badge = Strategy("badge", ("probs", "embeddings"), _badge_select)
+# ------------------------------------------------- replica-sharded paths --
+def sharded_kmeans_pp(rng, x_list, shards, k: int, executor=None,
+                      impl: str = "auto"):
+    """Replica-sharded ``kmeans_pp_sample``: the per-slot Gumbel weights are
+    drawn over the FULL (N,) pool from the same key schedule as the single
+    path and sliced per shard by global position, so each D² draw is the
+    identical categorical sample."""
+    import threading
+    from repro.core import selection
+    N = selection.replica_total(shards)
+    keys = jax.random.split(rng, k + 1)
+    first = int(jax.random.randint(keys[0], (), 0, N))
+    mind = selection.replica_seed_min_dist(shards, x_list, first)
+    sel = np.zeros((k,), np.int64)
+    sel[0] = first
+    gumbel = {}                        # slot -> full (N,) weight draw
+    gumbel_lock = threading.Lock()     # shards race on a slot's first use
+
+    def weight_for_slot(slot, i):
+        with gumbel_lock:
+            if slot not in gumbel:
+                # slots advance monotonically: older draws are dead
+                for old in [s for s in gumbel if s < slot]:
+                    del gumbel[old]
+                gumbel[slot] = jnp.exp(
+                    jax.random.gumbel(keys[slot], (N,), jnp.float32))
+            w = gumbel[slot]
+        return w[jnp.asarray(shards[i].gidx)]
+
+    return selection.replica_greedy_select(
+        shards, x_list, k, mind_list=mind, sel=sel, start=1,
+        weight_for_slot=weight_for_slot, executor=executor, impl=impl)
+
+
+def _badge_sharded(rng, budget, shards, *, labeled_embeddings=None,
+                   executor=None):
+    from repro.core import selection
+    g_list = selection.replica_map(
+        lambda s: (lc_scores(jnp.asarray(s.probs))[:, None]
+                   .astype(jnp.float32)
+                   * jnp.asarray(s.feats, jnp.float32)),
+        shards, executor)
+    return sharded_kmeans_pp(rng, g_list, shards, budget, executor=executor)
+
+
+def density_scores_sharded(rng, shards, executor=None, n_ref: int = 256):
+    """Sharded ``density_scores``: one global reference draw + gather, then
+    per-shard mean-sq-dist rows and a global min/max normalize."""
+    from repro.core import selection
+    from repro.core.strategies.base import global_min_max
+    from repro.kernels.pairwise import ops
+    N = selection.replica_total(shards)
+    n_ref = min(n_ref, N)
+    ridx = np.asarray(jax.random.choice(rng, N, (n_ref,), replace=False))
+    ref = jnp.asarray(selection.gather_rows(shards, ridx), jnp.float32)
+    d_list = selection.replica_map(
+        lambda s: ops.pairwise_sq_dists(
+            jnp.asarray(s.feats, jnp.float32), ref).mean(-1)
+        if s.n else jnp.zeros((0,), jnp.float32),
+        shards, executor)
+    lo, hi = global_min_max(d_list)
+    return [1.0 - (d - lo) / jnp.maximum(hi - lo, 1e-9) for d in d_list]
+
+
+def _margin_density_sharded(rng, budget, shards, *, labeled_embeddings=None,
+                            executor=None):
+    from repro.core import selection
+    from repro.core.strategies.diversity import sharded_k_center
+    k_ref, k_sel = jax.random.split(rng)
+    mc_list = selection.replica_map(
+        lambda s: mc_scores(jnp.asarray(s.probs)), shards, executor)
+    m_list = unit_weights_parts(mc_list)
+    dens_list = density_scores_sharded(k_ref, shards, executor)
+    w_list = unit_weights_parts([m * d for m, d in zip(m_list, dens_list)])
+    return sharded_k_center(k_sel, budget, shards, weights_list=w_list,
+                            executor=executor)
+
+
+def _weighted_kcenter_sharded(rng, budget, shards, *,
+                              labeled_embeddings=None, executor=None):
+    from repro.core import selection
+    from repro.core.strategies.diversity import sharded_k_center
+    lc_list = selection.replica_map(
+        lambda s: lc_scores(jnp.asarray(s.probs)), shards, executor)
+    w_list = unit_weights_parts(lc_list)
+    return sharded_k_center(rng, budget, shards,
+                            init_centers=labeled_embeddings,
+                            weights_list=w_list, executor=executor)
+
+
+badge = Strategy("badge", ("probs", "embeddings"), _badge_select,
+                 _badge_sharded)
 margin_density = Strategy("margin_density", ("probs", "embeddings"),
-                          _margin_density_select)
+                          _margin_density_select, _margin_density_sharded)
 weighted_kcenter = Strategy("weighted_kcenter", ("probs", "embeddings"),
-                            _weighted_kcenter_select)
+                            _weighted_kcenter_select,
+                            _weighted_kcenter_sharded)

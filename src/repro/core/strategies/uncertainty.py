@@ -53,7 +53,19 @@ def scores_from_logits(logits, kind: str, impl: str = "auto"):
 def _make(kind: str) -> Strategy:
     def select_fn(rng, budget, *, probs):
         return top_k_select(SCORE_FNS[kind](probs), budget)
-    return Strategy(kind, ("probs",), select_fn)
+
+    def sharded_fn(rng, budget, shards, *, labeled_embeddings=None,
+                   executor=None):
+        # per-shard scoring (scores are per-row, so shard slices produce the
+        # exact floats of the full matrix) + partial top-k merge
+        from repro.core import selection
+        scores = selection.replica_map(
+            lambda s: SCORE_FNS[kind](jnp.asarray(s.probs)), shards,
+            executor)
+        idx, _ = selection.replica_top_k(shards, scores, budget, executor)
+        return idx
+
+    return Strategy(kind, ("probs",), select_fn, sharded_fn)
 
 
 least_confidence = _make("lc")

@@ -1,4 +1,11 @@
-"""AL Strategy Zoo (paper Table 1 column 'AL Strategy Zoo')."""
+"""AL Strategy Zoo (paper Table 1 column 'AL Strategy Zoo').
+
+Every strategy ships two implementations with bit-identical selections:
+``select`` over one pool matrix, and ``select_sharded`` over the serving
+layer's replica shards (core.selection's local-propose/global-merge
+machinery) — the contract ``SHARDED_COMPLETE`` asserts and
+tests/test_sharding.py verifies per strategy.
+"""
 from __future__ import annotations
 
 from typing import Dict
@@ -27,6 +34,12 @@ PAPER_SEVEN = ["lc", "mc", "rc", "es", "kcg", "coreset", "dbal"]
 # the hybrids every agent may additionally race once the pool has both
 # probs and embeddings — all ride the fused weighted greedy round
 HYBRIDS = ["badge", "margin_density", "weighted_kcenter"]
+
+# replica sharding only works if NO strategy silently lacks a sharded path
+# (the server would have to fall back and the `replicas` knob would lie)
+SHARDED_COMPLETE = all(s.sharded_fn is not None for s in ZOO.values())
+assert SHARDED_COMPLETE, sorted(
+    n for n, s in ZOO.items() if s.sharded_fn is None)
 
 
 def get_strategy(name: str) -> Strategy:

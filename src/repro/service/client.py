@@ -15,15 +15,26 @@ content-addressed embedding cache) without seeing each other's data:
 
 ``session=None`` (default) addresses the server's default session — the
 original single-tenant behaviour.
+
+Asynchronous ingest: ``push_data(xs, asynchronous=True)`` returns a
+``PushTicket`` immediately (its ``keys`` are the content hashes, known
+up front) and the server embeds in the background; ``flush()`` is the
+barrier after which every prior push is visible to query/label/stats
+(query and label also take it implicitly server-side). Over TCP the async
+push rides a single-thread I/O executor, so requests stay strictly FIFO
+on the shared connection.
 """
 from __future__ import annotations
 
+import concurrent.futures as cf
+import threading
 from typing import List, Optional, Sequence
 
 import numpy as np
 
 from repro.service import transport
-from repro.service.server import ALServer
+from repro.service.cache import content_key
+from repro.service.server import ALServer, PushTicket
 
 
 def serve_tcp(server: ALServer, host: str = "127.0.0.1",
@@ -48,6 +59,12 @@ def serve_tcp(server: ALServer, host: str = "127.0.0.1",
     handlers = {
         "push_data": lambda p, s, c: {
             "keys": server.push_data(list(p["items"]), session=s)},
+        # async: enqueue on the session's ingest queue and ack immediately
+        # with the content keys; "flush" is the integration barrier
+        "push_data_async": lambda p, s, c: {
+            "keys": server.push_data(list(p["items"]), session=s,
+                                     asynchronous=True).keys},
+        "flush": lambda p, s, c: server.flush(session=s) or {},
         "query": lambda p, s, c: server.query(
             int(p["budget"]), p.get("strategy"),
             p.get("target_accuracy"), int(p.get("rng_seed") or 0),
@@ -75,6 +92,8 @@ class ALClient:
         assert (local is None) != (url is None), "pass local= xor url="
         self._local = local
         self._rpc = None
+        self._io: Optional[cf.ThreadPoolExecutor] = None
+        self._io_lock = threading.Lock()
         self._owns_session = False
         if url:
             host, port = url.rsplit(":", 1)
@@ -87,12 +106,22 @@ class ALClient:
     def session(self) -> Optional[str]:
         return self._session
 
+    def _call(self, op: str, payload=None, session=None):
+        """One RPC round trip. Once an async push exists, every op rides
+        the same single-thread executor so the shared socket sees strictly
+        FIFO request/response pairs (a flush can never overtake a push
+        that was issued before it)."""
+        if self._io is not None:
+            return self._io.submit(self._rpc.call, op, payload,
+                                   session).result()
+        return self._rpc.call(op, payload, session=session)
+
     def open_session(self) -> str:
         """Claim a fresh isolated session and address it from now on."""
         if self._local is not None:
             sid = self._local.create_session()
         else:
-            sid = self._rpc.call("open_session")["session"]
+            sid = self._call("open_session")["session"]
         self._session = sid
         self._owns_session = True
         return sid
@@ -103,17 +132,38 @@ class ALClient:
         if self._local is not None:
             self._local.close_session(self._session)
         else:
-            self._rpc.call("close_session", session=self._session)
+            self._call("close_session", session=self._session)
         self._session = None
         self._owns_session = False
 
     def push_data(self, data_list: Sequence[np.ndarray],
-                  asynchronous: bool = False) -> List[str]:
+                  asynchronous: bool = False):
+        """Synchronous (default): embed + append now, return the keys.
+        ``asynchronous=True``: return a ``PushTicket`` immediately —
+        ``ticket.keys`` are the content hashes, ``ticket.result()`` waits
+        for the server's acceptance, and ``flush()`` (or any query/label)
+        is the barrier after which the rows are visible."""
         if self._local is not None:
-            return self._local.push_data(data_list, session=self._session)
-        return self._rpc.call("push_data",
-                              {"items": [np.asarray(d) for d in data_list]},
+            return self._local.push_data(data_list, session=self._session,
+                                         asynchronous=asynchronous)
+        items = [np.asarray(d) for d in data_list]
+        if not asynchronous:
+            return self._call("push_data", {"items": items},
                               session=self._session)["keys"]
+        with self._io_lock:   # two threads' first pushes must not race
+            if self._io is None:
+                self._io = cf.ThreadPoolExecutor(
+                    max_workers=1, thread_name_prefix="alc-io")
+        fut = self._io.submit(self._rpc.call, "push_data_async",
+                              {"items": items}, self._session)
+        return PushTicket([content_key(it) for it in items], fut)
+
+    def flush(self) -> None:
+        """Barrier: every ``push_data(asynchronous=True)`` issued before
+        this call is embedded and visible to query/label/stats."""
+        if self._local is not None:
+            return self._local.flush(session=self._session)
+        self._call("flush", session=self._session)
 
     def query(self, budget: int, strategy: Optional[str] = None,
               target_accuracy: Optional[float] = None,
@@ -121,31 +171,33 @@ class ALClient:
         if self._local is not None:
             return self._local.query(budget, strategy, target_accuracy,
                                      rng_seed, session=self._session)
-        return self._rpc.call("query", {"budget": budget,
-                                        "strategy": strategy,
-                                        "target_accuracy": target_accuracy,
-                                        "rng_seed": rng_seed},
-                              session=self._session)
+        return self._call("query", {"budget": budget,
+                                    "strategy": strategy,
+                                    "target_accuracy": target_accuracy,
+                                    "rng_seed": rng_seed},
+                          session=self._session)
 
     def label(self, keys: Sequence[str], labels: Sequence[int]):
         if self._local is not None:
             return self._local.label(keys, labels, session=self._session)
-        return self._rpc.call("label", {"keys": list(keys),
-                                        "labels": [int(x) for x in labels]},
-                              session=self._session)
+        return self._call("label", {"keys": list(keys),
+                                    "labels": [int(x) for x in labels]},
+                          session=self._session)
 
     def train_eval(self) -> float:
         if self._local is not None:
             return self._local.train_and_eval(session=self._session)
-        return self._rpc.call("train_eval",
-                              session=self._session)["accuracy"]
+        return self._call("train_eval", session=self._session)["accuracy"]
 
     def stats(self) -> dict:
         if self._local is not None:
             return self._local.stats(session=self._session)
-        return self._rpc.call("stats", session=self._session)
+        return self._call("stats", session=self._session)
 
     def close(self):
         self.close_session()
+        if self._io:
+            self._io.shutdown(wait=True)
+            self._io = None
         if self._rpc:
             self._rpc.close()

@@ -108,7 +108,12 @@ class ALServiceConfig:
     protocol: str = "tcp"
     host: str = "127.0.0.1"
     port: int = 60035
+    # pool shards per session: artifacts build and strategies score
+    # per-shard in parallel, selections stay bit-identical to replicas=1
     replicas: int = 1
+    # max queued push_data(asynchronous=True) calls folded into one drained
+    # ingest batch (one pool_version bump per batch)
+    ingest_batch: int = 256
     cache_bytes: int = 1 << 30
     cache_spill_dir: Optional[str] = None
     target_accuracy: float = 0.95
@@ -142,6 +147,7 @@ class ALServiceConfig:
             host=worker.get("host", "127.0.0.1"),
             port=int(worker.get("port", 60035)),
             replicas=int(worker.get("replicas", 1)),
+            ingest_batch=int(worker.get("ingest_batch", 256)),
             target_accuracy=float(al.get("target_accuracy", 0.95)),
             budget_max=int(al.get("budget_max", 10000)),
             auto_candidates=strat.get("candidates", "paper"),

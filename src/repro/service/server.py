@@ -25,21 +25,32 @@ keyed on (pool_version, head_version) and invalidated by push_data / label /
 train_and_eval — so PSHEA's 7-10 candidates share ONE artifact build per
 round instead of re-stacking the pool per candidate.
 
+Replica sharding (config ``replicas: N``): each session's pool is
+hash-partitioned by content key across N shards. Artifacts are built per
+shard in parallel, every query strategy runs its replica-sharded path
+(local propose, global merge — core.selection), and selections are
+bit-identical to ``replicas=1``. ``push_data(asynchronous=True)`` enqueues
+onto a per-session ingest queue whose worker embeds drained batches per
+shard and bumps pool_version once per batch; ``flush()`` is the barrier
+label/query/sync-push take so they linearize after pending ingests.
+
 The server is usable in-process (ALClient(local=server)) or over the msgpack
 TCP transport in transport.py (gRPC stand-in; see DESIGN.md).
 """
 from __future__ import annotations
 
+import concurrent.futures as cf
 import threading
 import time
 import uuid
 import zlib
-from typing import Callable, Dict, List, Optional, Sequence
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import numpy as np
 
 from repro.core.agent.controller import run_pshea
+from repro.core.selection import ShardView, replica_map, replica_of
 from repro.core.strategies.zoo import HYBRIDS, PAPER_SEVEN, get_strategy
 from repro.service.backends import FeatureBackend, HeadState, make_backend
 from repro.service.batcher import DynamicBatcher
@@ -57,12 +68,35 @@ def _strategy_seed(strategy: str, round_index: int) -> int:
     return zlib.crc32(f"{strategy}/{round_index}".encode())
 
 
+class PushTicket:
+    """Client-side future for ``push_data(asynchronous=True)``.
+
+    ``keys`` (content hashes) are known at enqueue time. ``result()``
+    blocks until the session's ingest worker has embedded and appended the
+    batch (in-process mode) or until the server acknowledged the enqueue
+    (TCP mode — the enqueue ack is what the connection returns); either
+    way ``flush()`` on the client/session is the hard integration barrier.
+    """
+
+    def __init__(self, keys: Sequence[str], future: "cf.Future"):
+        self.keys = list(keys)
+        self._future = future
+
+    def done(self) -> bool:
+        return self._future.done()
+
+    def result(self, timeout: Optional[float] = None) -> List[str]:
+        self._future.result(timeout)
+        return self.keys
+
+
 class ALSession:
     """Per-tenant AL state: pool, labels, head, oracle, artifact cache."""
 
     def __init__(self, server: "ALServer", session_id: str):
         self.server = server
         self.session_id = session_id
+        self.replicas = max(int(server.config.replicas), 1)
         self._keys: List[str] = []
         self._raw: Dict[str, np.ndarray] = {}
         self._labels: Dict[str, int] = {}
@@ -73,19 +107,47 @@ class ALSession:
         self._lock = threading.RLock()
         self.last_pipeline_stats = None
         # -- versioned pool-artifact cache ------------------------------
-        # (feats, probs) over the FULL pool, keyed on (pool_version,
-        # head_version). pool_version bumps on push_data AND label (label
-        # is conservative: it changes the unlabeled set, not the artifact
-        # itself); head_version bumps on train_and_eval.
+        # (feats, probs) over the FULL pool (replicas=1) or one per replica
+        # shard (replicas>1), keyed on (pool_version, head_version).
+        # pool_version bumps on push_data AND label (label is conservative:
+        # it changes the unlabeled set, not the artifact itself);
+        # head_version bumps on train_and_eval.
         self.pool_version = 0
         self.head_version = 0
-        self.artifact_builds = 0           # counts _build_artifacts calls
+        self.artifact_builds = 0           # counts artifact build calls
         self._artifact = None              # ((pv, hv), keys, feats, probs, idx)
+        self._shard_artifact = None        # ((pv, hv), keys_l, f_l, p_l, idx)
         self._artifact_lock = threading.Lock()
+        # -- async ingest queue -----------------------------------------
+        # push_data(asynchronous=True) enqueues; a per-session worker
+        # drains batches, embeds per shard, and bumps pool_version ONCE
+        # per drained batch. flush() is the barrier label/query/sync-push
+        # take so they linearize after every pending ingest.
+        self._ingest_queue: List[tuple] = []
+        self._ingest_cv = threading.Condition()
+        self._ingest_busy = False
+        self._ingest_thread: Optional[threading.Thread] = None
+        self._ingest_stop = False
+        self._ingest_error: Optional[BaseException] = None
+        # drained batches; pool_version bumps once per drained batch THAT
+        # APPENDS NEW ROWS (all-duplicate or failed batches drain without
+        # a bump), so pool_version <= ingest_batches always
+        self.ingest_batches = 0
 
     # ------------------------------------------------------------- data --
-    def push_data(self, items: Sequence[np.ndarray],
-                  pipelined: bool = True) -> List[str]:
+    def push_data(self, items: Sequence[np.ndarray], pipelined: bool = True,
+                  asynchronous: bool = False):
+        """Synchronous: embed + append now, return keys. Asynchronous:
+        enqueue for the ingest worker and return a ``PushTicket`` whose
+        ``keys`` are immediately known (content hashes)."""
+        if asynchronous:
+            return self._push_async(items)
+        self.flush()     # sync pushes order AFTER every pending async push
+        # sync embedding stays on ONE pipeline even at replicas>1: the
+        # jitted feature path is batch-composition-sensitive, so this is
+        # the determinism anchor that keeps a replicas=N server fed the
+        # same sync pushes byte-identical to the replicas=1 reference;
+        # per-shard parallel embedding is the ingest queue's job
         keys = [content_key(np.asarray(it)) for it in items]
         todo = [(k, it) for k, it in zip(keys, items)
                 if k not in self.server.cache]
@@ -103,6 +165,106 @@ class ALSession:
                 todo, pipelined=pipelined)
         return keys
 
+    # ----------------------------------------------------- async ingest --
+    def _push_async(self, items: Sequence[np.ndarray]) -> PushTicket:
+        items = [np.asarray(it) for it in items]
+        keys = [content_key(it) for it in items]
+        fut: cf.Future = cf.Future()
+        with self._ingest_cv:
+            if self._ingest_stop:
+                raise RuntimeError(f"session {self.session_id!r} is closed")
+            self._ingest_queue.append((keys, items, fut))
+            if self._ingest_thread is None:
+                self._ingest_thread = threading.Thread(
+                    target=self._ingest_loop, daemon=True,
+                    name=f"ingest-{self.session_id}")
+                self._ingest_thread.start()
+            self._ingest_cv.notify_all()
+        return PushTicket(keys, fut)
+
+    def _ingest_loop(self):
+        while True:
+            with self._ingest_cv:
+                while not self._ingest_queue and not self._ingest_stop:
+                    self._ingest_cv.wait()
+                if not self._ingest_queue:   # stop requested, queue drained
+                    return
+                batch = self._ingest_queue[:self.server.config.ingest_batch]
+                del self._ingest_queue[:len(batch)]
+                self._ingest_busy = True
+            err: Optional[BaseException] = None
+            try:
+                self._integrate(batch)
+                for keys, _, fut in batch:
+                    fut.set_result(keys)
+            except BaseException as batch_err:
+                if len(batch) == 1:
+                    err = batch_err
+                    batch[0][2].set_exception(batch_err)
+                else:
+                    # isolate the blast radius: re-integrate each
+                    # coalesced push on its own, so one malformed push
+                    # cannot drop the rows of valid pushes drained in the
+                    # same batch
+                    for entry in batch:
+                        keys, _, fut = entry
+                        try:
+                            self._integrate([entry])
+                            fut.set_result(keys)
+                        except BaseException as one_err:
+                            err = one_err
+                            fut.set_exception(one_err)
+            with self._ingest_cv:
+                self._ingest_busy = False
+                self.ingest_batches += 1
+                if err is not None:
+                    self._ingest_error = err
+                self._ingest_cv.notify_all()
+
+    def _integrate(self, batch: List[tuple]) -> None:
+        """Embed + append ONE drained ingest batch: the un-cached items of
+        every queued push are grouped by replica shard and embedded in
+        parallel; pool_version bumps once for the whole batch."""
+        todo, seen = [], set()
+        for keys, items, _ in batch:
+            for k, it in zip(keys, items):
+                if k in seen or k in self.server.cache:
+                    continue
+                seen.add(k)
+                todo.append((k, it))
+        if todo:
+            self.last_pipeline_stats = self.server._process_replicated(todo)
+        with self._lock:
+            new = False
+            for keys, items, _ in batch:
+                for k, it in zip(keys, items):
+                    if k not in self._raw:
+                        self._raw[k] = it
+                        self._keys.append(k)
+                        new = True
+            if new:
+                self.pool_version += 1
+
+    def flush(self) -> None:
+        """Ingest barrier: returns once every previously queued async push
+        has been embedded and appended to the pool. label/query/sync-push
+        call this on entry, so they linearize after pending ingests. A
+        failed ingest re-raises here (once)."""
+        if self._ingest_thread is None:
+            return
+        with self._ingest_cv:
+            while self._ingest_queue or self._ingest_busy:
+                self._ingest_cv.wait()
+            if self._ingest_error is not None:
+                err, self._ingest_error = self._ingest_error, None
+                raise RuntimeError("asynchronous ingest failed") from err
+
+    def close(self) -> None:
+        """Stop the ingest worker (drains what is already queued)."""
+        with self._ingest_cv:
+            self._ingest_stop = True
+            self._ingest_cv.notify_all()
+
     # ------------------------------------------------------ label/oracle --
     def attach_oracle(self, oracle: Callable[[Sequence[str]], Sequence[int]],
                       eval_x: np.ndarray, eval_y: np.ndarray):
@@ -113,6 +275,7 @@ class ALSession:
         self._eval_set = (backend.features(ex), np.asarray(eval_y))
 
     def label(self, keys: Sequence[str], labels: Sequence[int]):
+        self.flush()     # linearize after pending async ingests
         with self._lock:
             changed = False
             for k, y in zip(keys, labels):
@@ -172,7 +335,48 @@ class ALSession:
                 self._artifact = (version,) + self._build_artifacts()
             return self._artifact[1:]
 
+    def _build_shard_artifacts(self):
+        """Per-replica-shard (keys, feats, probs), built in parallel across
+        the shard pool; one ``artifact_builds`` tick covers all shards."""
+        keys = list(self._keys)
+        shard_keys: List[List[str]] = [[] for _ in range(self.replicas)]
+        for k in keys:                       # global order kept within shards
+            shard_keys[replica_of(k, self.replicas)].append(k)
+        head = self._head or self.server.backend.init_head()
+        backend = self.server.backend
+
+        def build(ks):
+            if not ks:
+                return (np.zeros((0, backend.feat_dim), np.float32),
+                        np.zeros((0, backend.num_classes), np.float32))
+            feats = self._feats_for(ks)
+            return feats, backend.probs(feats, head)
+
+        parts = replica_map(build, shard_keys, self.server.shard_executor())
+        index: Dict[str, Tuple[int, int]] = {}
+        for si, ks in enumerate(shard_keys):
+            for li, k in enumerate(ks):
+                index[k] = (si, li)
+        self.artifact_builds += 1
+        return (shard_keys, [p[0] for p in parts], [p[1] for p in parts],
+                index)
+
+    def _shard_pool_artifacts(self):
+        """Sharded mirror of ``_pool_artifacts``: per-shard (keys, feats,
+        probs) lists + a key -> (shard, local row) index, memoized on the
+        same (pool_version, head_version) contract."""
+        if not self.server.config.artifact_cache:
+            return self._build_shard_artifacts()
+        with self._artifact_lock:
+            version = (self.pool_version, self.head_version)
+            if self._shard_artifact is None or \
+                    self._shard_artifact[0] != version:
+                self._shard_artifact = \
+                    (version,) + self._build_shard_artifacts()
+            return self._shard_artifact[1:]
+
     def train_and_eval(self) -> float:
+        self.flush()     # linearize after pending async ingests
         keys = list(self._labeled_keys)
         if not keys:
             return 0.0
@@ -192,6 +396,7 @@ class ALSession:
               pshea_workers: Optional[int] = None) -> dict:
         config = self.server.config
         strategy = strategy or config.strategy
+        self.flush()       # linearize after pending async ingests
         with self._lock:   # consistent (pool, labels) snapshot
             unlabeled = [k for k in self._keys if k not in self._labels]
         if strategy != "auto":
@@ -203,6 +408,9 @@ class ALSession:
                                 workers)
 
     def _query_one(self, unlabeled, budget, strategy, rng_seed) -> dict:
+        if self.replicas > 1:
+            return self._query_one_sharded(unlabeled, budget, strategy,
+                                           rng_seed)
         strat = get_strategy(strategy)
         keys_all, feats_all, probs_all, index = self._pool_artifacts()
         # a concurrent push_data may have appended keys after this query's
@@ -226,6 +434,47 @@ class ALSession:
             labeled_embeddings=(jnp.asarray(labeled_emb)
                                 if labeled_emb is not None else None))
         idx = np.asarray(idx)
+        return {"keys": [unlabeled[i] for i in idx],
+                "indices": idx.tolist(), "strategy": strategy,
+                "cache": self.server.cache.stats()}
+
+    def _query_one_sharded(self, unlabeled, budget, strategy,
+                           rng_seed) -> dict:
+        """One strategy over the replica-sharded pool: per-shard views of
+        the unlabeled rows (global order preserved inside each shard) feed
+        the strategy's sharded path — selections bit-identical to
+        ``replicas=1`` by construction (tests/test_sharding.py)."""
+        strat = get_strategy(strategy)
+        shard_keys, feats_l, probs_l, index = self._shard_pool_artifacts()
+        unlabeled = [k for k in unlabeled if k in index]
+        budget = min(budget, len(unlabeled))
+        if budget == 0:
+            return {"keys": [], "indices": [], "strategy": strategy,
+                    "cache": self.server.cache.stats()}
+        rows: List[List[int]] = [[] for _ in range(self.replicas)]
+        gpos: List[List[int]] = [[] for _ in range(self.replicas)]
+        for g, k in enumerate(unlabeled):
+            si, li = index[k]
+            rows[si].append(li)
+            gpos[si].append(g)
+        shards = []
+        for si in range(self.replicas):
+            r = np.asarray(rows[si], np.int64)
+            shards.append(ShardView(
+                feats=feats_l[si][r] if r.size else feats_l[si][:0],
+                probs=probs_l[si][r] if r.size else probs_l[si][:0],
+                gidx=np.asarray(gpos[si], np.int64)))
+        labeled_emb = None
+        if self._labeled_keys:
+            lab = [index[k] for k in self._labeled_keys if k in index]
+            if lab:
+                import jax.numpy as jnp
+                labeled_emb = jnp.asarray(
+                    np.stack([feats_l[si][li] for si, li in lab]))
+        idx = np.asarray(strat.select_sharded(
+            jax.random.PRNGKey(rng_seed), budget, shards,
+            labeled_embeddings=labeled_emb,
+            executor=self.server.shard_executor()))
         return {"keys": [unlabeled[i] for i in idx],
                 "indices": idx.tolist(), "strategy": strategy,
                 "cache": self.server.cache.stats()}
@@ -286,10 +535,16 @@ class ALSession:
 
     # -------------------------------------------------------------- misc --
     def stats(self) -> dict:
+        with self._ingest_cv:
+            pending = len(self._ingest_queue) + (1 if self._ingest_busy
+                                                 else 0)
         return {"pool": len(self._keys), "labeled": len(self._labeled_keys),
                 "pool_version": self.pool_version,
                 "head_version": self.head_version,
                 "artifact_builds": self.artifact_builds,
+                "replicas": self.replicas,
+                "ingest_pending": pending,
+                "ingest_batches": self.ingest_batches,
                 "pipeline": self.last_pipeline_stats}
 
 
@@ -316,7 +571,21 @@ class ALServer:
         self.fetch_latency_s = fetch_latency_s
         self._sessions: Dict[str, ALSession] = {}
         self._sessions_lock = threading.Lock()
+        self._shard_pool: Optional[cf.ThreadPoolExecutor] = None
+        self._shard_pool_lock = threading.Lock()
         self.create_session(DEFAULT_SESSION)
+
+    def shard_executor(self) -> Optional[cf.ThreadPoolExecutor]:
+        """Shared thread pool for per-shard fan-out (artifact builds,
+        per-shard scoring, ingest embedding). Lazy; None at replicas=1."""
+        if self.config.replicas <= 1:
+            return None
+        with self._shard_pool_lock:
+            if self._shard_pool is None:
+                self._shard_pool = cf.ThreadPoolExecutor(
+                    max_workers=self.config.replicas,
+                    thread_name_prefix="shard")
+            return self._shard_pool
 
     # ---------------------------------------------------------- sessions --
     def create_session(self, session_id: Optional[str] = None) -> str:
@@ -340,7 +609,9 @@ class ALServer:
         if session_id == DEFAULT_SESSION:
             raise ValueError("the default session cannot be closed")
         with self._sessions_lock:
-            self._sessions.pop(session_id, None)
+            sess = self._sessions.pop(session_id, None)
+        if sess is not None:
+            sess.close()     # stop its ingest worker
 
     def session_ids(self) -> List[str]:
         with self._sessions_lock:
@@ -383,6 +654,31 @@ class ALServer:
         feats = self.backend.features(stacked)
         return [feats[i] for i in range(n_valid)]
 
+    def _process_replicated(self, todo):
+        """Embed a drained ingest batch: group items by replica shard and
+        run the stage pipeline per shard in parallel (each group rides its
+        own DynamicBatcher). Falls back to one pipeline at replicas=1."""
+        replicas = max(self.config.replicas, 1)
+        if replicas == 1:
+            return self._process(todo, pipelined=True)
+        groups = [[] for _ in range(replicas)]
+        for k, it in todo:
+            groups[replica_of(k, replicas)].append((k, it))
+        groups = [g for g in groups if g]
+        if len(groups) == 1:
+            return self._process(groups[0], pipelined=True)
+        executor = self.shard_executor()
+        per_group = list(executor.map(
+            lambda g: self._process(g, pipelined=True), groups))
+        # keep the single-pipeline stats shape (one dict per stage): sum
+        # each stage's counters across the parallel per-shard pipelines
+        merged = [dict(stage) for stage in per_group[0]]
+        for stats in per_group[1:]:
+            for agg, stage in zip(merged, stats):
+                for field in ("items", "busy_s", "wait_s"):
+                    agg[field] += stage[field]
+        return merged
+
     def _auto_candidates(self) -> List[str]:
         """The PSHEA agent's strategy registry: the paper's 7, plus the
         weighted fused-round hybrids when configured ("hybrid")."""
@@ -397,8 +693,13 @@ class ALServer:
 
     # --------------------------------------- single-tenant facade (compat) --
     def push_data(self, items: Sequence[np.ndarray], pipelined: bool = True,
-                  session: Optional[str] = None) -> List[str]:
-        return self.session(session).push_data(items, pipelined=pipelined)
+                  session: Optional[str] = None,
+                  asynchronous: bool = False):
+        return self.session(session).push_data(items, pipelined=pipelined,
+                                               asynchronous=asynchronous)
+
+    def flush(self, session: Optional[str] = None) -> None:
+        return self.session(session).flush()
 
     def attach_oracle(self, oracle: Callable[[Sequence[str]], Sequence[int]],
                       eval_x: np.ndarray, eval_y: np.ndarray,

@@ -157,13 +157,20 @@ class RPCServer:
 
 
 class RPCClient:
+    """One connection, serial request/response pairs. ``call`` holds a lock
+    around the send+recv pair so multiple threads (e.g. the ALClient's
+    async-push I/O thread and the caller's thread) can share the
+    connection without interleaving frames."""
+
     def __init__(self, host: str, port: int, timeout: float = 60.0):
         self.sock = socket.create_connection((host, port), timeout=timeout)
+        self._lock = threading.Lock()
 
     def call(self, op: str, payload: Any = None, session: Any = None):
-        send_msg(self.sock, {"op": op, "payload": payload,
-                             "session": session})
-        resp = recv_msg(self.sock)
+        with self._lock:
+            send_msg(self.sock, {"op": op, "payload": payload,
+                                 "session": session})
+            resp = recv_msg(self.sock)
         if resp is None:
             raise ConnectionError("server closed connection")
         if not resp["ok"]:

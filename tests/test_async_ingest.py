@@ -1,0 +1,230 @@
+"""Asynchronous ingest: PushTicket futures, the flush/linearization
+barrier, once-per-drained-batch versioning, and (hypothesis, slow lane) an
+interleaving property test against a serial replay oracle — in the style
+of tests/test_pshea_properties.py."""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.data.synthetic import image_pool
+from repro.service.backends import MLPBackend
+from repro.service.client import ALClient, serve_tcp
+from repro.service.config import ALServiceConfig
+from repro.service.server import ALServer, PushTicket
+
+
+def _mlp_server(replicas=1, **cfg):
+    return ALServer(ALServiceConfig(batch_size=16, replicas=replicas, **cfg),
+                    backend=MLPBackend(in_dim=192, feat_dim=32))
+
+
+# ------------------------------------------------------------- basics --
+def test_ticket_keys_known_immediately_and_result_returns_them():
+    srv = _mlp_server(replicas=2)
+    X, _ = image_pool(12, seed=0)
+    sync_keys = None
+    t = srv.push_data(list(X), asynchronous=True)
+    assert isinstance(t, PushTicket)
+    assert len(t.keys) == 12                       # content hashes, eager
+    assert t.result(timeout=30) == t.keys
+    assert t.done()
+    srv.flush()
+    # keys are content-addressed: identical to a synchronous push
+    srv2 = _mlp_server()
+    sync_keys = srv2.push_data(list(X))
+    assert t.keys == sync_keys
+
+
+def test_flush_barrier_makes_rows_visible():
+    srv = _mlp_server(replicas=3)
+    X, _ = image_pool(30, seed=1)
+    tickets = [srv.push_data(list(X[i * 10:(i + 1) * 10]),
+                             asynchronous=True) for i in range(3)]
+    srv.flush()
+    assert all(t.done() for t in tickets)
+    st = srv.stats()
+    assert st["pool"] == 30
+    assert st["ingest_pending"] == 0
+
+
+def test_query_and_label_linearize_after_pending_ingests():
+    """query/label take the flush barrier implicitly: no explicit flush,
+    yet the queried pool must contain every previously pushed row."""
+    srv = _mlp_server(replicas=2)
+    X, Y = image_pool(24, seed=2)
+    t = srv.push_data(list(X), asynchronous=True)
+    res = srv.query(budget=24, strategy="lc")      # implicit barrier
+    assert sorted(res["keys"]) == sorted(t.keys)
+    srv.label(t.keys[:6], Y[:6])                   # labels resolve too
+    assert srv.stats()["labeled"] == 6
+
+
+def test_sync_push_orders_after_pending_async():
+    """A synchronous push issued after async pushes must append AFTER them
+    (pool order is push order)."""
+    srv = _mlp_server()
+    X, _ = image_pool(20, seed=3)
+    t = srv.push_data(list(X[:10]), asynchronous=True)
+    sync_keys = srv.push_data(list(X[10:]))
+    sess = srv.session()
+    assert sess._keys[:10] == t.keys
+    assert sess._keys[10:] == sync_keys
+
+
+def test_version_bumps_once_per_drained_batch():
+    """Many queued pushes fold into few drained batches; pool_version must
+    move once per batch, monotonically, never once per push."""
+    srv = _mlp_server(replicas=2)
+    X, _ = image_pool(60, seed=4)
+    n_push = 12
+    tickets = [srv.push_data(list(X[i * 5:(i + 1) * 5]), asynchronous=True)
+               for i in range(n_push)]
+    srv.flush()
+    assert all(t.done() for t in tickets)
+    st = srv.stats()
+    assert st["pool"] == 60
+    assert 1 <= st["pool_version"] <= n_push
+    assert st["pool_version"] == st["ingest_batches"]
+
+
+def test_duplicate_pushes_do_not_duplicate_rows():
+    srv = _mlp_server(replicas=2)
+    X, _ = image_pool(10, seed=5)
+    t1 = srv.push_data(list(X), asynchronous=True)
+    t2 = srv.push_data(list(X), asynchronous=True)  # same content
+    srv.flush()
+    assert t1.keys == t2.keys
+    assert srv.stats()["pool"] == 10
+
+
+def test_ingest_error_surfaces_on_flush():
+    """A push whose embedding fails must fail its ticket AND re-raise at
+    the next flush barrier instead of silently dropping rows."""
+    srv = _mlp_server()
+    bad = [np.zeros((7,), np.float32)]             # wrong in_dim -> matmul err
+    t = srv.push_data(bad, asynchronous=True)
+    with pytest.raises(BaseException):
+        t.result(timeout=30)
+    with pytest.raises(RuntimeError, match="asynchronous ingest failed"):
+        srv.flush()
+    srv.flush()                                    # error reported once
+
+
+def test_ingest_failure_isolated_to_the_malformed_push():
+    """A malformed push coalesced into the same drained batch as valid
+    pushes must not drop the valid pushes' rows: the worker re-integrates
+    each push individually and only the bad ticket fails."""
+    srv = _mlp_server()
+    X, _ = image_pool(16, seed=7)
+    # stall the worker so the good and bad pushes coalesce into one batch
+    sess = srv.session()
+    with sess._ingest_cv:
+        good1 = sess.push_data(list(X[:8]), asynchronous=True)
+        bad = sess.push_data([np.zeros((7,), np.float32)],
+                             asynchronous=True)
+        good2 = sess.push_data(list(X[8:]), asynchronous=True)
+    assert good1.result(timeout=30) == good1.keys
+    assert good2.result(timeout=30) == good2.keys
+    with pytest.raises(BaseException):
+        bad.result(timeout=30)
+    with pytest.raises(RuntimeError, match="asynchronous ingest failed"):
+        srv.flush()
+    assert srv.stats()["pool"] == 16               # no valid row lost
+
+
+def test_closed_session_rejects_async_push():
+    srv = _mlp_server()
+    sid = srv.create_session()
+    sess = srv.session(sid)
+    srv.close_session(sid)
+    with pytest.raises(RuntimeError, match="closed"):
+        sess.push_data([np.zeros((192,), np.float32)], asynchronous=True)
+
+
+def test_tcp_async_push_and_flush():
+    srv = _mlp_server(replicas=3)
+    rpc = serve_tcp(srv)
+    cli = ALClient(url=f"127.0.0.1:{rpc.port}", session="new")
+    try:
+        X, _ = image_pool(24, seed=6)
+        tickets = [cli.push_data(list(X[i * 8:(i + 1) * 8]),
+                                 asynchronous=True) for i in range(3)]
+        assert all(len(t.keys) == 8 for t in tickets)
+        for t in tickets:
+            t.result(timeout=30)                   # server accepted
+        cli.flush()                                # integration barrier
+        st = cli.stats()
+        assert st["pool"] == 24 and st["ingest_pending"] == 0
+        res = cli.query(5, "lc")
+        assert len(res["keys"]) == 5
+    finally:
+        cli.close()
+        rpc.stop()
+
+
+# --------------------------------------- interleaving property (slow) --
+@pytest.mark.slow
+def test_async_interleaving_matches_serial_replay():
+    """Hypothesis: any interleaving of push_data(asynchronous=True), label,
+    query and flush must match a serial replay oracle that pushes
+    synchronously — versions monotone, no lost rows, and every barrier op
+    observes all rows pushed before it."""
+    hyp = pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    X, Y = image_pool(72, seed=9)
+    chunks = [list(X[i * 6:(i + 1) * 6]) for i in range(12)]
+    ops_st = st.lists(
+        st.one_of(
+            st.tuples(st.just("push"), st.integers(0, 11)),
+            st.tuples(st.just("label"), st.integers(1, 4)),
+            st.tuples(st.just("query"), st.integers(1, 5)),
+            st.tuples(st.just("flush"), st.just(0)),
+        ), min_size=1, max_size=10)
+
+    @settings(max_examples=15, deadline=None)
+    @given(ops=ops_st, replicas=st.sampled_from([2, 3]))
+    def run(ops, replicas):
+        asyn = _mlp_server(replicas=replicas)
+        oracle = _mlp_server()
+        pushed = set()
+        versions = [asyn.stats()["pool_version"]]
+        for op, arg in ops:
+            if op == "push":
+                t = asyn.push_data(chunks[arg], asynchronous=True)
+                ok = oracle.push_data(chunks[arg])
+                assert t.keys == ok                 # content addressing
+                pushed.update(ok)
+            elif op == "label":
+                # deterministic pick: first `arg` unlabeled keys in pool
+                # order, resolved AFTER the barrier on both servers
+                asyn.flush()
+                sess = asyn.session()
+                todo = [k for k in sess._keys
+                        if k not in sess._labels][:arg]
+                ys = [hash(k) % 10 for k in todo]
+                asyn.label(todo, ys)
+                oracle.label(todo, ys)
+            elif op == "query":
+                budget = min(arg, len(pushed))
+                if budget:
+                    res = asyn.query(budget=budget, strategy="lc")
+                    assert len(res["keys"]) == len(set(res["keys"]))
+                    assert set(res["keys"]) <= pushed
+            else:
+                asyn.flush()
+            versions.append(asyn.stats()["pool_version"])
+        asyn.flush()
+        # versions monotone
+        assert all(a <= b for a, b in zip(versions, versions[1:]))
+        # no lost rows: both servers hold exactly the pushed content, in
+        # the same order (barriers linearize every push before the next op)
+        a_sess, o_sess = asyn.session(), oracle.session()
+        assert a_sess._keys == o_sess._keys
+        assert set(a_sess._keys) == pushed
+        assert a_sess._labels == o_sess._labels
+        assert asyn.stats()["ingest_pending"] == 0
+
+    run()

@@ -77,6 +77,64 @@ def test_multitenant_hammer_no_deadlock_no_leakage():
     assert _wait_threads(before) <= before + 1        # no thread leak
 
 
+def test_multitenant_hammer_sharded_eviction_async():
+    """The hammer at replicas=3 with a cache too small for any tenant's
+    pool: interleaved async pushes, sharded queries (uncertainty AND
+    k-center families, forcing per-shard recompute of evicted embeddings
+    from raw copies), labels and training must all complete with no
+    deadlock, no leakage and no lost rows."""
+    srv = _mlp_server(replicas=3, cache_bytes=12 * 32 * 4)
+    n_threads, iters, per_push = 4, 3, 18
+    errors = []
+    seen = {}
+
+    def tenant(tid):
+        try:
+            sid = srv.create_session()
+            mine = set()
+            X, Y = image_pool(iters * per_push, seed=300 + tid)
+            for it in range(iters):
+                xs = list(X[it * per_push:(it + 1) * per_push])
+                ys = Y[it * per_push:(it + 1) * per_push]
+                ticket = srv.push_data(xs, asynchronous=(it % 2 == 0),
+                                       session=sid)
+                keys = (ticket.result(timeout=60)
+                        if it % 2 == 0 else ticket)
+                mine.update(keys)
+                for strat in ("lc", "kcg"):
+                    res = srv.query(budget=4, strategy=strat, session=sid)
+                    assert set(res["keys"]) <= mine, "cross-session leakage"
+                srv.label(keys[:4], ys[:4], session=sid)
+                srv.train_and_eval(session=sid)
+            srv.flush(session=sid)
+            st = srv.stats(session=sid)
+            assert st["pool"] == len(mine), "lost rows"
+            assert st["ingest_pending"] == 0
+            seen[tid] = mine
+        except Exception as e:
+            errors.append((tid, e))
+
+    before = threading.active_count()
+    threads = [threading.Thread(target=tenant, args=(i,), daemon=True)
+               for i in range(n_threads)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=180)
+    assert not any(t.is_alive() for t in threads), "sharded hammer deadlocked"
+    assert not errors, errors
+    assert srv.cache.stats()["entries"] < n_threads * iters * per_push, \
+        "eviction never happened; shrink cache_bytes"
+    all_keys = [k for s in seen.values() for k in s]
+    assert len(all_keys) == len(set(all_keys))        # disjoint pools
+    assert srv.stats()["pool"] == 0                   # default untouched
+    # only long-lived infrastructure may outlive the tenants: one parked
+    # ingest daemon per session that pushed async, plus the server's
+    # shard-executor workers (<= replicas) — anything beyond that leaked
+    budget = before + n_threads + srv.config.replicas
+    assert _wait_threads(budget) <= budget
+
+
 def test_tcp_concurrent_clients_no_deadlock():
     """Same interleaving through the TCP transport's worker pool."""
     srv = _mlp_server()

@@ -1,0 +1,205 @@
+"""Replica sharding: every zoo strategy's sharded selection must be
+bit-identical to ``replicas=1`` across shard counts and ragged pools,
+including the empty-shard edge; plus the merge primitives themselves and
+the evicted-embedding recompute path under sharding."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.selection import (ShardView, gather_rows, locate_row,
+                                  replica_of, replica_top_k)
+from repro.core.strategies.zoo import SHARDED_COMPLETE, ZOO
+from repro.data.synthetic import image_pool
+from repro.service.backends import MLPBackend
+from repro.service.config import ALServiceConfig
+from repro.service.server import ALServer
+
+REPLICAS = (1, 2, 3, 7)
+STRATEGIES = sorted(ZOO)
+
+
+def _mlp_server(replicas, **cfg):
+    return ALServer(ALServiceConfig(batch_size=16, replicas=replicas, **cfg),
+                    backend=MLPBackend(in_dim=192, feat_dim=32))
+
+
+def _make_shards(feats, probs, keys, replicas):
+    """Hash-partition a pool the way the session does: shard-local rows
+    keep global order."""
+    shards = []
+    for s in range(replicas):
+        g = np.asarray([i for i, k in enumerate(keys)
+                        if replica_of(k, replicas) == s], np.int64)
+        shards.append(ShardView(feats=feats[g] if g.size else feats[:0],
+                                probs=probs[g] if g.size else probs[:0],
+                                gidx=g))
+    return shards
+
+
+# ----------------------------------------------------- merge primitives --
+def test_replica_of_stable_and_in_range():
+    keys = [f"key-{i}" for i in range(200)]
+    for r in (1, 2, 3, 7):
+        shards = [replica_of(k, r) for k in keys]
+        assert all(0 <= s < r for s in shards)
+        assert shards == [replica_of(k, r) for k in keys]  # deterministic
+    # every shard of a reasonably sized pool is populated at small R
+    assert set(replica_of(k, 3) for k in keys) == {0, 1, 2}
+
+
+def test_replica_top_k_matches_lax_top_k_with_ties():
+    rng = np.random.default_rng(0)
+    # coarse quantization manufactures many exact float ties
+    scores = (rng.integers(0, 5, size=97) / 4.0).astype(np.float32)
+    keys = [f"t{i}" for i in range(97)]
+    feats = rng.standard_normal((97, 4)).astype(np.float32)
+    single_v, single_i = jax.lax.top_k(jnp.asarray(scores), 10)
+    for r in REPLICAS:
+        shards = _make_shards(feats, feats, keys, r)
+        sc = [jnp.asarray(scores[np.asarray(s.gidx)]) for s in shards]
+        gidx, vals = replica_top_k(shards, sc, 10)
+        assert gidx.tolist() == np.asarray(single_i).tolist(), r
+        assert vals.tolist() == np.asarray(single_v).tolist(), r
+
+
+def test_locate_and_gather_rows():
+    rng = np.random.default_rng(1)
+    feats = rng.standard_normal((31, 8)).astype(np.float32)
+    keys = [f"g{i}" for i in range(31)]
+    shards = _make_shards(feats, feats, keys, 4)
+    rows = [0, 30, 17, 17, 5]
+    np.testing.assert_array_equal(gather_rows(shards, rows), feats[rows])
+    for g in rows:
+        si, li = locate_row(shards, g)
+        assert int(shards[si].gidx[li]) == g
+    with pytest.raises(IndexError):
+        locate_row(shards, 31)
+
+
+# ------------------------------------------- strategy-level equivalence --
+@pytest.fixture(scope="module")
+def pool_artifacts():
+    """A ragged-size pool with probs/embeddings + labeled rows."""
+    rng = np.random.default_rng(7)
+    N, d, C = 61, 16, 10
+    feats = rng.standard_normal((N, d)).astype(np.float32)
+    logits = rng.standard_normal((N, C)).astype(np.float32)
+    probs = np.asarray(jax.nn.softmax(jnp.asarray(logits)))
+    labeled = rng.standard_normal((7, d)).astype(np.float32)
+    keys = [f"pool-{i}" for i in range(N)]
+    return feats, probs, labeled, keys
+
+
+@pytest.mark.parametrize("strategy", STRATEGIES)
+def test_sharded_strategy_bit_identical(strategy, pool_artifacts):
+    feats, probs, labeled, keys = pool_artifacts
+    strat = ZOO[strategy]
+    budget = 6
+    single = np.asarray(strat.select(
+        jax.random.PRNGKey(3), budget,
+        probs=jnp.asarray(probs) if "probs" in strat.needs else None,
+        embeddings=jnp.asarray(feats) if "embeddings" in strat.needs
+        else None,
+        labeled_embeddings=(jnp.asarray(labeled)
+                            if "embeddings" in strat.needs else None)))
+    for r in REPLICAS:
+        sharded = np.asarray(strat.select_sharded(
+            jax.random.PRNGKey(3), budget,
+            _make_shards(feats, probs, keys, r),
+            labeled_embeddings=(jnp.asarray(labeled)
+                                if "embeddings" in strat.needs else None)))
+        assert sharded.tolist() == single.tolist(), \
+            f"{strategy} diverged at replicas={r}"
+
+
+@pytest.mark.parametrize("strategy", STRATEGIES)
+def test_sharded_strategy_empty_shard_edge(strategy):
+    """Pool smaller than the shard count: some shards are empty and must
+    neither crash nor perturb the merge."""
+    rng = np.random.default_rng(11)
+    N, d, C = 5, 16, 10
+    feats = rng.standard_normal((N, d)).astype(np.float32)
+    probs = np.asarray(jax.nn.softmax(
+        jnp.asarray(rng.standard_normal((N, C)).astype(np.float32))))
+    keys = [f"tiny-{i}" for i in range(N)]
+    shards = _make_shards(feats, probs, keys, 7)
+    assert any(s.n == 0 for s in shards), "edge requires an empty shard"
+    strat = ZOO[strategy]
+    single = np.asarray(strat.select(
+        jax.random.PRNGKey(9), 3,
+        probs=jnp.asarray(probs) if "probs" in strat.needs else None,
+        embeddings=jnp.asarray(feats) if "embeddings" in strat.needs
+        else None,
+        labeled_embeddings=None))
+    sharded = np.asarray(strat.select_sharded(jax.random.PRNGKey(9), 3,
+                                              shards))
+    assert sharded.tolist() == single.tolist()
+
+
+def test_every_zoo_strategy_has_a_sharded_path():
+    assert SHARDED_COMPLETE
+    assert all(ZOO[s].sharded_fn is not None for s in ZOO)
+
+
+# --------------------------------------------- server-level equivalence --
+@pytest.fixture(scope="module")
+def servers():
+    """One server per shard count, identically populated (same pushes,
+    labels and head training), over two ragged pool sizes."""
+    X, Y = image_pool(53, seed=5)
+    out = {}
+    for r in REPLICAS:
+        srv = _mlp_server(r)
+        keys = srv.push_data(list(X))
+        srv.label(keys[:11], Y[:11])
+        srv.train_and_eval()
+        out[r] = srv
+    return out
+
+
+@pytest.mark.parametrize("strategy", STRATEGIES)
+def test_server_query_bit_identical_across_replicas(strategy, servers):
+    ref = servers[1].query(budget=5, strategy=strategy, rng_seed=4)
+    for r in REPLICAS[1:]:
+        res = servers[r].query(budget=5, strategy=strategy, rng_seed=4)
+        assert res["keys"] == ref["keys"], f"replicas={r}"
+        assert res["indices"] == ref["indices"], f"replicas={r}"
+
+
+def test_server_budget_exceeding_pool_across_replicas(servers):
+    """budget > unlabeled clamps identically on every shard count."""
+    ref = servers[1].query(budget=500, strategy="lc", rng_seed=0)
+    assert len(ref["keys"]) == 53 - 11
+    for r in REPLICAS[1:]:
+        res = servers[r].query(budget=500, strategy="lc", rng_seed=0)
+        assert res["keys"] == ref["keys"]
+
+
+def test_sharded_artifact_cache_hits_and_invalidation():
+    X, Y = image_pool(30, seed=6)
+    srv = _mlp_server(3)
+    keys = srv.push_data(list(X))
+    sess = srv.session()
+    srv.query(budget=4, strategy="lc")
+    srv.query(budget=4, strategy="kcg")
+    assert sess.artifact_builds == 1          # per-shard set built once
+    srv.label(keys[:6], Y[:6])                # version bump -> rebuild
+    srv.query(budget=4, strategy="lc")
+    assert sess.artifact_builds == 2
+
+
+def test_sharded_tiny_cache_recomputes_evicted_embeddings():
+    """Eviction under sharding: per-shard artifact builds recompute evicted
+    embeddings from the session's raw copies instead of crashing."""
+    X, Y = image_pool(60, seed=8)
+    srv = _mlp_server(3, cache_bytes=10 * 32 * 4)   # ~10 of 60 feats fit
+    keys = srv.push_data(list(X))
+    assert srv.cache.stats()["entries"] < 60        # eviction happened
+    res = srv.query(budget=6, strategy="lc")
+    assert len(res["keys"]) == 6
+    res = srv.query(budget=6, strategy="kcg")
+    assert len(set(res["keys"])) == 6
+    srv.label(keys[:20], Y[:20])
+    assert 0.0 <= srv.train_and_eval() <= 1.0
