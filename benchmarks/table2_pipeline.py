@@ -32,6 +32,16 @@
    and ingest throughput with push_data(asynchronous=True) (server-side
    queue, per-shard parallel embedding, one version bump per drained
    batch) is asserted >= 1.3x the synchronous push loop at 4 shards.
+
+6. incremental pool artifacts: op-accounted invalidation matrix of the
+   per-shard epoch-versioned artifact columns — a B-row push embeds
+   exactly B rows and rebuilds only the shards those rows hash to,
+   train_and_eval re-embeds nothing (head-only prob refresh), label
+   rebuilds nothing, and every stage's selections are bit-identical to
+   ``artifact_cache: false`` from-scratch builds at replicas 1 and 4.
+   CI re-asserts the emitted counts from the uploaded JSON
+   (scripts/assert_table2_incremental.py), so an O(N)-rebuild regression
+   fails the lane rather than just slowing it.
 """
 from __future__ import annotations
 
@@ -288,10 +298,127 @@ def _replica_sharding(n: int = 240, budget: int = 24,
     ]
 
 
+def _incremental_artifacts(n: int = 192, push_b: int = 3,
+                           budget: int = 16) -> list:
+    """6. incremental pool artifacts (all asserted, op-accounted): pushing
+    ``push_b`` rows into a 4-shard pool embeds exactly ``push_b`` rows and
+    rebuilds only the shards those rows hash to; ``train_and_eval``
+    triggers zero embeds (head-only prob refresh over cached feats);
+    ``label`` triggers zero artifact rebuilds; and every selection stays
+    bit-identical to ``artifact_cache: false`` from-scratch builds at
+    replicas 1 and 4.
+
+    The timed row compares the artifact work of one small push on each
+    engine, XLA-warmed by a first identical push: the delta refresh
+    re-uses its chunk shapes, while the from-scratch rebuild re-gathers
+    and re-forwards the whole pool at a never-seen-before pool size — a
+    retrace cost the O(delta) path structurally avoids (informational;
+    the asserted contract is the op counts, which are machine-free)."""
+    from repro.core.selection import replica_of
+
+    STRATS = ("lc", "kcg", "coreset", "badge")
+    X, Y, EX, EY = make_pool(n=n + 2 * push_b)
+    base_x, base_y = list(X[:n]), list(Y[:n])
+    extra_x = list(X[n:])          # two B-row pushes: accounted, then timed
+    picks = {}           # (replicas, cached) -> [stage selections]
+    timings = {}         # (replicas, cached) -> query-after-push seconds
+    acct = None          # op accounting from the cached replicas=4 run
+
+    for replicas in (1, 4):
+        for cached in (True, False):
+            srv, key2y = make_server(base_x, base_y, EX, EY, batch_size=32,
+                                     push=True, replicas=replicas,
+                                     artifact_cache=cached)
+            sess = srv.session()
+            stages = []
+
+            def queries(seed):
+                return [srv.query(budget=budget, strategy=s,
+                                  rng_seed=seed)["keys"] for s in STRATS]
+
+            stages.append(queries(3))                  # cold full build
+            warm_start(srv, key2y)                     # label 30 + retrain
+            e_train = srv.embed_rows
+            stages.append(queries(5))                  # probs-only refresh
+            probs_embeds = srv.embed_rows - e_train
+            # label-only step: deterministic pick, same on every server
+            more = [k for k in sess._keys if k not in sess._labels][:10]
+            srv.label(more, [key2y[k] for k in more])
+            b_label = sess.artifact_builds
+            stages.append(queries(6))                  # must be a pure hit
+            label_rebuilds = sess.artifact_builds - b_label
+            b_shard = [c.builds for c in sess._columns]
+            e_push = srv.embed_rows
+            new_keys = srv.push_data(extra_x[:push_b])  # the B-row delta
+            push_embeds = srv.embed_rows - e_push
+            sess._artifact_snapshot()                  # delta refresh
+            rebuilt = {si for si, (a, b) in enumerate(
+                zip([c.builds for c in sess._columns], b_shard)) if a > b}
+            delta_builds = (sess.delta_builds
+                            if cached else len(rebuilt))
+            # time the artifact work of a SECOND small push, now that the
+            # delta/build shapes are XLA-warm: a delta refresh (cached) vs
+            # a from-scratch O(pool) rebuild (uncached) of the same change
+            srv.push_data(extra_x[push_b:])
+            t0 = time.perf_counter()
+            sess._artifact_snapshot()
+            timings[(replicas, cached)] = time.perf_counter() - t0
+            stages.append(queries(7))                  # scores post-push pool
+            picks[(replicas, cached)] = stages
+            if replicas == 4 and cached:
+                acct = {
+                    "label_rebuilds": label_rebuilds,
+                    "probs_embeds": probs_embeds,
+                    "probs_refreshes": sess.probs_refreshes,
+                    "push_embeds": push_embeds,
+                    "touched": sorted({replica_of(k, 4) for k in new_keys}),
+                    "rebuilt": sorted(rebuilt),
+                    "delta_builds": delta_builds,
+                }
+
+    for replicas in (1, 4):
+        assert picks[(replicas, True)] == picks[(replicas, False)], \
+            f"incremental engine diverged from from-scratch at {replicas}"
+    assert picks[(1, True)] == picks[(4, True)], \
+        "sharded selections diverged from replicas=1"
+    assert acct["label_rebuilds"] == 0, acct
+    assert acct["probs_embeds"] == 0, acct
+    assert acct["probs_refreshes"] == 4, acct         # every populated shard
+    assert acct["push_embeds"] == push_b, acct
+    assert acct["rebuilt"] == acct["touched"], acct
+    # a 3-row push cannot touch all 4 shards: the untouched-shard cache
+    # hit is exercised for real, not vacuously
+    assert len(acct["touched"]) < 4, acct
+    assert acct["delta_builds"] == len(acct["touched"]), acct
+    speed = (timings[(4, False)] / timings[(4, True)]
+             if timings[(4, True)] > 0 else float("inf"))
+    return [
+        row("table2/incremental_push", 0.0,
+            f"push_rows={push_b};embed_rows={acct['push_embeds']};"
+            f"touched_shards={len(acct['touched'])};"
+            f"rebuilt_shards={len(acct['rebuilt'])};"
+            f"delta_builds={acct['delta_builds']}"),
+        row("table2/incremental_retrain", 0.0,
+            f"embed_rows={acct['probs_embeds']};"
+            f"probs_refreshes={acct['probs_refreshes']}"),
+        row("table2/incremental_label", 0.0,
+            f"artifact_rebuilds={acct['label_rebuilds']}"),
+        row("table2/incremental_bit_identity", 0.0,
+            f"replicas=1+4;strategies={'+'.join(STRATS)};stages=3;"
+            f"bit_identical=True"),
+        row("table2/incremental_refresh_after_push",
+            timings[(4, True)] * 1e6,
+            f"delta_refresh_s={timings[(4, True)]:.4f};"
+            f"from_scratch_s={timings[(4, False)]:.4f};"
+            f"speedup={speed:.2f}x"),
+    ]
+
+
 def run() -> list:
     out = _pipeline_vs_serial()
     out += _concurrent_clients()
     out += _parallel_pshea()
     out += _artifact_cache_matrix()
     out += _replica_sharding()
+    out += _incremental_artifacts()
     return out

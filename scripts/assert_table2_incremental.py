@@ -1,0 +1,71 @@
+"""CI gate for the incremental-artifact op accounting (tier-2 lane).
+
+The table2 benchmark already asserts its invariants in-process; this
+script re-asserts the incremental-artifact counts from the UPLOADED JSON
+(`benchmarks.run --json`), so an O(N)-rebuild regression — or a benchmark
+edit that silently drops the section — fails the workflow on the artifact
+it publishes rather than just slowing the lane.
+
+    python scripts/assert_table2_incremental.py table2_pipeline.json
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+
+def parse_derived(derived: str) -> dict:
+    out = {}
+    for part in derived.split(";"):
+        if "=" in part:
+            k, _, v = part.partition("=")
+            out[k] = v
+    return out
+
+
+def main(path: str) -> None:
+    with open(path) as f:
+        doc = json.load(f)
+    rows = {r["name"]: parse_derived(r["derived"]) for r in doc["rows"]}
+    errors = []
+
+    def check(name, field, want=None, cast=str):
+        if name not in rows:
+            errors.append(f"missing benchmark row {name!r}")
+            return None
+        if field not in rows[name]:
+            errors.append(f"{name}: missing field {field!r}")
+            return None
+        got = cast(rows[name][field])
+        if want is not None and got != want:
+            errors.append(f"{name}: {field}={got!r}, expected {want!r}")
+        return got
+
+    # a B-row push embeds exactly B rows and rebuilds only touched shards
+    push_rows = check("table2/incremental_push", "push_rows", cast=int)
+    check("table2/incremental_push", "embed_rows", want=push_rows, cast=int)
+    touched = check("table2/incremental_push", "touched_shards", cast=int)
+    check("table2/incremental_push", "rebuilt_shards", want=touched,
+          cast=int)
+    if touched is not None and touched >= 4:
+        errors.append(f"push touched all {touched} shards: the "
+                      f"untouched-shard cache hit went unexercised")
+    # retrain is a head-only prob refresh: zero re-embeds
+    check("table2/incremental_retrain", "embed_rows", want=0, cast=int)
+    # label invalidates nothing
+    check("table2/incremental_label", "artifact_rebuilds", want=0, cast=int)
+    # and none of it may change selections vs from-scratch builds
+    check("table2/incremental_bit_identity", "bit_identical", want="True")
+
+    if errors:
+        print("incremental-artifact regression:", file=sys.stderr)
+        for e in errors:
+            print(f"  - {e}", file=sys.stderr)
+        sys.exit(1)
+    print(f"incremental-artifact accounting OK "
+          f"(push={push_rows} rows -> {push_rows} embeds, "
+          f"{touched} shards rebuilt; retrain=0 embeds; label=0 rebuilds)")
+
+
+if __name__ == "__main__":
+    main(sys.argv[1] if len(sys.argv) > 1 else "table2_pipeline.json")

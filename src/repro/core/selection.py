@@ -31,6 +31,12 @@ constructed to be bit-identical to the single-pool path:
   * cross-shard merges order candidates by (value desc, global index asc),
     exactly ``jnp.argmax`` / ``jax.lax.top_k`` semantics on the
     concatenated vector.
+
+``ShardColumns`` + ``grow_append`` are the storage side of the same
+contract: each shard's (feats, probs) artifact columns live in growable
+append-only buffers with per-column epoch stamps, so a data change
+refreshes O(delta) rows on the touched shards only (incremental view
+maintenance) while queries pin immutable row-range snapshots.
 """
 from __future__ import annotations
 
@@ -202,6 +208,91 @@ class ShardView:
     @property
     def n(self) -> int:
         return int(self.gidx.shape[0])
+
+
+def grow_append(buf: Optional[np.ndarray], rows: int,
+                new: np.ndarray) -> Tuple[np.ndarray, int]:
+    """Append ``new`` rows to a growable buffer; amortized O(rows added).
+
+    Returns ``(buffer, valid_rows)``. Capacity doubles on overflow, so a
+    pool built from B-row pushes costs O(N) row copies total instead of the
+    O(N^2) of re-stacking the pool per push. The append discipline is what
+    makes buffers safe to snapshot concurrently: rows ``[0:rows]`` are
+    never rewritten (a reallocation leaves the old buffer intact for any
+    pinned view), so a reader holding ``buf[:rows]`` can never observe a
+    mutation.
+    """
+    new = np.asarray(new)
+    if buf is not None and rows and (buf.shape[1:] != new.shape[1:]
+                                     or buf.dtype != new.dtype):
+        # appending incompatible rows would either crash the copy or
+        # silently cast the old rows — both corrupt the column; fail loud
+        raise ValueError(
+            f"grow_append: rows of shape {new.shape[1:]}/{new.dtype} "
+            f"cannot extend a buffer of {buf.shape[1:]}/{buf.dtype}")
+    need = rows + int(new.shape[0])
+    if buf is None or buf.shape[0] < need or buf.shape[1:] != new.shape[1:] \
+            or buf.dtype != new.dtype:     # latter two only when rows == 0
+        cap = max(need, 2 * (0 if buf is None else int(buf.shape[0])), 8)
+        grown = np.empty((cap,) + new.shape[1:], new.dtype)
+        if buf is not None and rows:
+            grown[:rows] = buf[:rows]
+        buf = grown
+    buf[rows:need] = new
+    return buf, need
+
+
+class ShardColumns:
+    """Incrementally-maintained artifact columns for ONE replica shard.
+
+    The two columns have decoupled lifetimes, each stamped with the epoch
+    it is fresh at:
+
+    ``feats``
+        Growable (cap, d) buffer; rows ``[0:feats_rows]`` valid, stamped
+        ``feats_epoch`` (the shard's ``rows_epoch`` at refresh). A delta
+        refresh embeds ONLY ``keys[feats_rows:]`` and extends the buffer
+        in place — O(delta), never a full re-stack.
+    ``probs``
+        Growable (cap, C) buffer; rows ``[0:probs_rows]`` valid, stamped
+        ``probs_head_epoch``. A head bump recomputes all rows from the
+        cached feats into a FRESH buffer (zero re-embeds, and pinned
+        snapshots keep their old rows); a rows-only change appends probs
+        for just the new rows.
+
+    Thread contract: mutated only under the owning session's artifact
+    lock; ``keys`` is append-only (appends happen under the session pool
+    lock), so slicing it against a captured bound is race-free.
+    """
+
+    __slots__ = ("keys", "rows_epoch", "feats", "feats_rows", "feats_epoch",
+                 "probs", "probs_rows", "probs_head_epoch", "builds")
+
+    def __init__(self):
+        self.keys: list = []          # shard-local key order == global order
+        self.rows_epoch = 0           # bumps per row-appending event
+        self.feats: Optional[np.ndarray] = None
+        self.feats_rows = 0
+        self.feats_epoch = 0
+        self.probs: Optional[np.ndarray] = None
+        self.probs_rows = 0
+        self.probs_head_epoch = -1    # -1 = never computed
+        self.builds = 0               # refresh events that touched this shard
+
+    def reset(self) -> None:
+        """Drop both columns (the non-incremental full-rebuild path)."""
+        self.feats, self.feats_rows, self.feats_epoch = None, 0, 0
+        self.probs, self.probs_rows, self.probs_head_epoch = None, 0, -1
+
+    def feats_view(self, d: int) -> np.ndarray:
+        if self.feats is None:
+            return np.zeros((0, d), np.float32)
+        return self.feats[:self.feats_rows]
+
+    def probs_view(self, c: int) -> np.ndarray:
+        if self.probs is None:
+            return np.zeros((0, c), np.float32)
+        return self.probs[:self.probs_rows]
 
 
 def replica_map(fn: Callable, items: Sequence, executor=None) -> list:

@@ -23,10 +23,19 @@ double buffering), and — when a TPU is attached or ``measure=True`` —
 re-ranks the model's shortlist by measured wall clock. Winners are cached
 per (N, d, dtype) shape key; ``report()`` exposes the cache so benchmarks
 can print the chosen blocks.
+
+Winners also persist to a result directory (``REPRO_AUTOTUNE_CACHE_DIR``,
+default ``~/.cache/repro/pairwise-autotune``; empty string disables) as
+one small JSON per shape key, so measured picks survive process restarts —
+and CI restores the directory across workflow runs with ``actions/cache``
+instead of re-measuring every run. Corrupt or unreadable entries are
+ignored and re-tuned.
 """
 from __future__ import annotations
 
 import dataclasses
+import json
+import os
 import time
 from typing import Dict, Optional, Tuple
 
@@ -51,6 +60,71 @@ class BlockChoice:
 
 
 _CACHE: Dict[Tuple[int, int, str], BlockChoice] = {}
+
+
+def cache_dir() -> Optional[str]:
+    """Result directory for persisted winners; None when disabled."""
+    d = os.environ.get("REPRO_AUTOTUNE_CACHE_DIR")
+    if d == "":
+        return None
+    return d or os.path.join(os.path.expanduser("~"), ".cache", "repro",
+                             "pairwise-autotune")
+
+
+def _disk_path(key: Tuple[int, int, str]) -> Optional[str]:
+    d = cache_dir()
+    if d is None:
+        return None
+    return os.path.join(d, f"n{key[0]}_d{key[1]}_{key[2]}.json")
+
+
+# bump when the candidate sets, the HBM/VMEM model, or the entry schema
+# change: older persisted winners are then ignored and re-tuned instead of
+# being trusted across a code change that invalidated them
+_DISK_FORMAT = 1
+
+
+def _disk_load(key: Tuple[int, int, str]) -> Optional[BlockChoice]:
+    path = _disk_path(key)
+    if path is None or not os.path.exists(path):
+        return None
+    try:
+        with open(path) as f:
+            raw = json.load(f)
+        if raw.get("format") != _DISK_FORMAT:
+            return None
+        choice = BlockChoice(int(raw["n_block"]), int(raw["r_block"]),
+                             float(raw["hbm_bytes"]), float(raw["wall_s"]),
+                             str(raw["source"]))
+    except (OSError, ValueError, KeyError, TypeError, AttributeError):
+        return None     # corrupt entry: fall through and re-tune
+    # never serve blocks the CURRENT candidate lists / VMEM model would
+    # reject (a stale-but-well-formed entry from different code)
+    n, d, _ = key
+    dtype_bytes = float(jnp.dtype(key[2]).itemsize)
+    if choice.n_block not in N_BLOCK_CANDIDATES \
+            or choice.r_block not in R_BLOCK_CANDIDATES \
+            or not _feasible(n, d, dtype_bytes, choice.n_block,
+                             choice.r_block):
+        return None
+    return choice
+
+
+def _disk_store(key: Tuple[int, int, str], choice: BlockChoice) -> None:
+    path = _disk_path(key)
+    if path is None:
+        return
+    try:
+        os.makedirs(os.path.dirname(path), exist_ok=True)
+        # write-then-rename so a killed run never leaves a torn entry for
+        # the next (possibly cached-in-CI) run to trip over
+        tmp = path + f".tmp.{os.getpid()}"
+        with open(tmp, "w") as f:
+            json.dump({"format": _DISK_FORMAT,
+                       **dataclasses.asdict(choice)}, f)
+        os.replace(tmp, path)
+    except OSError:
+        pass            # persistence is best-effort; the run still has _CACHE
 
 
 def _pad_to(x: int, m: int) -> int:
@@ -123,6 +197,14 @@ def autotune_blocks(n: int, d: int, dtype=jnp.float32,
     dtype_bytes = float(dt.itemsize)
     if measure is None:
         measure = _on_tpu()
+    # a persisted winner is reused when it is at least as informed as what
+    # this process would produce: measured entries always, model-only
+    # entries only for a model-only run (a TPU run re-measures and
+    # overwrites a stale model pick rather than trusting it)
+    disk = _disk_load(key)
+    if disk is not None and (disk.source == "measured" or not measure):
+        _CACHE[key] = disk
+        return disk
 
     # n_block is scored on the single-center round (R = 1, the greedy-loop
     # hot path); ties in modeled bytes break to the LARGER block (fewer
@@ -163,6 +245,7 @@ def autotune_blocks(n: int, d: int, dtype=jnp.float32,
                          round_hbm_bytes(n, d, dtype_bytes, best_nb, 1),
                          wall, source)
     _CACHE[key] = choice
+    _disk_store(key, choice)
     return choice
 
 
@@ -172,4 +255,6 @@ def report() -> Dict[Tuple[int, int, str], BlockChoice]:
 
 
 def clear_cache() -> None:
+    """Clear the in-memory cache only; persisted winners stay on disk (the
+    next autotune_blocks reloads them, exactly like a fresh process)."""
     _CACHE.clear()

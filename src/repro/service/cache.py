@@ -87,11 +87,17 @@ class EmbeddingCache:
                 self.hits += 1
                 return self._lru[key]
         val = self._unspill(key)
+        # counted under the lock: parallel per-shard artifact builds hammer
+        # get(), and the hit/miss tallies are part of the served stats now,
+        # so lost increments would misreport the cache's effectiveness
+        with self._lock:
+            if val is not None:
+                self.hits += 1
+            else:
+                self.misses += 1
         if val is not None:
-            self.hits += 1
             self.put(key, val)
             return val
-        self.misses += 1
         return None
 
     def require(self, key: str):

@@ -141,8 +141,10 @@ class ALClient:
         """Synchronous (default): embed + append now, return the keys.
         ``asynchronous=True``: return a ``PushTicket`` immediately —
         ``ticket.keys`` are the content hashes, ``ticket.result()`` waits
-        for the server's acceptance, and ``flush()`` (or any query/label)
-        is the barrier after which the rows are visible."""
+        for the server's acceptance (``timeout=`` raises ``TimeoutError``
+        past the deadline instead of blocking forever), and ``flush()``
+        (or any query/label) is the barrier after which the rows are
+        visible."""
         if self._local is not None:
             return self._local.push_data(data_list, session=self._session,
                                          asynchronous=asynchronous)

@@ -124,8 +124,15 @@ class ALServiceConfig:
     # PSHEA racing: >1 fans surviving candidates across that many worker
     # threads per round (bit-identical to serial; 0/1 = serial)
     pshea_workers: int = 0
-    # memoize (feats, probs) pool artifacts per (pool, head) version
+    # memoize (feats, probs) pool artifacts in per-shard epoch-stamped
+    # columns; False = from-scratch O(pool) builds every query (the
+    # bit-identity oracle the incremental engine is tested against)
     artifact_cache: bool = True
+    # True (default): delta builds — a push refreshes only the rows it
+    # appended on the shards it touched, a retrain refreshes probs only.
+    # False: a stale shard column rebuilds in full (debugging fallback;
+    # selections are bit-identical either way)
+    incremental_artifacts: bool = True
     # hard cap on concurrent TCP client connections (one transport worker
     # per live connection; extra clients queue until one disconnects)
     server_workers: int = 16
@@ -153,6 +160,7 @@ class ALServiceConfig:
             auto_candidates=strat.get("candidates", "paper"),
             pshea_workers=int(al.get("pshea_workers", 0)),
             artifact_cache=bool(al.get("artifact_cache", True)),
+            incremental_artifacts=bool(al.get("incremental_artifacts", True)),
             server_workers=int(worker.get("workers", 16)),
         )
 

@@ -20,10 +20,17 @@ Query path:
   round costs max(candidate) instead of sum(candidate); per-(strategy, round)
   rng streams keep the parallel schedule bit-identical to the serial one.
 
-Pool artifacts ((feats, probs) over the full pool) are memoized per session
-keyed on (pool_version, head_version) and invalidated by push_data / label /
-train_and_eval — so PSHEA's 7-10 candidates share ONE artifact build per
-round instead of re-stacking the pool per candidate.
+Pool artifacts are INCREMENTAL, per shard and per column
+(core.selection.ShardColumns): every shard carries its own ``rows_epoch``,
+so a push invalidates only the shards it touched and the refresh embeds
+only the appended rows, extending the shard's growable ``feats`` buffer in
+place; ``feats`` and ``probs`` have decoupled lifetimes, so
+``train_and_eval`` re-runs just the head forward over the cached feats
+(zero re-embeds) and ``label`` invalidates nothing at all (the unlabeled
+set is a separately-versioned mask applied at query time). Steady-state
+query cost after a data change is O(delta) embed work, not O(pool) — and
+PSHEA's 7-10 candidates still share ONE refresh per version instead of
+re-stacking the pool per candidate.
 
 Replica sharding (config ``replicas: N``): each session's pool is
 hash-partitioned by content key across N shards. Artifacts are built per
@@ -50,7 +57,8 @@ import jax
 import numpy as np
 
 from repro.core.agent.controller import run_pshea
-from repro.core.selection import ShardView, replica_map, replica_of
+from repro.core.selection import (ShardColumns, ShardView, grow_append,
+                                  replica_map, replica_of)
 from repro.core.strategies.zoo import HYBRIDS, PAPER_SEVEN, get_strategy
 from repro.service.backends import FeatureBackend, HeadState, make_backend
 from repro.service.batcher import DynamicBatcher
@@ -76,18 +84,49 @@ class PushTicket:
     batch (in-process mode) or until the server acknowledged the enqueue
     (TCP mode — the enqueue ack is what the connection returns); either
     way ``flush()`` on the client/session is the hard integration barrier.
+
+    ``result(timeout=...)`` raises ``TimeoutError`` once the deadline
+    passes — and raises it immediately, deadline or not, if the ingest
+    worker serving this push has died without resolving it (``worker_alive``
+    probe), instead of hanging the client forever.
     """
 
-    def __init__(self, keys: Sequence[str], future: "cf.Future"):
+    _POLL_S = 0.1     # liveness re-check cadence while blocked on result()
+
+    def __init__(self, keys: Sequence[str], future: "cf.Future",
+                 worker_alive: Optional[Callable[[], bool]] = None):
         self.keys = list(keys)
         self._future = future
+        self._worker_alive = worker_alive
 
     def done(self) -> bool:
         return self._future.done()
 
     def result(self, timeout: Optional[float] = None) -> List[str]:
-        self._future.result(timeout)
-        return self.keys
+        deadline = None if timeout is None else time.monotonic() + timeout
+        while True:
+            wait = self._POLL_S
+            if deadline is not None:
+                wait = max(0.0, min(wait, deadline - time.monotonic()))
+            try:
+                self._future.result(wait)
+                return self.keys
+            except cf.TimeoutError:
+                # on >=3.11 cf.TimeoutError IS TimeoutError: a future that
+                # FAILED with one must propagate, not be mistaken for a poll
+                if self._future.done():
+                    raise
+            # a dead worker can never resolve this future: fail fast even
+            # with timeout=None rather than blocking forever
+            if self._worker_alive is not None and not self._worker_alive():
+                raise TimeoutError(
+                    "ingest worker died before integrating this push; "
+                    "the session is unusable for async ingest") from None
+            if deadline is not None and time.monotonic() >= deadline:
+                raise TimeoutError(
+                    f"push not integrated within {timeout}s (ingest queue "
+                    f"busy or stalled); flush() is the hard barrier"
+                ) from None
 
 
 class ALSession:
@@ -106,17 +145,28 @@ class ALSession:
         self._oracle: Optional[Callable[[Sequence[str]], Sequence[int]]] = None
         self._lock = threading.RLock()
         self.last_pipeline_stats = None
-        # -- versioned pool-artifact cache ------------------------------
-        # (feats, probs) over the FULL pool (replicas=1) or one per replica
-        # shard (replicas>1), keyed on (pool_version, head_version).
-        # pool_version bumps on push_data AND label (label is conservative:
-        # it changes the unlabeled set, not the artifact itself);
-        # head_version bumps on train_and_eval.
+        # -- incremental pool-artifact engine ---------------------------
+        # One ShardColumns per replica shard (ONE shard at replicas=1 —
+        # the unsharded query path is just its 1-shard case). Columns are
+        # epoch-stamped and refreshed incrementally:
+        #   rows appended -> only the touched shards' rows_epoch moves;
+        #     refresh embeds ONLY the appended rows (growable buffers);
+        #   train_and_eval -> head_version moves; refresh re-runs the head
+        #     over cached feats, ZERO re-embeds;
+        #   label -> labels_version moves; artifacts untouched (the
+        #     unlabeled set is a mask applied at query time).
+        # pool_version stays the coarse monotone row-append counter the
+        # ingest contract is specified against (one bump per appending
+        # push/drained batch).
         self.pool_version = 0
         self.head_version = 0
-        self.artifact_builds = 0           # counts artifact build calls
-        self._artifact = None              # ((pv, hv), keys, feats, probs, idx)
-        self._shard_artifact = None        # ((pv, hv), keys_l, f_l, p_l, idx)
+        self.labels_version = 0
+        self.artifact_builds = 0     # refresh/build events that did work
+        self.full_builds = 0         # shard feats columns built from empty
+        self.delta_builds = 0        # shard feats columns extended in place
+        self.probs_refreshes = 0     # head-only prob recomputes (0 embeds)
+        self._columns = [ShardColumns() for _ in range(self.replicas)]
+        self._index: Dict[str, Tuple[int, int]] = {}  # key -> (shard, row)
         self._artifact_lock = threading.Lock()
         # -- async ingest queue -----------------------------------------
         # push_data(asynchronous=True) enqueues; a per-session worker
@@ -152,18 +202,33 @@ class ALSession:
         todo = [(k, it) for k, it in zip(keys, items)
                 if k not in self.server.cache]
         with self._lock:
-            new = False
-            for k, it in zip(keys, items):
-                if k not in self._raw:
-                    self._raw[k] = np.asarray(it)
-                    self._keys.append(k)
-                    new = True
-            if new:
-                self.pool_version += 1
+            self._append_rows(keys, [np.asarray(it) for it in items])
         if todo:
             self.last_pipeline_stats = self.server._process(
                 todo, pipelined=pipelined)
         return keys
+
+    def _append_rows(self, keys: Sequence[str],
+                     items: Sequence[np.ndarray]) -> None:
+        """Append the new (key, raw) rows to the pool and stamp the shards
+        they land on: ONE rows_epoch tick per touched shard and ONE
+        pool_version tick per appending event — untouched shards keep their
+        artifact columns fresh. Caller holds ``self._lock``."""
+        touched = set()
+        for k, it in zip(keys, items):
+            if k in self._raw:
+                continue
+            self._raw[k] = it
+            self._keys.append(k)
+            si = 0 if self.replicas == 1 else replica_of(k, self.replicas)
+            col = self._columns[si]
+            self._index[k] = (si, len(col.keys))
+            col.keys.append(k)
+            touched.add(si)
+        if touched:
+            for si in touched:
+                self._columns[si].rows_epoch += 1
+            self.pool_version += 1
 
     # ----------------------------------------------------- async ingest --
     def _push_async(self, items: Sequence[np.ndarray]) -> PushTicket:
@@ -180,7 +245,13 @@ class ALSession:
                     name=f"ingest-{self.session_id}")
                 self._ingest_thread.start()
             self._ingest_cv.notify_all()
-        return PushTicket(keys, fut)
+        return PushTicket(keys, fut, worker_alive=self._ingest_alive)
+
+    def _ingest_alive(self) -> bool:
+        """Liveness probe for PushTicket: a worker that exited with this
+        push still queued/unresolved can never complete it."""
+        t = self._ingest_thread
+        return t is not None and t.is_alive()
 
     def _ingest_loop(self):
         while True:
@@ -235,26 +306,28 @@ class ALSession:
         if todo:
             self.last_pipeline_stats = self.server._process_replicated(todo)
         with self._lock:
-            new = False
-            for keys, items, _ in batch:
-                for k, it in zip(keys, items):
-                    if k not in self._raw:
-                        self._raw[k] = it
-                        self._keys.append(k)
-                        new = True
-            if new:
-                self.pool_version += 1
+            # ONE _append_rows call for the whole drained batch: one
+            # pool_version bump, one rows_epoch tick per touched shard
+            self._append_rows(
+                [k for keys, _, _ in batch for k in keys],
+                [it for _, items, _ in batch for it in items])
 
     def flush(self) -> None:
         """Ingest barrier: returns once every previously queued async push
         has been embedded and appended to the pool. label/query/sync-push
         call this on entry, so they linearize after pending ingests. A
-        failed ingest re-raises here (once)."""
+        failed ingest re-raises here (once), and a DEAD worker with work
+        still pending raises instead of waiting on a drain that can never
+        happen (same fail-fast contract as ``PushTicket.result``)."""
         if self._ingest_thread is None:
             return
         with self._ingest_cv:
             while self._ingest_queue or self._ingest_busy:
-                self._ingest_cv.wait()
+                if not self._ingest_thread.is_alive():
+                    raise RuntimeError(
+                        "ingest worker died with pushes pending; the "
+                        "session cannot drain its queue")
+                self._ingest_cv.wait(timeout=0.1)
             if self._ingest_error is not None:
                 err, self._ingest_error = self._ingest_error, None
                 raise RuntimeError("asynchronous ingest failed") from err
@@ -275,6 +348,10 @@ class ALSession:
         self._eval_set = (backend.features(ex), np.asarray(eval_y))
 
     def label(self, keys: Sequence[str], labels: Sequence[int]):
+        """Labeling moves rows across the labeled/unlabeled boundary but
+        changes NO pool content: it bumps only ``labels_version`` (the
+        unlabeled set is a mask applied at query time), so the artifact
+        columns survive every labeling round untouched."""
         self.flush()     # linearize after pending async ingests
         with self._lock:
             changed = False
@@ -284,7 +361,7 @@ class ALSession:
                     self._labeled_keys.append(k)
                     changed = True
             if changed:
-                self.pool_version += 1
+                self.labels_version += 1
 
     # --------------------------------------------------------- artifacts --
     def _feats_for(self, keys: Sequence[str]) -> np.ndarray:
@@ -307,43 +384,110 @@ class ALSession:
             backend = self.server.backend
             raw = np.stack([np.asarray(self._raw[k]) for k in missing])
             feats = backend.features(backend.preprocess(raw))
+            self.server.count_embeds(len(missing))
             for k, f in zip(missing, feats):
                 f = np.asarray(f)
                 cache.put(k, f)
                 out[k] = f
         return np.stack([out[k] for k in keys])
 
-    def _build_artifacts(self):
-        keys = list(self._keys)
-        feats = self._feats_for(keys)
-        head = self._head or self.server.backend.init_head()
-        probs = self.server.backend.probs(feats, head)
-        index = {k: i for i, k in enumerate(keys)}
-        self.artifact_builds += 1
-        return keys, feats, probs, index
+    def _refresh_artifacts(self):
+        """Bring every shard's (feats, probs) columns up to date, touched
+        shards in parallel on the shard pool. Caller holds _artifact_lock.
 
-    def _pool_artifacts(self):
-        """(keys, feats, probs, key->row) over the FULL pool; memoized on
-        (pool_version, head_version) when config.artifact_cache is set. The
-        build runs under a lock so racing PSHEA candidates share one build
-        instead of stampeding."""
-        if not self.server.config.artifact_cache:
-            return self._build_artifacts()
-        with self._artifact_lock:
-            version = (self.pool_version, self.head_version)
-            if self._artifact is None or self._artifact[0] != version:
-                self._artifact = (version,) + self._build_artifacts()
-            return self._artifact[1:]
-
-    def _build_shard_artifacts(self):
-        """Per-replica-shard (keys, feats, probs), built in parallel across
-        the shard pool; one ``artifact_builds`` tick covers all shards."""
-        keys = list(self._keys)
-        shard_keys: List[List[str]] = [[] for _ in range(self.replicas)]
-        for k in keys:                       # global order kept within shards
-            shard_keys[replica_of(k, self.replicas)].append(k)
-        head = self._head or self.server.backend.init_head()
+        Per shard, the refresh is column-local and O(change):
+          * rows appended since the last refresh -> gather/embed ONLY
+            ``keys[feats_rows:]`` and extend the growable feats buffer in
+            place (``delta_builds``; a cold column is a ``full_builds``);
+          * head_version moved -> recompute probs from the cached feats
+            into a fresh buffer, zero re-embeds (``probs_refreshes``);
+          * rows appended at an unchanged head -> append probs for just
+            the new rows (probs are row-local, so chunked computation is
+            bitwise identical to the full-matrix forward).
+        An untouched shard is a pure cache hit: no work, no tick.
+        """
         backend = self.server.backend
+        incremental = self.server.config.incremental_artifacts
+        with self._lock:   # consistent (row count, epoch) per shard
+            targets = [(len(c.keys), c.rows_epoch) for c in self._columns]
+            head = self._head
+            head_v = self.head_version
+        if head is None:
+            head = backend.init_head()
+        # staleness is judged by the epoch stamps: a shard whose feats were
+        # stamped at an older rows_epoch (rows appended since), or whose
+        # probs were stamped at an older head epoch, needs a refresh
+        work = [(si, rows, epoch) for si, (rows, epoch) in enumerate(targets)
+                if self._columns[si].feats_epoch != epoch
+                or self._columns[si].probs_head_epoch != head_v]
+        if not work:
+            return
+
+        def refresh(item):
+            si, rows, epoch = item
+            col = self._columns[si]
+            if not incremental:
+                col.reset()          # debugging fallback: O(shard) rebuilds
+            kind = None
+            if col.feats_epoch != epoch:
+                if col.feats_rows < rows:    # every epoch tick appends rows
+                    kind = "full" if col.feats_rows == 0 else "delta"
+                    new = self._feats_for(col.keys[col.feats_rows:rows])
+                    col.feats, col.feats_rows = grow_append(
+                        col.feats, col.feats_rows, new)
+                col.feats_epoch = epoch
+            if col.probs_head_epoch != head_v:
+                # head-only refresh: fresh buffer (pinned snapshots keep
+                # their rows), computed from cached feats — zero embeds
+                col.probs = (np.asarray(backend.probs(
+                    col.feats[:col.feats_rows], head))
+                    if col.feats_rows else None)
+                col.probs_rows = col.feats_rows
+                col.probs_head_epoch = head_v
+                kind = kind or "probs"
+            elif col.probs_rows < col.feats_rows:
+                newp = np.asarray(backend.probs(
+                    col.feats[col.probs_rows:col.feats_rows], head))
+                col.probs, col.probs_rows = grow_append(
+                    col.probs, col.probs_rows, newp)
+            col.builds += 1
+            return kind
+
+        kinds = replica_map(refresh, work, self.server.shard_executor())
+        self.full_builds += sum(k == "full" for k in kinds)
+        self.delta_builds += sum(k == "delta" for k in kinds)
+        self.probs_refreshes += sum(k == "probs" for k in kinds)
+        self.artifact_builds += 1
+
+    def _artifact_snapshot(self):
+        """(feats_l, probs_l, rows_l, key->(shard, row) index) over the
+        pool — per-shard immutable row-range views of the incremental
+        columns (``artifact_cache: true``, refreshed under a lock so
+        racing PSHEA candidates share one refresh) or a from-scratch
+        O(pool) build (``artifact_cache: false``, the bit-identity
+        oracle). Rows appended after the snapshot is pinned sit beyond
+        ``rows_l`` and are invisible to it."""
+        backend = self.server.backend
+        if not self.server.config.artifact_cache:
+            return self._build_from_scratch()
+        with self._artifact_lock:
+            self._refresh_artifacts()
+            feats_l = [c.feats_view(backend.feat_dim) for c in self._columns]
+            probs_l = [c.probs_view(backend.num_classes)
+                       for c in self._columns]
+            return feats_l, probs_l, [c.feats_rows for c in self._columns], \
+                self._index
+
+    def _build_from_scratch(self):
+        """The O(pool) reference engine: re-gather + re-forward every shard
+        on every call, no incremental state consulted — what
+        ``artifact_cache: false`` runs and what the incremental columns
+        must stay bit-identical to."""
+        backend = self.server.backend
+        with self._lock:
+            shard_keys = [list(c.keys) for c in self._columns]
+            head = self._head
+        head = head or backend.init_head()
 
         def build(ks):
             if not ks:
@@ -358,22 +502,8 @@ class ALSession:
             for li, k in enumerate(ks):
                 index[k] = (si, li)
         self.artifact_builds += 1
-        return (shard_keys, [p[0] for p in parts], [p[1] for p in parts],
-                index)
-
-    def _shard_pool_artifacts(self):
-        """Sharded mirror of ``_pool_artifacts``: per-shard (keys, feats,
-        probs) lists + a key -> (shard, local row) index, memoized on the
-        same (pool_version, head_version) contract."""
-        if not self.server.config.artifact_cache:
-            return self._build_shard_artifacts()
-        with self._artifact_lock:
-            version = (self.pool_version, self.head_version)
-            if self._shard_artifact is None or \
-                    self._shard_artifact[0] != version:
-                self._shard_artifact = \
-                    (version,) + self._build_shard_artifacts()
-            return self._shard_artifact[1:]
+        return ([p[0] for p in parts], [p[1] for p in parts],
+                [len(ks) for ks in shard_keys], index)
 
     def train_and_eval(self) -> float:
         self.flush()     # linearize after pending async ingests
@@ -412,18 +542,24 @@ class ALSession:
             return self._query_one_sharded(unlabeled, budget, strategy,
                                            rng_seed)
         strat = get_strategy(strategy)
-        keys_all, feats_all, probs_all, index = self._pool_artifacts()
+        feats_l, probs_l, rows_l, index = self._artifact_snapshot()
+        feats_all, probs_all, n_rows = feats_l[0], probs_l[0], rows_l[0]
         # a concurrent push_data may have appended keys after this query's
-        # artifact version was pinned; score only what the artifact covers
+        # snapshot was pinned; score only the rows the snapshot covers
         # (the query ordered before the push)
-        unlabeled = [k for k in unlabeled if k in index]
+        unlabeled = [k for k in unlabeled
+                     if k in index and index[k][1] < n_rows]
         budget = min(budget, len(unlabeled))
-        rows = np.asarray([index[k] for k in unlabeled], np.int64)
+        if budget == 0:    # fully-labeled pool: strategies need >= 1 row
+            return {"keys": [], "indices": [], "strategy": strategy,
+                    "cache": self.server.cache.stats()}
+        rows = np.asarray([index[k][1] for k in unlabeled], np.int64)
         feats = feats_all[rows]
         probs = probs_all[rows]
         labeled_emb = None
         if self._labeled_keys:
-            lab_rows = [index[k] for k in self._labeled_keys if k in index]
+            lab_rows = [index[k][1] for k in self._labeled_keys
+                        if k in index and index[k][1] < n_rows]
             if lab_rows:
                 labeled_emb = feats_all[np.asarray(lab_rows, np.int64)]
         import jax.numpy as jnp
@@ -445,8 +581,13 @@ class ALSession:
         the strategy's sharded path — selections bit-identical to
         ``replicas=1`` by construction (tests/test_sharding.py)."""
         strat = get_strategy(strategy)
-        shard_keys, feats_l, probs_l, index = self._shard_pool_artifacts()
-        unlabeled = [k for k in unlabeled if k in index]
+        feats_l, probs_l, rows_l, index = self._artifact_snapshot()
+
+        def covered(k):   # pinned-snapshot bound, per shard
+            e = index.get(k)
+            return e is not None and e[1] < rows_l[e[0]]
+
+        unlabeled = [k for k in unlabeled if covered(k)]
         budget = min(budget, len(unlabeled))
         if budget == 0:
             return {"keys": [], "indices": [], "strategy": strategy,
@@ -466,7 +607,7 @@ class ALSession:
                 gidx=np.asarray(gpos[si], np.int64)))
         labeled_emb = None
         if self._labeled_keys:
-            lab = [index[k] for k in self._labeled_keys if k in index]
+            lab = [index[k] for k in self._labeled_keys if covered(k)]
             if lab:
                 import jax.numpy as jnp
                 labeled_emb = jnp.asarray(
@@ -541,7 +682,20 @@ class ALSession:
         return {"pool": len(self._keys), "labeled": len(self._labeled_keys),
                 "pool_version": self.pool_version,
                 "head_version": self.head_version,
+                "labels_version": self.labels_version,
                 "artifact_builds": self.artifact_builds,
+                # incremental-artifact observability: build-kind tallies +
+                # the per-shard epoch/row state a delta build is judged by
+                "artifacts": {
+                    "builds": self.artifact_builds,
+                    "full_builds": self.full_builds,
+                    "delta_builds": self.delta_builds,
+                    "probs_refreshes": self.probs_refreshes,
+                    "shard_builds": [c.builds for c in self._columns],
+                    "rows_epoch": [c.rows_epoch for c in self._columns],
+                    "feats_rows": [c.feats_rows for c in self._columns],
+                    "head_epoch": self.head_version,
+                },
                 "replicas": self.replicas,
                 "ingest_pending": pending,
                 "ingest_batches": self.ingest_batches,
@@ -573,7 +727,20 @@ class ALServer:
         self._sessions_lock = threading.Lock()
         self._shard_pool: Optional[cf.ThreadPoolExecutor] = None
         self._shard_pool_lock = threading.Lock()
+        # op accounting: pool rows run through the feature extractor
+        # (pipeline ingest + evicted-entry recompute; batcher padding rows
+        # excluded). The incremental-artifact contract is stated in these
+        # units: push B rows == B embeds, train_and_eval == 0, query after
+        # a push == 0 (delta rows come out of the EmbeddingCache).
+        self.embed_rows = 0
+        self.embed_calls = 0
+        self._embed_lock = threading.Lock()
         self.create_session(DEFAULT_SESSION)
+
+    def count_embeds(self, rows: int) -> None:
+        with self._embed_lock:
+            self.embed_rows += int(rows)
+            self.embed_calls += 1
 
     def shard_executor(self) -> Optional[cf.ThreadPoolExecutor]:
         """Shared thread pool for per-shard fan-out (artifact builds,
@@ -652,6 +819,7 @@ class ALServer:
 
     def _infer_batch(self, stacked: np.ndarray, n_valid: int):
         feats = self.backend.features(stacked)
+        self.count_embeds(n_valid)
         return [feats[i] for i in range(n_valid)]
 
     def _process_replicated(self, todo):
@@ -727,5 +895,6 @@ class ALServer:
     def stats(self, session: Optional[str] = None) -> dict:
         s = self.session(session).stats()
         s["cache"] = self.cache.stats()
+        s["embeds"] = {"rows": self.embed_rows, "calls": self.embed_calls}
         s["sessions"] = len(self.session_ids())
         return s

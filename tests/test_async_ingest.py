@@ -134,6 +134,43 @@ def test_ingest_failure_isolated_to_the_malformed_push():
     assert srv.stats()["pool"] == 16               # no valid row lost
 
 
+def test_ticket_result_timeout_raises():
+    """result(timeout=) must raise TimeoutError when the deadline passes,
+    not block forever behind a busy/stalled worker."""
+    import concurrent.futures as cf
+    t = PushTicket(["k"], cf.Future(), worker_alive=lambda: True)
+    t0 = time.perf_counter()
+    with pytest.raises(TimeoutError, match="not integrated"):
+        t.result(timeout=0.2)
+    assert time.perf_counter() - t0 < 2.0
+    fut = cf.Future()
+    fut.set_result(None)
+    assert PushTicket(["k"], fut).result(timeout=0) == ["k"]
+
+
+def test_ticket_result_detects_dead_worker():
+    """A dead ingest worker can never resolve the ticket: result() must
+    raise promptly even with timeout=None instead of hanging the client."""
+    srv = _mlp_server()
+    sess = srv.session()
+    sess._ingest_loop = lambda: None       # worker thread exits immediately
+    X, _ = image_pool(4, seed=8)
+    t = sess.push_data(list(X), asynchronous=True)
+    deadline = time.time() + 10
+    while sess._ingest_thread.is_alive() and time.time() < deadline:
+        time.sleep(0.01)
+    t0 = time.perf_counter()
+    with pytest.raises(TimeoutError, match="worker died"):
+        t.result()                         # no timeout: still must not hang
+    assert time.perf_counter() - t0 < 5.0
+    # the barrier (and so label/query/train/sync-push) fails fast too,
+    # instead of waiting forever on a drain that can never happen
+    t0 = time.perf_counter()
+    with pytest.raises(RuntimeError, match="worker died"):
+        sess.flush()
+    assert time.perf_counter() - t0 < 5.0
+
+
 def test_closed_session_rejects_async_push():
     srv = _mlp_server()
     sid = srv.create_session()

@@ -1,0 +1,219 @@
+"""Incremental pool artifacts: per-shard epoch versioning, delta feats
+extends, head-only prob refreshes — op-accounted and proven bit-identical
+to ``artifact_cache: false`` from-scratch builds, deterministically here
+and under random op interleavings (hypothesis, slow lane)."""
+import numpy as np
+import pytest
+
+from repro.core.selection import ShardColumns, grow_append, replica_of
+from repro.data.synthetic import image_pool
+from repro.service.backends import MLPBackend
+from repro.service.config import ALServiceConfig
+from repro.service.server import ALServer
+
+STRATEGIES = ("lc", "es", "kcg", "coreset", "badge")
+
+
+def _mlp_server(replicas=1, **cfg):
+    return ALServer(ALServiceConfig(batch_size=16, replicas=replicas, **cfg),
+                    backend=MLPBackend(in_dim=192, feat_dim=32))
+
+
+# ------------------------------------------------------- column storage --
+def test_grow_append_amortized_and_view_stable():
+    buf, n = grow_append(None, 0, np.ones((3, 4), np.float32))
+    assert n == 3 and buf.shape[0] >= 3
+    view = buf[:n]                     # a pinned snapshot of rows [0:3]
+    before = view.copy()
+    allocs = 0
+    for i in range(50):                # appends never rewrite old rows
+        old = buf
+        buf, n = grow_append(buf, n, np.full((2, 4), i, np.float32))
+        allocs += old is not buf
+    assert n == 103
+    np.testing.assert_array_equal(view, before)     # snapshot untouched
+    assert allocs <= 6                 # doubling: O(log n) reallocations
+    np.testing.assert_array_equal(buf[3:5], np.zeros((2, 4)))
+    # incompatible rows must fail loud, not crash the copy or silently
+    # cast the already-written rows
+    with pytest.raises(ValueError, match="cannot extend"):
+        grow_append(buf, n, np.ones((1, 7), np.float32))
+    with pytest.raises(ValueError, match="cannot extend"):
+        grow_append(buf, n, np.ones((1, 4), np.float64))
+
+
+def test_shard_columns_views_and_reset():
+    col = ShardColumns()
+    assert col.feats_view(8).shape == (0, 8)
+    assert col.probs_view(10).shape == (0, 10)
+    col.feats, col.feats_rows = grow_append(None, 0, np.ones((5, 8)))
+    assert col.feats_view(8).shape == (5, 8)
+    col.reset()
+    assert col.feats is None and col.probs_head_epoch == -1
+
+
+# ------------------------------------------------- deterministic engine --
+@pytest.mark.parametrize("replicas", (1, 3))
+def test_scripted_interleaving_bit_identical_to_from_scratch(replicas):
+    """A fixed push/label/train/push/query script must select identically
+    on the incremental engine and the cache-off from-scratch engine, and
+    the incremental side must do O(delta) work: the second push embeds
+    only its own rows and rebuilds only the shards it touched."""
+    X, Y = image_pool(64, seed=3)
+    on = _mlp_server(replicas)
+    off = _mlp_server(replicas, artifact_cache=False)
+    k_on = on.push_data(list(X[:48]))
+    assert off.push_data(list(X[:48])) == k_on
+    for srv in (on, off):
+        srv.label(k_on[:10], Y[:10])
+        srv.train_and_eval()
+    for s in STRATEGIES:
+        assert on.query(budget=6, strategy=s, rng_seed=5)["keys"] == \
+            off.query(budget=6, strategy=s, rng_seed=5)["keys"], s
+
+    sess = on.session()
+    builds_before = [c.builds for c in sess._columns]
+    e0 = on.embed_rows
+    new_keys = on.push_data(list(X[48:]))             # 16 delta rows
+    off.push_data(list(X[48:]))
+    assert on.embed_rows - e0 == 16                   # push embeds its rows
+    for s in STRATEGIES:
+        assert on.query(budget=6, strategy=s, rng_seed=8)["keys"] == \
+            off.query(budget=6, strategy=s, rng_seed=8)["keys"], s
+    assert on.embed_rows - e0 == 16                   # queries embed nothing
+    touched = ({0} if replicas == 1
+               else {replica_of(k, replicas) for k in new_keys})
+    builds_after = [c.builds for c in sess._columns]
+    assert {si for si in range(replicas)
+            if builds_after[si] > builds_before[si]} == touched
+
+
+def test_train_refresh_is_probs_only_and_label_free():
+    """train_and_eval must not re-embed (head forward over cached feats);
+    label must not trigger any refresh at all."""
+    X, Y = image_pool(40, seed=4)
+    srv = _mlp_server(3)
+    keys = srv.push_data(list(X))
+    sess = srv.session()
+    srv.query(budget=4, strategy="lc")                # columns warm
+    builds = sess.artifact_builds
+    srv.label(keys[:8], Y[:8])
+    srv.query(budget=4, strategy="lc")
+    assert sess.artifact_builds == builds             # label: zero rebuilds
+    e0 = srv.embed_rows
+    srv.train_and_eval()
+    srv.query(budget=4, strategy="lc")
+    assert srv.embed_rows == e0                       # retrain: zero embeds
+    assert sess.probs_refreshes == 3                  # every populated shard
+    assert sess.artifact_builds == builds + 1
+
+
+def test_non_incremental_knob_full_rebuilds_same_selections():
+    """incremental_artifacts: false falls back to per-shard full rebuilds —
+    same selections, more embedless work, for debugging."""
+    X, Y = image_pool(48, seed=5)
+    inc = _mlp_server(3)
+    full = _mlp_server(3, incremental_artifacts=False)
+    for srv in (inc, full):
+        srv.push_data(list(X[:36]))
+    assert inc.query(budget=5, strategy="kcg", rng_seed=1)["keys"] == \
+        full.query(budget=5, strategy="kcg", rng_seed=1)["keys"]
+    for srv in (inc, full):
+        srv.push_data(list(X[36:]))
+    assert inc.query(budget=5, strategy="lc", rng_seed=1)["keys"] == \
+        full.query(budget=5, strategy="lc", rng_seed=1)["keys"]
+    # the fallback rebuilt from empty both times; the engine delta-built
+    assert full.session().full_builds > inc.session().full_builds
+    assert inc.session().delta_builds >= 1
+    assert full.session().delta_builds == 0
+
+
+def test_snapshot_pinned_across_concurrent_push():
+    """Rows appended after a snapshot is pinned must be invisible to it:
+    the covered-row bound filters them even though the index already knows
+    them (the query ordered before the push)."""
+    X, _ = image_pool(30, seed=6)
+    srv = _mlp_server()
+    srv.push_data(list(X[:20]))
+    sess = srv.session()
+    feats_l, probs_l, rows_l, index = sess._artifact_snapshot()
+    srv.push_data(list(X[20:]))                       # appends AFTER the pin
+    assert len(index) == 30                           # live index grew...
+    covered = [k for k in sess._keys
+               if k in index and index[k][1] < rows_l[0]]
+    assert len(covered) == 20                         # ...snapshot did not
+    assert feats_l[0].shape[0] == 20                  # view rows stable
+    # and the pinned rows' contents survived the buffer growth
+    np.testing.assert_array_equal(
+        feats_l[0][:5], sess._artifact_snapshot()[0][0][:5])
+
+
+# ------------------------------------------- random interleavings (slow) --
+@pytest.mark.slow
+def test_random_interleavings_bit_identical_to_from_scratch():
+    """Hypothesis: ANY interleaving of push_data (sync and async), label,
+    train_and_eval and query yields selections bit-identical between the
+    incremental engine and ``artifact_cache: false`` from-scratch builds,
+    across replicas in {1, 3}."""
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    X, Y = image_pool(66, seed=9)
+    chunks = [list(X[i * 6:(i + 1) * 6]) for i in range(11)]
+    ops_st = st.lists(
+        st.one_of(
+            st.tuples(st.just("push"), st.integers(0, 10)),
+            st.tuples(st.just("push_async"), st.integers(0, 10)),
+            st.tuples(st.just("label"), st.integers(1, 5)),
+            st.tuples(st.just("train"), st.just(0)),
+            st.tuples(st.just("query"), st.integers(1, 6)),
+        ), min_size=3, max_size=12)
+
+    @settings(max_examples=12, deadline=None)
+    @given(ops=ops_st, replicas=st.sampled_from([1, 3]),
+           seed=st.integers(0, 99))
+    def run(ops, replicas, seed):
+        inc = _mlp_server(replicas)
+        ref = _mlp_server(replicas, artifact_cache=False)
+        servers = (inc, ref)
+        pushed = 0
+        for op, arg in ops:
+            if op == "push":
+                for srv in servers:
+                    srv.push_data(chunks[arg])
+                pushed += 1
+            elif op == "push_async":
+                # both linearize at the next barrier op; single-queue
+                # FIFO keeps pool order identical to the sync reference
+                ts = [srv.push_data(chunks[arg], asynchronous=True)
+                      for srv in servers]
+                assert ts[0].keys == ts[1].keys
+                pushed += 1
+            elif op == "label":
+                inc.flush()
+                sess = inc.session()
+                todo = [k for k in sess._keys
+                        if k not in sess._labels][:arg]
+                ys = [hash(k) % 10 for k in todo]
+                for srv in servers:
+                    srv.label(todo, ys)
+            elif op == "train":
+                for srv in servers:
+                    srv.train_and_eval()
+            else:
+                if not pushed:
+                    continue
+                for strat in ("lc", "kcg"):
+                    a = inc.query(budget=arg, strategy=strat, rng_seed=seed)
+                    b = ref.query(budget=arg, strategy=strat, rng_seed=seed)
+                    assert a["keys"] == b["keys"], \
+                        f"{strat} diverged at replicas={replicas}"
+        inc.flush(), ref.flush()
+        a_sess, r_sess = inc.session(), ref.session()
+        assert a_sess._keys == r_sess._keys           # same pool, same order
+        for strat in ("lc", "kcg", "badge"):
+            a = inc.query(budget=5, strategy=strat, rng_seed=seed)
+            b = ref.query(budget=5, strategy=strat, rng_seed=seed)
+            assert a["keys"] == b["keys"]
+
+    run()

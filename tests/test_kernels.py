@@ -297,9 +297,10 @@ def test_greedy_round_tiebreak_stable_across_n_block(nblock):
 
 
 # ------------------------------------------------------------- autotuner ----
-def test_autotune_blocks_cached_and_feasible():
+def test_autotune_blocks_cached_and_feasible(monkeypatch):
     from repro.kernels.pairwise import autotune
 
+    monkeypatch.setenv("REPRO_AUTOTUNE_CACHE_DIR", "")    # hermetic: no disk
     autotune.clear_cache()
     ch = autotune.autotune_blocks(4096, 64, jnp.float32, measure=False)
     assert ch.n_block in autotune.N_BLOCK_CANDIDATES
@@ -314,6 +315,31 @@ def test_autotune_blocks_cached_and_feasible():
                                     ch_wide.r_block) \
         <= autotune.VMEM_BUDGET_BYTES
     assert ch_wide.n_block <= ch.n_block
+
+
+def test_autotune_disk_cache_roundtrip(tmp_path, monkeypatch):
+    """Winners persist to the result directory (one JSON per shape key) and
+    reload across processes/cache clears; a corrupt entry re-tunes instead
+    of crashing; disabling via empty env writes nothing."""
+    from repro.kernels.pairwise import autotune
+
+    monkeypatch.setenv("REPRO_AUTOTUNE_CACHE_DIR", str(tmp_path))
+    autotune.clear_cache()
+    ch = autotune.autotune_blocks(2048, 32, jnp.float32, measure=False)
+    entry = tmp_path / "n2048_d32_float32.json"
+    assert entry.exists()
+    autotune.clear_cache()                       # simulate a fresh process
+    assert autotune.autotune_blocks(2048, 32, jnp.float32,
+                                    measure=False) == ch
+    entry.write_text("not json")                 # corrupt: re-tune, rewrite
+    autotune.clear_cache()
+    assert autotune.autotune_blocks(2048, 32, jnp.float32,
+                                    measure=False) == ch
+    assert entry.read_text() != "not json"
+    monkeypatch.setenv("REPRO_AUTOTUNE_CACHE_DIR", "")
+    autotune.clear_cache()
+    autotune.autotune_blocks(1024, 16, jnp.float32, measure=False)
+    assert not (tmp_path / "n1024_d16_float32.json").exists()
 
 
 def test_autotune_model_amortizes_r_block():

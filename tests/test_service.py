@@ -455,8 +455,10 @@ def test_tcp_disconnect_reclaims_session(pool):
 
 # --------------------------------------------------------- artifact cache --
 def test_artifact_cache_invalidation_matrix(pool):
-    """Hit on repeated query; miss after each of push_data / label /
-    train_and_eval (pool or head version bumped)."""
+    """The incremental invalidation matrix: repeated queries hit; a push
+    delta-builds only the appended rows; label invalidates NOTHING (the
+    unlabeled set is a query-time mask); train_and_eval refreshes probs
+    only, with zero re-embeds."""
     X, Y = pool[0], pool[1]
     srv = _mlp_server()
     keys = srv.push_data(list(X[:60]))
@@ -464,23 +466,57 @@ def test_artifact_cache_invalidation_matrix(pool):
 
     srv.query(budget=5, strategy="lc")
     assert sess.artifact_builds == 1
+    assert (sess.full_builds, sess.delta_builds) == (1, 0)
     srv.query(budget=5, strategy="mc")
     srv.query(budget=5, strategy="kcg")
     assert sess.artifact_builds == 1                  # hits across strategies
 
-    srv.push_data(list(pool[2][:4]))                  # new content -> miss
+    srv.push_data(list(pool[2][:4]))                  # new rows -> delta
+    e0 = srv.embed_rows
     srv.query(budget=5, strategy="lc")
     assert sess.artifact_builds == 2
+    assert (sess.full_builds, sess.delta_builds) == (1, 1)
+    assert sess._columns[0].feats_rows == 64          # extended in place
+    assert srv.embed_rows == e0                       # delta came from cache
 
-    srv.label(keys[:10], Y[:10])                      # label -> miss
+    srv.label(keys[:10], Y[:10])                      # label -> NO rebuild
+    srv.query(budget=5, strategy="lc")
+    assert sess.artifact_builds == 2
+    assert sess.labels_version == 1
+
+    srv.train_and_eval()                              # new head -> probs only
+    e1 = srv.embed_rows
     srv.query(budget=5, strategy="lc")
     assert sess.artifact_builds == 3
-
-    srv.train_and_eval()                              # new head -> miss
-    srv.query(budget=5, strategy="lc")
-    assert sess.artifact_builds == 4
+    assert sess.probs_refreshes == 1
+    assert srv.embed_rows == e1                       # zero re-embeds
     srv.query(budget=5, strategy="es")
-    assert sess.artifact_builds == 4
+    assert sess.artifact_builds == 3
+
+    st = srv.stats()                                  # observability payload
+    assert st["artifacts"]["builds"] == 3
+    assert st["artifacts"]["shard_builds"] == [3]
+    assert st["artifacts"]["full_builds"] == 1
+    assert st["artifacts"]["delta_builds"] == 1
+    assert st["artifacts"]["probs_refreshes"] == 1
+    assert st["labels_version"] == 1
+    assert st["embeds"]["rows"] == 64                 # 60 + 4 pushed rows
+    assert st["cache"]["hits"] > 0
+
+
+def test_query_on_fully_labeled_pool_returns_empty(pool):
+    """Regression: with every pool row labeled, budget clamps to 0 and the
+    unsharded path used to crash embedding strategies (.at[0] on a (0,)
+    selection buffer) instead of returning an empty selection like the
+    sharded path."""
+    X, Y = pool[0], pool[1]
+    for replicas in (1, 3):
+        srv = _mlp_server(replicas=replicas)
+        keys = srv.push_data(list(X[:12]))
+        srv.label(keys, Y[:12])
+        for strategy in ("lc", "kcg"):
+            res = srv.query(budget=4, strategy=strategy)
+            assert res["keys"] == [] and res["indices"] == []
 
 
 def test_artifact_cache_off_matches_on(pool):

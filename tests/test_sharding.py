@@ -185,9 +185,19 @@ def test_sharded_artifact_cache_hits_and_invalidation():
     srv.query(budget=4, strategy="lc")
     srv.query(budget=4, strategy="kcg")
     assert sess.artifact_builds == 1          # per-shard set built once
-    srv.label(keys[:6], Y[:6])                # version bump -> rebuild
+    srv.label(keys[:6], Y[:6])                # label: NO shard invalidated
+    srv.query(budget=4, strategy="lc")
+    assert sess.artifact_builds == 1
+    X2, _ = image_pool(6, seed=16)
+    new_keys = srv.push_data(list(X2))        # delta: only touched shards
+    touched = {replica_of(k, 3) for k in new_keys}
+    before = [c.builds for c in sess._columns]
     srv.query(budget=4, strategy="lc")
     assert sess.artifact_builds == 2
+    after = [c.builds for c in sess._columns]
+    assert {si for si in range(3) if after[si] > before[si]} == touched
+    assert all(after[si] == before[si]
+               for si in range(3) if si not in touched)
 
 
 def test_sharded_tiny_cache_recomputes_evicted_embeddings():
