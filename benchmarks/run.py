@@ -1,8 +1,14 @@
 """Benchmark harness — one module per paper table/figure (deliverable d).
 
 Prints ``name,us_per_call,derived`` CSV; ``--json PATH`` additionally
-writes the parsed rows as JSON (CI uploads table2's as a workflow
-artifact).
+writes the parsed rows as JSON with a stable schema
+(``{"schema": 1, "rows": [{"name", "us_per_call", "derived"}],
+"failures": N}``). The repo commits a ``BENCH_table2.json`` snapshot of
+``--only table2`` so the perf trajectory (prefilter rows-touched ratios,
+delta-refresh speedups) is tracked across PRs, and CI regenerates +
+uploads the same file as a workflow artifact, re-asserting the
+incremental-artifact and prefilter sections from it
+(scripts/assert_table2_*.py).
 
   PYTHONPATH=src python -m benchmarks.run [--only table2,fig4a,...]
 """
@@ -65,7 +71,8 @@ def main() -> None:
         emit(f"{name}/_wall,{(time.perf_counter()-t0)*1e6:.0f},done")
     if args.json:
         with open(args.json, "w") as f:
-            json.dump({"rows": records, "failures": failures}, f, indent=1)
+            json.dump({"schema": 1, "rows": records, "failures": failures},
+                      f, indent=1)
     if failures:
         sys.exit(1)
 

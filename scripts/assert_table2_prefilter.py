@@ -1,0 +1,79 @@
+"""CI gate for the centroid-prefilter rows-touched accounting (tier-2).
+
+The table2 benchmark asserts the prefilter invariants in-process; this
+script re-asserts them from the UPLOADED JSON (``benchmarks.run --json``),
+so a gating regression that drops the ratio below 10x, breaks selection
+bit-identity, or silently removes the section fails the workflow on the
+artifact it publishes rather than just slowing the lane.
+
+    python scripts/assert_table2_prefilter.py BENCH_table2.json
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+MIN_RATIO = 10.0
+
+
+def parse_derived(derived: str) -> dict:
+    out = {}
+    for part in derived.split(";"):
+        if "=" in part:
+            k, _, v = part.partition("=")
+            out[k] = v
+    return out
+
+
+def ratio(val: str) -> float:
+    return float(val.rstrip("x"))
+
+
+def main(path: str) -> None:
+    with open(path) as f:
+        doc = json.load(f)
+    rows = {r["name"]: parse_derived(r["derived"]) for r in doc["rows"]}
+    errors = []
+
+    def check(name, field, want=None, cast=str):
+        if name not in rows:
+            errors.append(f"missing benchmark row {name!r}")
+            return None
+        if field not in rows[name]:
+            errors.append(f"{name}: missing field {field!r}")
+            return None
+        got = cast(rows[name][field])
+        if want is not None and got != want:
+            errors.append(f"{name}: {field}={got!r}, expected {want!r}")
+        return got
+
+    # the gated pass must touch >=10x fewer pool rows for the asserted
+    # strategies, at selections bit-identical to the full-scan oracle —
+    # including when the bound is degenerate (loose slack)
+    ratios = {}
+    for field in ("lc_rows_ratio", "coreset_rows_ratio"):
+        ratios[field] = check("table2/prefilter", field, cast=ratio)
+        if ratios[field] is not None and ratios[field] < MIN_RATIO:
+            errors.append(f"table2/prefilter: {field}={ratios[field]:.1f}x "
+                          f"regressed below {MIN_RATIO:.0f}x")
+    check("table2/prefilter", "bit_identical", want="True")
+    check("table2/prefilter", "loose_slack_identical", want="True")
+    # and the mmap-spill path must have actually run, bit-identically
+    check("table2/shard_spill", "bit_identical", want="True")
+    spills = check("table2/shard_spill", "spill_events", cast=int)
+    if spills is not None and spills <= 0:
+        errors.append("table2/shard_spill: spill_events=0 — the spill "
+                      "path went unexercised")
+
+    if errors:
+        print("prefilter/spill regression:", file=sys.stderr)
+        for e in errors:
+            print(f"  - {e}", file=sys.stderr)
+        sys.exit(1)
+    print("prefilter accounting OK ("
+          + ", ".join(f"{k}={v:.1f}x" for k, v in ratios.items())
+          + f"; shard spill_events={spills})")
+
+
+if __name__ == "__main__":
+    main(sys.argv[1] if len(sys.argv) > 1 else "BENCH_table2.json")

@@ -42,8 +42,10 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import os
+import threading
 import zlib
-from typing import Callable, Optional, Sequence, Tuple
+from typing import Any, Callable, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -204,14 +206,98 @@ class ShardView:
     feats: np.ndarray                 # (n, d)
     probs: Optional[np.ndarray]       # (n, C) or None
     gidx: np.ndarray                  # (n,) int64 global positions
+    # -- centroid-prefilter context (optional; None = ungated) ----------
+    # the shard's pinned CentroidSummary (core.prefilter), its pool-local
+    # row ids for the view rows, the full pinned (rows, d) feats view the
+    # summary's permutation indexes into, and the probs head epoch the
+    # snapshot was pinned at (gates the summary's cached score caps)
+    summary: Optional[Any] = None
+    pool_rows: Optional[np.ndarray] = None    # (n,) int64 shard-local rows
+    pool_feats: Optional[np.ndarray] = None   # (rows, d) pinned feats view
+    probs_epoch: int = -1
 
     @property
     def n(self) -> int:
         return int(self.gidx.shape[0])
 
 
-def grow_append(buf: Optional[np.ndarray], rows: int,
-                new: np.ndarray) -> Tuple[np.ndarray, int]:
+class ColumnSpill:
+    """mmap-backed allocation for artifact columns past a RAM budget.
+
+    Buffers whose capacity exceeds ``ram_bytes`` are allocated as
+    ``np.memmap`` files instead of RAM arrays, so a shard's pool can
+    outgrow memory with NO change to the epoch/snapshot contract: the
+    append-only discipline means spilled rows are immutable once written,
+    and a pinned ``buf[:rows]`` view over a memmap behaves exactly like
+    one over a RAM array.
+
+    Files follow the cache's atomic-publish idiom (size via truncate on a
+    tmp name, then ``os.replace``) so a killed process never leaves a
+    half-sized file for a later reader to map. Unlike the cache's zstd
+    spill, columns stay uncompressed — they are live random-access
+    mappings, not cold blobs. ``release`` unlinks a superseded buffer's
+    file; POSIX keeps the data alive for any still-pinned mapping, so
+    snapshot views survive both growth and release.
+    """
+
+    def __init__(self, directory: str, ram_bytes: int):
+        self.directory = directory
+        self.ram_bytes = int(ram_bytes)
+        os.makedirs(directory, exist_ok=True)
+        self._lock = threading.Lock()
+        self._seq = 0
+        self.spill_events = 0       # allocations that went to disk
+        self.spilled_bytes = 0      # capacity bytes currently mmap-backed
+
+    def should_spill(self, nbytes: int) -> bool:
+        return int(nbytes) > self.ram_bytes
+
+    def allocate(self, shape: Tuple[int, ...], dtype) -> np.memmap:
+        dt = np.dtype(dtype)
+        nbytes = int(np.prod(shape)) * dt.itemsize
+        with self._lock:
+            seq = self._seq
+            self._seq += 1
+        final = os.path.join(self.directory, f"col-{seq:08d}.mmap")
+        tmp = final + f".tmp.{os.getpid()}"
+        os.makedirs(self.directory, exist_ok=True)   # survive a cleanup race
+        with open(tmp, "wb") as f:
+            f.truncate(max(nbytes, 1))
+        os.replace(tmp, final)
+        # open AFTER the rename so the mapping's .filename is the final
+        # path — release() unlinks by that name
+        m = np.memmap(final, dtype=dt, mode="r+", shape=shape)
+        with self._lock:
+            self.spill_events += 1
+            self.spilled_bytes += nbytes
+        return m
+
+    def release(self, arr) -> None:
+        """Unlink a superseded buffer's backing file (no-op for RAM
+        arrays). Pinned snapshot views keep reading the unlinked data."""
+        if not isinstance(arr, np.memmap):
+            return
+        with self._lock:
+            self.spilled_bytes -= int(arr.nbytes)
+        try:
+            os.unlink(arr.filename)
+        except OSError:
+            pass
+
+    def adopt(self, arr: np.ndarray) -> np.ndarray:
+        """Copy ``arr`` into a fresh mmap buffer when it is past the RAM
+        budget; return it unchanged otherwise (whole-buffer allocations
+        such as head-refresh probs and summary permutations)."""
+        if not self.should_spill(arr.nbytes):
+            return arr
+        m = self.allocate(arr.shape, arr.dtype)
+        m[...] = arr
+        return m
+
+
+def grow_append(buf: Optional[np.ndarray], rows: int, new: np.ndarray,
+                spill: Optional[ColumnSpill] = None
+                ) -> Tuple[np.ndarray, int]:
     """Append ``new`` rows to a growable buffer; amortized O(rows added).
 
     Returns ``(buffer, valid_rows)``. Capacity doubles on overflow, so a
@@ -221,6 +307,11 @@ def grow_append(buf: Optional[np.ndarray], rows: int,
     never rewritten (a reallocation leaves the old buffer intact for any
     pinned view), so a reader holding ``buf[:rows]`` can never observe a
     mutation.
+
+    With ``spill`` (a ``ColumnSpill``), a reallocation whose capacity
+    bytes exceed the spill's RAM budget lands in an mmap-backed file
+    instead of RAM, and the superseded buffer's file (if any) is
+    unlinked — pinned views keep their mapping either way.
     """
     new = np.asarray(new)
     if buf is not None and rows and (buf.shape[1:] != new.shape[1:]
@@ -234,9 +325,16 @@ def grow_append(buf: Optional[np.ndarray], rows: int,
     if buf is None or buf.shape[0] < need or buf.shape[1:] != new.shape[1:] \
             or buf.dtype != new.dtype:     # latter two only when rows == 0
         cap = max(need, 2 * (0 if buf is None else int(buf.shape[0])), 8)
-        grown = np.empty((cap,) + new.shape[1:], new.dtype)
+        shape = (cap,) + new.shape[1:]
+        nbytes = int(np.prod(shape)) * new.dtype.itemsize
+        if spill is not None and spill.should_spill(nbytes):
+            grown = spill.allocate(shape, new.dtype)
+        else:
+            grown = np.empty(shape, new.dtype)
         if buf is not None and rows:
             grown[:rows] = buf[:rows]
+        if spill is not None and buf is not None:
+            spill.release(buf)
         buf = grown
     buf[rows:need] = new
     return buf, need
@@ -266,9 +364,10 @@ class ShardColumns:
     """
 
     __slots__ = ("keys", "rows_epoch", "feats", "feats_rows", "feats_epoch",
-                 "probs", "probs_rows", "probs_head_epoch", "builds")
+                 "probs", "probs_rows", "probs_head_epoch", "builds",
+                 "spill", "summary")
 
-    def __init__(self):
+    def __init__(self, spill: Optional[ColumnSpill] = None):
         self.keys: list = []          # shard-local key order == global order
         self.rows_epoch = 0           # bumps per row-appending event
         self.feats: Optional[np.ndarray] = None
@@ -278,11 +377,19 @@ class ShardColumns:
         self.probs_rows = 0
         self.probs_head_epoch = -1    # -1 = never computed
         self.builds = 0               # refresh events that touched this shard
+        self.spill = spill            # None = RAM-only columns
+        self.summary = None           # CentroidSummary (core.prefilter)
 
     def reset(self) -> None:
         """Drop both columns (the non-incremental full-rebuild path)."""
+        if self.spill is not None:
+            self.spill.release(self.feats)
+            self.spill.release(self.probs)
+            if self.summary is not None:
+                self.spill.release(getattr(self.summary, "xperm", None))
         self.feats, self.feats_rows, self.feats_epoch = None, 0, 0
         self.probs, self.probs_rows, self.probs_head_epoch = None, 0, -1
+        self.summary = None
 
     def feats_view(self, d: int) -> np.ndarray:
         if self.feats is None:

@@ -38,16 +38,23 @@ class Strategy:
         return self.select_fn(rng, budget, **kw)
 
     def select_sharded(self, rng, budget: int, shards, *,
-                       labeled_embeddings=None, executor=None):
+                       labeled_embeddings=None, executor=None,
+                       prefilter=None):
         """Run the strategy over replica shards (``core.selection``'s
         ``ShardView`` list). Returns global pool positions, bit-identical
-        to ``select`` over the concatenated pool."""
+        to ``select`` over the concatenated pool.
+
+        ``prefilter`` (a ``core.prefilter.PrefilterConfig``) opts into the
+        centroid-gated sublinear scan for the strategies that support it
+        (uncertainty top-k, unweighted k-center lineage); shards without a
+        usable summary — and strategies that need fresh per-slot weights —
+        fall back to the full scan, never to a wrong answer."""
         if self.sharded_fn is None:
             raise NotImplementedError(
                 f"strategy {self.name!r} has no sharded implementation")
         return self.sharded_fn(rng, budget, shards,
                                labeled_embeddings=labeled_embeddings,
-                               executor=executor)
+                               executor=executor, prefilter=prefilter)
 
 
 def top_k_select(scores: jax.Array, budget: int) -> jax.Array:

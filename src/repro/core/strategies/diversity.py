@@ -166,12 +166,25 @@ def _random_select(rng, budget, *, probs=None):
 
 # ------------------------------------------------- replica-sharded paths --
 def sharded_k_center(rng, budget: int, shards, *, init_centers=None,
-                     weights_list=None, executor=None, impl: str = "auto"):
+                     weights_list=None, executor=None, impl: str = "auto",
+                     prefilter=None):
     """Replica-sharded ``k_center_greedy``: per-shard fused rounds +
     cross-shard (value, global index) merges — selections bit-identical to
-    the single-pool path for every shard count (see core.selection)."""
+    the single-pool path for every shard count (see core.selection).
+
+    ``prefilter`` routes the UNWEIGHTED geometry (kcg/coreset) through the
+    centroid-gated engine (core.prefilter) when any shard carries a
+    summary; weighted rounds rank by ``min_dist * weight``, which the
+    distance-only triangle bound cannot cap, so they always take the full
+    path."""
     from repro.core import selection
     from repro.kernels.pairwise import ops
+    if prefilter is not None and weights_list is None \
+            and any(s.summary is not None for s in shards):
+        from repro.core import prefilter as pf
+        return pf.gated_greedy_select(
+            rng, budget, shards, init_centers=init_centers,
+            slack=prefilter.slack, executor=executor, impl=impl)
     N = selection.replica_total(shards)
     emb_list = [jnp.asarray(s.feats, jnp.float32) for s in shards]
     sel = np.zeros((budget,), np.int64)
@@ -199,19 +212,20 @@ def sharded_k_center(rng, budget: int, shards, *, init_centers=None,
 
 
 def _kcg_sharded(rng, budget, shards, *, labeled_embeddings=None,
-                 executor=None):
-    return sharded_k_center(rng, budget, shards, executor=executor)
+                 executor=None, prefilter=None):
+    return sharded_k_center(rng, budget, shards, executor=executor,
+                            prefilter=prefilter)
 
 
 def _coreset_sharded(rng, budget, shards, *, labeled_embeddings=None,
-                     executor=None):
+                     executor=None, prefilter=None):
     return sharded_k_center(rng, budget, shards,
                             init_centers=labeled_embeddings,
-                            executor=executor)
+                            executor=executor, prefilter=prefilter)
 
 
 def _dbal_sharded(rng, budget, shards, *, labeled_embeddings=None,
-                  executor=None, beta: int = 10):
+                  executor=None, beta: int = 10, prefilter=None):
     """Sharded DBAL: shards propose their local LC top-(beta*budget), the
     merged prefilter subset is gathered to the coordinator, and the k-means
     + weighted matching tail is the exact single-pool code over it."""
@@ -231,7 +245,7 @@ def _dbal_sharded(rng, budget, shards, *, labeled_embeddings=None,
 
 
 def _random_sharded(rng, budget, shards, *, labeled_embeddings=None,
-                    executor=None):
+                    executor=None, prefilter=None):
     from repro.core import selection
     n = selection.replica_total(shards)
     return np.asarray(jax.random.permutation(rng, n)[:budget])

@@ -143,7 +143,9 @@ def sharded_kmeans_pp(rng, x_list, shards, k: int, executor=None,
 
 
 def _badge_sharded(rng, budget, shards, *, labeled_embeddings=None,
-                   executor=None):
+                   executor=None, prefilter=None):
+    # prefilter accepted-and-ignored: D² sampling draws fresh Gumbel
+    # weights per slot, which no distance-only centroid bound can cap
     from repro.core import selection
     g_list = selection.replica_map(
         lambda s: (lc_scores(jnp.asarray(s.probs))[:, None]
@@ -173,7 +175,8 @@ def density_scores_sharded(rng, shards, executor=None, n_ref: int = 256):
 
 
 def _margin_density_sharded(rng, budget, shards, *, labeled_embeddings=None,
-                            executor=None):
+                            executor=None, prefilter=None):
+    # prefilter accepted-and-ignored: weighted rounds (see sharded_k_center)
     from repro.core import selection
     from repro.core.strategies.diversity import sharded_k_center
     k_ref, k_sel = jax.random.split(rng)
@@ -187,7 +190,9 @@ def _margin_density_sharded(rng, budget, shards, *, labeled_embeddings=None,
 
 
 def _weighted_kcenter_sharded(rng, budget, shards, *,
-                              labeled_embeddings=None, executor=None):
+                              labeled_embeddings=None, executor=None,
+                              prefilter=None):
+    # prefilter accepted-and-ignored: weighted rounds (see sharded_k_center)
     from repro.core import selection
     from repro.core.strategies.diversity import sharded_k_center
     lc_list = selection.replica_map(

@@ -52,16 +52,28 @@ def scores_from_logits(logits, kind: str, impl: str = "auto"):
 
 def _make(kind: str) -> Strategy:
     def select_fn(rng, budget, *, probs):
+        from repro.kernels.pairwise import ops
+        ops.record_pool_rows(int(probs.shape[0]))
         return top_k_select(SCORE_FNS[kind](probs), budget)
 
     def sharded_fn(rng, budget, shards, *, labeled_embeddings=None,
-                   executor=None):
+                   executor=None, prefilter=None):
+        from repro.core import selection
+        if prefilter is not None:
+            # cap-gated cluster scan: bit-identical to the full scan by
+            # the strictly-below stopping rule (core.prefilter)
+            from repro.core import prefilter as pf
+            idx, _ = pf.gated_top_k(shards, kind, budget, executor)
+            return idx
         # per-shard scoring (scores are per-row, so shard slices produce the
         # exact floats of the full matrix) + partial top-k merge
-        from repro.core import selection
-        scores = selection.replica_map(
-            lambda s: SCORE_FNS[kind](jnp.asarray(s.probs)), shards,
-            executor)
+        from repro.kernels.pairwise import ops
+
+        def score(s):
+            ops.record_pool_rows(s.n)
+            return SCORE_FNS[kind](jnp.asarray(s.probs))
+
+        scores = selection.replica_map(score, shards, executor)
         idx, _ = selection.replica_top_k(shards, scores, budget, executor)
         return idx
 

@@ -59,7 +59,14 @@ class BlockChoice:
     source: str               # "model" | "measured"
 
 
-_CACHE: Dict[Tuple[int, int, str], BlockChoice] = {}
+# keyed (n, d, dtype name, round variant): the plain fused round and the
+# gated (block-masked) round have different per-step footprints — a VMEM
+# budget that holds scalar-prefetch vectors and a winner that amortizes
+# dead-block skips do NOT transfer between variants, so sharing one entry
+# would serve one of them a wrong (possibly infeasible) block
+_CACHE: Dict[Tuple[int, int, str, str], BlockChoice] = {}
+
+VARIANTS = ("round", "gated")
 
 
 def cache_dir() -> Optional[str]:
@@ -71,20 +78,22 @@ def cache_dir() -> Optional[str]:
                              "pairwise-autotune")
 
 
-def _disk_path(key: Tuple[int, int, str]) -> Optional[str]:
+def _disk_path(key: Tuple[int, int, str, str]) -> Optional[str]:
     d = cache_dir()
     if d is None:
         return None
-    return os.path.join(d, f"n{key[0]}_d{key[1]}_{key[2]}.json")
+    return os.path.join(d, f"n{key[0]}_d{key[1]}_{key[2]}_{key[3]}.json")
 
 
 # bump when the candidate sets, the HBM/VMEM model, or the entry schema
 # change: older persisted winners are then ignored and re-tuned instead of
-# being trusted across a code change that invalidated them
-_DISK_FORMAT = 1
+# being trusted across a code change that invalidated them.
+# format 2: the round variant joined the key AND the filename — format-1
+# entries predate the gated round and could alias both variants
+_DISK_FORMAT = 2
 
 
-def _disk_load(key: Tuple[int, int, str]) -> Optional[BlockChoice]:
+def _disk_load(key: Tuple[int, int, str, str]) -> Optional[BlockChoice]:
     path = _disk_path(key)
     if path is None or not os.path.exists(path):
         return None
@@ -100,7 +109,7 @@ def _disk_load(key: Tuple[int, int, str]) -> Optional[BlockChoice]:
         return None     # corrupt entry: fall through and re-tune
     # never serve blocks the CURRENT candidate lists / VMEM model would
     # reject (a stale-but-well-formed entry from different code)
-    n, d, _ = key
+    n, d = key[0], key[1]
     dtype_bytes = float(jnp.dtype(key[2]).itemsize)
     if choice.n_block not in N_BLOCK_CANDIDATES \
             or choice.r_block not in R_BLOCK_CANDIDATES \
@@ -110,7 +119,8 @@ def _disk_load(key: Tuple[int, int, str]) -> Optional[BlockChoice]:
     return choice
 
 
-def _disk_store(key: Tuple[int, int, str], choice: BlockChoice) -> None:
+def _disk_store(key: Tuple[int, int, str, str],
+                choice: BlockChoice) -> None:
     path = _disk_path(key)
     if path is None:
         return
@@ -172,26 +182,48 @@ def _on_tpu() -> bool:
         return False
 
 
-def _measure_round(x, n_block: int, reps: int = 3) -> float:
-    from repro.kernels.pairwise.kernel import greedy_round_pallas
+def _measure_round(x, n_block: int, variant: str = "round",
+                   reps: int = 3) -> float:
+    from repro.kernels.pairwise import kernel as _k
     n = x.shape[0]
     mind = jnp.full((n,), 3.4e38, jnp.float32)
-    sel = jnp.full((1,), -1, jnp.int32)
     c = x[:1]
-    nm, _, _ = greedy_round_pallas(x, mind, c, sel, n_block=n_block)
+    if variant == "gated":
+        # measure the gated round at full occupancy (every block live):
+        # the worst case it must win at, and the shape-compatible one
+        nn = -(-n // min(n_block, n))
+        live = jnp.ones((nn,), jnp.int32)
+        pend = jnp.zeros((nn,), jnp.int32)
+
+        def run(m):
+            return _k.gated_greedy_round_pallas(x, m, c, live, pend,
+                                                n_block=n_block)
+    else:
+        sel = jnp.full((1,), -1, jnp.int32)
+
+        def run(m):
+            return _k.greedy_round_pallas(x, m, c, sel, n_block=n_block)
+
+    nm, _, _ = run(mind)
     nm.block_until_ready()                # compile outside the timed region
     t0 = time.perf_counter()
     for _ in range(reps):
-        nm, _, _ = greedy_round_pallas(x, nm, c, sel, n_block=n_block)
+        nm, _, _ = run(nm)
     nm.block_until_ready()
     return (time.perf_counter() - t0) / reps
 
 
 def autotune_blocks(n: int, d: int, dtype=jnp.float32,
-                    measure: Optional[bool] = None) -> BlockChoice:
-    """Best (n_block, r_block) for an (N, d) pool of ``dtype``; cached."""
+                    measure: Optional[bool] = None,
+                    variant: str = "round") -> BlockChoice:
+    """Best (n_block, r_block) for an (N, d) pool of ``dtype``; cached
+    per round ``variant`` ("round" = plain fused, "gated" =
+    block-masked)."""
+    if variant not in VARIANTS:
+        raise ValueError(f"variant must be one of {VARIANTS}, "
+                         f"got {variant!r}")
     dt = jnp.dtype(dtype)
-    key = (int(n), int(d), dt.name)
+    key = (int(n), int(d), dt.name, variant)
     if key in _CACHE:
         return _CACHE[key]
     dtype_bytes = float(dt.itemsize)
@@ -229,7 +261,7 @@ def autotune_blocks(n: int, d: int, dtype=jnp.float32,
         # re-rank the model's feasible n_block shortlist by wall clock
         import numpy as np
         x = jnp.asarray(np.random.default_rng(0).normal(size=(n, d)), dtype)
-        timed = {nb: _measure_round(x, nb) for nb in n_cands}
+        timed = {nb: _measure_round(x, nb, variant) for nb in n_cands}
         best_nb = min(timed, key=timed.get)
         wall = timed[best_nb]
         source = "measured"
@@ -249,8 +281,9 @@ def autotune_blocks(n: int, d: int, dtype=jnp.float32,
     return choice
 
 
-def report() -> Dict[Tuple[int, int, str], BlockChoice]:
-    """Cached winners keyed by (N, d, dtype name) — for benchmark output."""
+def report() -> Dict[Tuple[int, int, str, str], BlockChoice]:
+    """Cached winners keyed by (N, d, dtype name, variant) — for benchmark
+    output."""
     return dict(_CACHE)
 
 

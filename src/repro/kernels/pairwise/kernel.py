@@ -219,3 +219,112 @@ def greedy_round_pallas(x, mind, centers, sel_idx, weights=None, *,
     # O(N / N_b) reduction over block partials picks the next center.
     win = jnp.argmax(bmax)
     return nmind[:N], barg[win], bmax[win]
+
+
+def _gated_kernel(live_ref, pend_ref, x_ref, mind_ref, c_ref, w_ref,
+                  nmind_ref, bmax_ref, barg_ref, *, n: int, r: int,
+                  n_block: int):
+    i = pl.program_id(0)
+    mind = mind_ref[...]
+    live = live_ref[i] > 0
+
+    @pl.when(live)
+    def _eval():
+        x = x_ref[...].astype(jnp.float32)              # (Nb, d)
+        c = c_ref[...].astype(jnp.float32)              # (Rp, d)
+        x2 = jnp.sum(x * x, axis=-1, keepdims=True)
+        c2 = jnp.sum(c * c, axis=-1)
+        xc = jax.lax.dot_general(x, c, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        d = jnp.maximum(x2 + c2[None, :] - 2.0 * xc, 0.0)
+        col = jax.lax.broadcasted_iota(jnp.int32, d.shape, 1)
+        # catch-up masking: this block already folded centers
+        # [0, pend[i]) in earlier rounds; fold only the queue's tail
+        d = jnp.where((col >= pend_ref[i]) & (col < r), d, BIG)
+        nm = jnp.minimum(mind, jnp.min(d, axis=-1))
+        nmind_ref[...] = nm
+        gid = (jax.lax.broadcasted_iota(jnp.int32, (n_block, 1), 0)[:, 0]
+               + i * n_block)
+        score = nm * w_ref[...]
+        valid = (gid < n) & jnp.logical_not(nm < 0.0)
+        mval = jnp.where(valid, score, -BIG)
+        bmax_ref[...] = jnp.max(mval).reshape(1)
+        barg_ref[...] = (jnp.argmax(mval).astype(jnp.int32)
+                         + i * n_block).reshape(1)
+
+    @pl.when(jnp.logical_not(live))
+    def _skip():
+        # dead block: min-dists pass through, partials can never win
+        nmind_ref[...] = mind
+        bmax_ref[...] = jnp.full((1,), -BIG, jnp.float32)
+        barg_ref[...] = jnp.full((1,), i * n_block, jnp.int32)
+
+
+def gated_greedy_round_pallas(x, mind, centers, block_live, block_pending,
+                              weights=None, *, n_block: int = 256,
+                              interpret: bool = False):
+    """Block-masked greedy round: the centroid prefilter's TPU path.
+
+    Same per-row math as ``greedy_round_pallas``, but two scalar-prefetch
+    vectors steer the grid: ``block_live[b]`` gates whether block ``b`` is
+    evaluated at all (a dead block's x-tile index map redirects to block 0,
+    so its pool rows are never fetched from HBM), and ``block_pending[b]``
+    is the first queued-center column the block has NOT folded yet — a
+    block that skipped earlier rounds folds the centers it missed when its
+    bound finally fails. Winner masking is host-side (mind[i] = -1.0).
+
+    Returns ``(new_mind (N,), next_idx () i32, next_score () f32)`` where
+    the argmax ranges over live, unmasked, unpadded rows only.
+    """
+    N, d = x.shape
+    R = centers.shape[0]
+    nb = min(n_block, N)
+    nn = -(-N // nb)
+    Np = nn * nb
+    Rp = -(-R // 8) * 8
+    if block_live.shape[0] != nn or block_pending.shape[0] != nn:
+        raise ValueError(
+            f"block vectors must have one entry per row block: got "
+            f"{block_live.shape[0]}/{block_pending.shape[0]} for {nn}")
+    if Np != N:
+        x = jnp.pad(x, ((0, Np - N), (0, 0)))
+        mind = jnp.pad(mind, (0, Np - N))
+    if Rp != R:
+        centers = jnp.pad(centers, ((0, Rp - R), (0, 0)))
+    w = (jnp.ones((Np,), jnp.float32) if weights is None
+         else jnp.pad(weights.astype(jnp.float32), (0, Np - N)))
+    live = block_live.astype(jnp.int32)
+    pend = block_pending.astype(jnp.int32)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(nn,),
+        in_specs=[
+            # dead blocks re-point their x tile at block 0: no HBM fetch
+            # for the pool rows the gate pruned
+            pl.BlockSpec((nb, d),
+                         lambda i, lv, pd: (jnp.where(lv[i] > 0, i, 0), 0)),
+            pl.BlockSpec((nb,), lambda i, lv, pd: (i,)),
+            pl.BlockSpec((Rp, d), lambda i, lv, pd: (0, 0)),
+            pl.BlockSpec((nb,), lambda i, lv, pd: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((nb,), lambda i, lv, pd: (i,)),
+            pl.BlockSpec((1,), lambda i, lv, pd: (i,)),
+            pl.BlockSpec((1,), lambda i, lv, pd: (i,)),
+        ],
+    )
+    nmind, bmax, barg = pl.pallas_call(
+        functools.partial(_gated_kernel, n=N, r=R, n_block=nb),
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((Np,), jnp.float32),
+            jax.ShapeDtypeStruct((nn,), jnp.float32),
+            jax.ShapeDtypeStruct((nn,), jnp.int32),
+        ],
+        compiler_params=compat.CompilerParams(
+            dimension_semantics=("arbitrary",)),
+        interpret=interpret,
+    )(live, pend, x, mind.astype(jnp.float32),
+      centers.astype(jnp.float32), w)
+    win = jnp.argmax(bmax)
+    return nmind[:N], barg[win], bmax[win]

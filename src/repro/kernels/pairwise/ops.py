@@ -14,6 +14,7 @@ import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.kernels.pairwise import autotune, ref
 from repro.kernels.pairwise.kernel import (BIG, greedy_round_pallas,
@@ -28,7 +29,12 @@ def _on_tpu() -> bool:
 
 
 # ------------------------------------------------------- op accounting ----
-_STATS = {"embedding_reads": 0, "vector_streams": 0, "hbm_bytes": 0}
+# ``pool_rows`` counts POOL ROWS TOUCHED: rows whose feature vector (or
+# probs row) a selection pass actually read/scored. The centroid prefilter's
+# ≥10x claim is stated in these units — a gated pass records only the rows
+# of blocks whose centroid survived the bound check.
+_STATS = {"embedding_reads": 0, "vector_streams": 0, "hbm_bytes": 0,
+          "pool_rows": 0}
 _TRACKING = [False]
 
 
@@ -64,6 +70,15 @@ def _record(x, emb_reads: int = 0, vec_streams: int = 0) -> None:
     _STATS["embedding_reads"] += emb_reads
     _STATS["vector_streams"] += vec_streams
     _STATS["hbm_bytes"] += 4 * (emb_reads * n * d + vec_streams * n)
+    _STATS["pool_rows"] += emb_reads * n
+
+
+def record_pool_rows(n: int) -> None:
+    """Explicit pool-rows-touched tally for passes that do not flow through
+    an (N, d) wrapper here (uncertainty scoring over probs rows, gated
+    cluster scans)."""
+    if _TRACKING[0]:
+        _STATS["pool_rows"] += int(n)
 
 
 # ------------------------------------------------- pairwise reductions ----
@@ -173,6 +188,57 @@ def greedy_round_unfused(x, mind, center, sel_idx):
     pass as separate XLA ops) — kept as the microbenchmark baseline."""
     _record(x, emb_reads=1, vec_streams=6)
     return _greedy_round_unfused(x, mind, center, sel_idx)
+
+
+@functools.partial(jax.jit, static_argnames=("impl", "n_block"))
+def _gated_greedy_round(x, mind, centers, block_live, block_pending,
+                        weights, impl: str, n_block: int):
+    if impl == "auto":
+        impl = "pallas" if _on_tpu() else "ref"
+    if impl == "ref":
+        return ref.gated_greedy_round_ref(x, mind, centers, block_live,
+                                          block_pending, weights,
+                                          n_block=n_block)
+    from repro.kernels.pairwise.kernel import gated_greedy_round_pallas
+    return gated_greedy_round_pallas(x, mind, centers, block_live,
+                                     block_pending, weights, n_block=n_block,
+                                     interpret=(impl == "interpret"))
+
+
+def gated_greedy_round(x, mind, centers, block_live, block_pending,
+                       weights=None, impl: str = "auto", n_block: int = 256):
+    """The BLOCK-MASKED round variant behind the centroid prefilter.
+
+    Folds queued ``centers`` (R, d) into ``mind`` for LIVE row blocks only:
+    block ``b`` (rows ``[b*n_block, (b+1)*n_block)``) is touched iff
+    ``block_live[b]``, and folds only centers ``[block_pending[b]:R)`` —
+    blocks skipped in earlier rounds catch up on the centers they missed
+    when their centroid bound finally fails. Dead blocks pass ``mind``
+    through untouched and emit -BIG partials, so the returned argmax ranges
+    over live rows only. Winner masking stays host-side (set the winner's
+    ``mind`` slot to -1.0): the caller owns per-block center bookkeeping,
+    so it owns row masking too.
+
+    Returns ``(new_mind, next_idx, next_score)`` like ``greedy_round``.
+    Accounting: only live-block rows count as pool rows touched.
+    """
+    nb = int(n_block)
+    N = x.shape[0]
+    nn = -(-N // min(nb, max(N, 1)))
+    live = np.asarray(block_live)
+    if live.shape[0] != nn:
+        raise ValueError(f"block_live has {live.shape[0]} entries for "
+                         f"{nn} blocks of {nb} rows over {N}")
+    if _TRACKING[0]:
+        rows = int(sum(min(nb, N - b * nb) for b in np.nonzero(live)[0]))
+        _STATS["pool_rows"] += rows
+        _STATS["embedding_reads"] += 1 if rows else 0
+        _STATS["vector_streams"] += 2
+        _STATS["hbm_bytes"] += 4 * (rows * x.shape[1] + 2 * N)
+    return _gated_greedy_round(x, mind, centers,
+                               jnp.asarray(live, jnp.int32),
+                               jnp.asarray(block_pending, jnp.int32),
+                               weights, impl, nb)
 
 
 def warm_start_min_dist(x, centers, impl: str = "auto",

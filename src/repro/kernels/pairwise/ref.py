@@ -53,3 +53,27 @@ def greedy_round_ref(x, mind, centers, sel_idx, weights=None):
     score = jnp.where(nm < 0.0, -BIG, score)
     nxt = jnp.argmax(score).astype(jnp.int32)
     return nm, nxt, score[nxt]
+
+
+def gated_greedy_round_ref(x, mind, centers, block_live, block_pending,
+                           weights=None, *, n_block: int = 256):
+    """Oracle for ``gated_greedy_round_pallas`` (same contract; see
+    kernel.py). Vectorized over ALL rows with block/column masking — it
+    physically touches the whole pool, so it is a correctness oracle for
+    the kernel's parity tests, not a sublinear path (the engine's CPU path
+    slices live segments exactly instead of calling this)."""
+    N = x.shape[0]
+    R = centers.shape[0]
+    d2 = pairwise_sq_dists_ref(x, centers)                    # (N, R)
+    row = jnp.arange(N)
+    blk = (row // n_block).astype(jnp.int32)
+    live = block_live[blk] > 0                                # (N,)
+    pend = block_pending[blk]                                 # (N,)
+    col = jnp.arange(R)[None, :]
+    d2 = jnp.where(col >= pend[:, None], d2, BIG)             # catch-up mask
+    fold = jnp.minimum(mind.astype(jnp.float32), jnp.min(d2, axis=-1))
+    nm = jnp.where(live, fold, mind.astype(jnp.float32))
+    score = nm if weights is None else nm * weights.astype(jnp.float32)
+    score = jnp.where(live & jnp.logical_not(nm < 0.0), score, -BIG)
+    nxt = jnp.argmax(score).astype(jnp.int32)
+    return nm, nxt, score[nxt]

@@ -46,6 +46,7 @@ class EmbeddingCache:
         self.hits = 0
         self.misses = 0
         self.spills = 0
+        self.spill_bytes = 0     # compressed bytes written to spill files
 
     @staticmethod
     def _size(value) -> int:
@@ -135,7 +136,9 @@ class EmbeddingCache:
         with open(tmp, "wb") as f:
             f.write(blob)
         os.replace(tmp, self._path(key))
-        self.spills += 1
+        with self._lock:     # racing spills: counters must not lose ticks
+            self.spills += 1
+            self.spill_bytes += len(blob)
 
     def _unspill(self, key: str):
         if not self.spill_dir:
@@ -153,4 +156,6 @@ class EmbeddingCache:
         with self._lock:
             return {"entries": len(self._lru), "bytes": self._bytes,
                     "hits": self.hits, "misses": self.misses,
-                    "spills": self.spills}
+                    "spills": self.spills,
+                    "spill_bytes": self.spill_bytes,
+                    "resident_bytes": self._bytes}

@@ -133,6 +133,26 @@ class ALServiceConfig:
     # False: a stale shard column rebuilds in full (debugging fallback;
     # selections are bit-identical either way)
     incremental_artifacts: bool = True
+    # centroid-gated pool prefilter (core.prefilter): selection scores only
+    # the pool blocks whose cluster summary survives a bound check.
+    # False = every query scans the full pool (the from-scratch oracle the
+    # gated paths are tested against)
+    prefilter: bool = False
+    # relative slack on the triangle-inequality bound: larger = looser =
+    # more rows scanned; a very large value degenerates to the exact full
+    # scan bit-for-bit
+    prefilter_slack: float = 0.05
+    # centroids per shard summary (0 = auto: ~1 per 256 rows, capped 64)
+    prefilter_clusters: int = 0
+    # shards below this row count skip summaries and always full-scan
+    prefilter_min_rows: int = 256
+    # RAM budget per artifact-column buffer: allocations past it go to
+    # mmap-backed spill files (core.selection.ColumnSpill). 0 = unlimited
+    # RAM (no spill)
+    shard_ram_bytes: int = 0
+    # spill file directory (default: a per-session dir under the system
+    # tempdir, removed on session close)
+    shard_spill_dir: Optional[str] = None
     # hard cap on concurrent TCP client connections (one transport worker
     # per live connection; extra clients queue until one disconnects)
     server_workers: int = 16
@@ -162,6 +182,12 @@ class ALServiceConfig:
             artifact_cache=bool(al.get("artifact_cache", True)),
             incremental_artifacts=bool(al.get("incremental_artifacts", True)),
             server_workers=int(worker.get("workers", 16)),
+            prefilter=bool(al.get("prefilter", False)),
+            prefilter_slack=float(al.get("prefilter_slack", 0.05)),
+            prefilter_clusters=int(al.get("prefilter_clusters", 0)),
+            prefilter_min_rows=int(al.get("prefilter_min_rows", 256)),
+            shard_ram_bytes=int(worker.get("shard_ram_bytes", 0)),
+            shard_spill_dir=worker.get("shard_spill_dir"),
         )
 
     @classmethod

@@ -47,6 +47,9 @@ TCP transport in transport.py (gRPC stand-in; see DESIGN.md).
 from __future__ import annotations
 
 import concurrent.futures as cf
+import os
+import shutil
+import tempfile
 import threading
 import time
 import uuid
@@ -57,8 +60,9 @@ import jax
 import numpy as np
 
 from repro.core.agent.controller import run_pshea
-from repro.core.selection import (ShardColumns, ShardView, grow_append,
-                                  replica_map, replica_of)
+from repro.core.prefilter import PrefilterConfig, maintain_summary
+from repro.core.selection import (ColumnSpill, ShardColumns, ShardView,
+                                  grow_append, replica_map, replica_of)
 from repro.core.strategies.zoo import HYBRIDS, PAPER_SEVEN, get_strategy
 from repro.service.backends import FeatureBackend, HeadState, make_backend
 from repro.service.batcher import DynamicBatcher
@@ -165,7 +169,27 @@ class ALSession:
         self.full_builds = 0         # shard feats columns built from empty
         self.delta_builds = 0        # shard feats columns extended in place
         self.probs_refreshes = 0     # head-only prob recomputes (0 embeds)
-        self._columns = [ShardColumns() for _ in range(self.replicas)]
+        # mmap spill for the artifact columns (shard_ram_bytes > 0): column
+        # buffers past the RAM budget land in per-session spill files that
+        # close() removes; None = RAM-only columns (the default)
+        cfg = server.config
+        self._spill: Optional[ColumnSpill] = None
+        if int(cfg.shard_ram_bytes) > 0:
+            base = cfg.shard_spill_dir or os.path.join(
+                tempfile.gettempdir(), "repro-shard-spill")
+            self._spill = ColumnSpill(
+                os.path.join(base, f"{os.getpid()}-{uuid.uuid4().hex[:8]}"),
+                int(cfg.shard_ram_bytes))
+        # centroid prefilter (core.prefilter): summaries are maintained
+        # alongside the columns when enabled; None = ungated full scans
+        self._prefilter_cfg: Optional[PrefilterConfig] = None
+        if cfg.prefilter:
+            self._prefilter_cfg = PrefilterConfig(
+                slack=float(cfg.prefilter_slack),
+                clusters=int(cfg.prefilter_clusters),
+                min_rows=int(cfg.prefilter_min_rows))
+        self._columns = [ShardColumns(self._spill)
+                         for _ in range(self.replicas)]
         self._index: Dict[str, Tuple[int, int]] = {}  # key -> (shard, row)
         self._artifact_lock = threading.Lock()
         # -- async ingest queue -----------------------------------------
@@ -333,10 +357,16 @@ class ALSession:
                 raise RuntimeError("asynchronous ingest failed") from err
 
     def close(self) -> None:
-        """Stop the ingest worker (drains what is already queued)."""
+        """Stop the ingest worker (drains what is already queued) and
+        remove the session's spill directory, if any."""
         with self._ingest_cv:
             self._ingest_stop = True
             self._ingest_cv.notify_all()
+        if self._spill is not None:
+            t = self._ingest_thread
+            if t is not None:
+                t.join(timeout=5.0)     # let the drain finish its appends
+            shutil.rmtree(self._spill.directory, ignore_errors=True)
 
     # ------------------------------------------------------ label/oracle --
     def attach_oracle(self, oracle: Callable[[Sequence[str]], Sequence[int]],
@@ -434,14 +464,20 @@ class ALSession:
                     kind = "full" if col.feats_rows == 0 else "delta"
                     new = self._feats_for(col.keys[col.feats_rows:rows])
                     col.feats, col.feats_rows = grow_append(
-                        col.feats, col.feats_rows, new)
+                        col.feats, col.feats_rows, new, col.spill)
                 col.feats_epoch = epoch
             if col.probs_head_epoch != head_v:
                 # head-only refresh: fresh buffer (pinned snapshots keep
                 # their rows), computed from cached feats — zero embeds
-                col.probs = (np.asarray(backend.probs(
+                old = col.probs
+                newp = (np.asarray(backend.probs(
                     col.feats[:col.feats_rows], head))
                     if col.feats_rows else None)
+                if newp is not None and col.spill is not None:
+                    newp = col.spill.adopt(newp)
+                col.probs = newp
+                if col.spill is not None and old is not None:
+                    col.spill.release(old)
                 col.probs_rows = col.feats_rows
                 col.probs_head_epoch = head_v
                 kind = kind or "probs"
@@ -449,7 +485,18 @@ class ALSession:
                 newp = np.asarray(backend.probs(
                     col.feats[col.probs_rows:col.feats_rows], head))
                 col.probs, col.probs_rows = grow_append(
-                    col.probs, col.probs_rows, newp)
+                    col.probs, col.probs_rows, newp, col.spill)
+            if self._prefilter_cfg is not None:
+                # centroid summary rides the same epoch discipline: rebuilt
+                # only when the tail outgrows the covered prefix, caps
+                # refreshed per head bump (copy-on-write — pinned queries
+                # keep their (probs, caps) pair)
+                col.summary = maintain_summary(
+                    col.summary,
+                    col.feats[:col.feats_rows] if col.feats_rows else None,
+                    col.probs[:col.probs_rows] if col.probs_rows else None,
+                    head_epoch=head_v, cfg=self._prefilter_cfg,
+                    spill=col.spill, salt=f"{self.session_id}/{si}")
             col.builds += 1
             return kind
 
@@ -467,16 +514,28 @@ class ALSession:
         O(pool) build (``artifact_cache: false``, the bit-identity
         oracle). Rows appended after the snapshot is pinned sit beyond
         ``rows_l`` and are invisible to it."""
+        return self._artifact_snapshot_ex()[:4]
+
+    def _artifact_snapshot_ex(self):
+        """``_artifact_snapshot`` plus the prefilter context pinned under
+        the SAME lock hold: per-shard summary refs and the probs head
+        epoch the snapshot is consistent at. Summaries are copy-on-write
+        (core.prefilter), so a ref pinned here stays a consistent
+        (geometry, caps) pair no matter what later refreshes publish."""
         backend = self.server.backend
         if not self.server.config.artifact_cache:
-            return self._build_from_scratch()
+            f, p, r, i = self._build_from_scratch()
+            return f, p, r, i, [None] * self.replicas, [-1] * self.replicas
         with self._artifact_lock:
             self._refresh_artifacts()
             feats_l = [c.feats_view(backend.feat_dim) for c in self._columns]
             probs_l = [c.probs_view(backend.num_classes)
                        for c in self._columns]
-            return feats_l, probs_l, [c.feats_rows for c in self._columns], \
-                self._index
+            summaries = [c.summary for c in self._columns]
+            epochs = [c.probs_head_epoch for c in self._columns]
+            return feats_l, probs_l, \
+                [c.feats_rows for c in self._columns], self._index, \
+                summaries, epochs
 
     def _build_from_scratch(self):
         """The O(pool) reference engine: re-gather + re-forward every shard
@@ -538,7 +597,11 @@ class ALSession:
                                 workers)
 
     def _query_one(self, unlabeled, budget, strategy, rng_seed) -> dict:
-        if self.replicas > 1:
+        if self.replicas > 1 or self._prefilter_cfg is not None:
+            # the prefilter lives in the sharded paths (its gated engines
+            # ARE the per-shard propose step), so a prefilter-enabled
+            # server routes through them even at replicas=1 — the 1-shard
+            # case of the same bit-identical merge
             return self._query_one_sharded(unlabeled, budget, strategy,
                                            rng_seed)
         strat = get_strategy(strategy)
@@ -581,7 +644,8 @@ class ALSession:
         the strategy's sharded path — selections bit-identical to
         ``replicas=1`` by construction (tests/test_sharding.py)."""
         strat = get_strategy(strategy)
-        feats_l, probs_l, rows_l, index = self._artifact_snapshot()
+        feats_l, probs_l, rows_l, index, summaries, epochs = \
+            self._artifact_snapshot_ex()
 
         def covered(k):   # pinned-snapshot bound, per shard
             e = index.get(k)
@@ -598,13 +662,24 @@ class ALSession:
             si, li = index[k]
             rows[si].append(li)
             gpos[si].append(g)
+        pf_cfg = self._prefilter_cfg
         shards = []
         for si in range(self.replicas):
             r = np.asarray(rows[si], np.int64)
+            summ = summaries[si]
+            # a summary older than the pinned view is fine (its tail is
+            # scanned in full); one COVERING MORE rows than the view — a
+            # racing refresh that rebuilt past our pin — is not usable
+            if summ is not None and summ.covered > rows_l[si]:
+                summ = None
             shards.append(ShardView(
                 feats=feats_l[si][r] if r.size else feats_l[si][:0],
                 probs=probs_l[si][r] if r.size else probs_l[si][:0],
-                gidx=np.asarray(gpos[si], np.int64)))
+                gidx=np.asarray(gpos[si], np.int64),
+                summary=summ if pf_cfg is not None else None,
+                pool_rows=r if pf_cfg is not None else None,
+                pool_feats=feats_l[si] if pf_cfg is not None else None,
+                probs_epoch=epochs[si]))
         labeled_emb = None
         if self._labeled_keys:
             lab = [index[k] for k in self._labeled_keys if covered(k)]
@@ -615,7 +690,8 @@ class ALSession:
         idx = np.asarray(strat.select_sharded(
             jax.random.PRNGKey(rng_seed), budget, shards,
             labeled_embeddings=labeled_emb,
-            executor=self.server.shard_executor()))
+            executor=self.server.shard_executor(),
+            prefilter=pf_cfg))
         return {"keys": [unlabeled[i] for i in idx],
                 "indices": idx.tolist(), "strategy": strategy,
                 "cache": self.server.cache.stats()}
@@ -695,6 +771,19 @@ class ALSession:
                     "rows_epoch": [c.rows_epoch for c in self._columns],
                     "feats_rows": [c.feats_rows for c in self._columns],
                     "head_epoch": self.head_version,
+                    # shard-spill counters (0s when shard_ram_bytes == 0)
+                    "spill_events": (self._spill.spill_events
+                                     if self._spill else 0),
+                    "spilled_bytes": (self._spill.spilled_bytes
+                                      if self._spill else 0),
+                    # centroid-prefilter summaries per shard (None = that
+                    # shard full-scans: below min_rows or prefilter off)
+                    "summary_builds": [
+                        (c.summary.builds if c.summary is not None else 0)
+                        for c in self._columns],
+                    "summary_covered": [
+                        (c.summary.covered if c.summary is not None else 0)
+                        for c in self._columns],
                 },
                 "replicas": self.replicas,
                 "ingest_pending": pending,

@@ -308,7 +308,17 @@ def test_autotune_blocks_cached_and_feasible(monkeypatch):
     assert autotune.tile_vmem_bytes(64, 4, ch.n_block, ch.r_block) \
         <= autotune.VMEM_BUDGET_BYTES
     assert autotune.autotune_blocks(4096, 64, jnp.float32) is ch  # cached
-    assert (4096, 64, "float32") in autotune.report()
+    assert (4096, 64, "float32", "round") in autotune.report()
+    # the gated (block-masked) round is a SEPARATE cache entry: its winner
+    # must never alias the plain round's (the PR-6 collision bug)
+    ch_gated = autotune.autotune_blocks(4096, 64, jnp.float32,
+                                        measure=False, variant="gated")
+    assert (4096, 64, "float32", "gated") in autotune.report()
+    assert autotune.autotune_blocks(
+        4096, 64, jnp.float32, variant="gated") is ch_gated
+    assert autotune.autotune_blocks(4096, 64, jnp.float32) is ch
+    with pytest.raises(ValueError, match="variant"):
+        autotune.autotune_blocks(4096, 64, jnp.float32, variant="bogus")
     # a huge feature dim must force smaller tiles, not blow the budget
     ch_wide = autotune.autotune_blocks(4096, 8192, jnp.float32, measure=False)
     assert autotune.tile_vmem_bytes(8192, 4, ch_wide.n_block,
@@ -326,7 +336,7 @@ def test_autotune_disk_cache_roundtrip(tmp_path, monkeypatch):
     monkeypatch.setenv("REPRO_AUTOTUNE_CACHE_DIR", str(tmp_path))
     autotune.clear_cache()
     ch = autotune.autotune_blocks(2048, 32, jnp.float32, measure=False)
-    entry = tmp_path / "n2048_d32_float32.json"
+    entry = tmp_path / "n2048_d32_float32_round.json"
     assert entry.exists()
     autotune.clear_cache()                       # simulate a fresh process
     assert autotune.autotune_blocks(2048, 32, jnp.float32,
@@ -336,10 +346,21 @@ def test_autotune_disk_cache_roundtrip(tmp_path, monkeypatch):
     assert autotune.autotune_blocks(2048, 32, jnp.float32,
                                     measure=False) == ch
     assert entry.read_text() != "not json"
+    # variants persist to DISTINCT files; a pre-variant (format-1) entry
+    # under the old aliasing name is never read
+    autotune.autotune_blocks(2048, 32, jnp.float32, measure=False,
+                             variant="gated")
+    assert (tmp_path / "n2048_d32_float32_gated.json").exists()
+    legacy = tmp_path / "n512_d8_float32.json"
+    legacy.write_text('{"format": 1, "n_block": 64, "r_block": 8, '
+                      '"hbm_bytes": 0.0, "wall_s": 0.0, "source": "model"}')
+    autotune.clear_cache()
+    autotune.autotune_blocks(512, 8, jnp.float32, measure=False)
+    assert (tmp_path / "n512_d8_float32_round.json").exists()
     monkeypatch.setenv("REPRO_AUTOTUNE_CACHE_DIR", "")
     autotune.clear_cache()
     autotune.autotune_blocks(1024, 16, jnp.float32, measure=False)
-    assert not (tmp_path / "n1024_d16_float32.json").exists()
+    assert not (tmp_path / "n1024_d16_float32_round.json").exists()
 
 
 def test_autotune_model_amortizes_r_block():
@@ -369,6 +390,77 @@ def test_greedy_round_autotuned_default_matches_ref():
     nm_r, ni_r, _ = ref.greedy_round_ref(x, mind, c, sel, w)
     np.testing.assert_allclose(nm_k, nm_r, rtol=1e-4, atol=1e-4)
     assert int(ni_k) == int(ni_r)
+
+
+# ------------------------------------------------- gated (masked) round ----
+@pytest.mark.parametrize("nrd", [(64, 3, 16), (100, 5, 64), (33, 2, 100),
+                                 (257, 9, 40)])
+def test_gated_greedy_round_kernel(nrd):
+    """Interpret-mode parity vs the oracle on ragged N with a random
+    live/pending pattern: dead blocks pass mind through untouched, live
+    blocks catch up only on the centers they have not folded."""
+    from repro.kernels.pairwise import ref
+    from repro.kernels.pairwise.kernel import gated_greedy_round_pallas
+
+    N, R, d = nrd
+    nb = 16
+    nn = -(-N // nb)
+    x = _arr((N, d), jnp.float32)
+    c = _arr((R, d), jnp.float32)
+    mind = jnp.asarray(np.abs(rng.normal(size=(N,))) * 10, jnp.float32)
+    live = jnp.asarray(rng.integers(0, 2, size=nn), jnp.int32)
+    pend = jnp.asarray(rng.integers(0, R + 1, size=nn), jnp.int32)
+    w = jnp.asarray(rng.uniform(0.1, 1.0, size=(N,)), jnp.float32)
+    for weights in (None, w):
+        nm_k, ni_k, nv_k = gated_greedy_round_pallas(
+            x, mind, c, live, pend, weights=weights, n_block=nb,
+            interpret=True)
+        nm_r, ni_r, nv_r = ref.gated_greedy_round_ref(
+            x, mind, c, live, pend, weights=weights, n_block=nb)
+        np.testing.assert_allclose(nm_k, nm_r, rtol=1e-4, atol=1e-4)
+        assert int(ni_k) == int(ni_r)
+        np.testing.assert_allclose(nv_k, nv_r, rtol=1e-4, atol=1e-4)
+    # dead blocks: mind passes through bitwise
+    dead_rows = np.concatenate(
+        [np.arange(b * nb, min((b + 1) * nb, N))
+         for b in np.nonzero(np.asarray(live) == 0)[0]]) \
+        if (np.asarray(live) == 0).any() else np.zeros(0, np.int64)
+    np.testing.assert_array_equal(np.asarray(nm_k)[dead_rows],
+                                  np.asarray(mind)[dead_rows])
+
+
+def test_gated_round_all_live_matches_plain_round():
+    """Every block live with nothing pending-masked == the plain fused
+    round (same floats), the degenerate-gate sanity check."""
+    from repro.kernels.pairwise import ops
+
+    x = _arr((90, 32), jnp.float32)
+    c = _arr((4, 32), jnp.float32)
+    mind = jnp.asarray(np.abs(rng.normal(size=(90,))) * 10, jnp.float32)
+    nn = -(-90 // 16)
+    nm_g, ni_g, _ = ops.gated_greedy_round(
+        x, mind, c, np.ones(nn, np.int64), np.zeros(nn, np.int64),
+        impl="interpret", n_block=16)
+    sel = jnp.full((4,), -1, jnp.int32)
+    nm_p, ni_p, _ = ops.greedy_round(x, mind, c, sel, impl="interpret")
+    np.testing.assert_array_equal(np.asarray(nm_g), np.asarray(nm_p))
+    assert int(ni_g) == int(ni_p)
+
+
+def test_gated_round_accounting_counts_live_rows_only():
+    from repro.kernels.pairwise import ops
+
+    x = _arr((100, 8), jnp.float32)
+    c = _arr((1, 8), jnp.float32)
+    mind = jnp.full((100,), 1e9, jnp.float32)
+    live = np.array([1, 0, 0, 1], np.int64)      # blocks of 32: 32+4 rows
+    with ops.track_ops() as stats:
+        ops.gated_greedy_round(x, mind, c, live, np.zeros(4, np.int64),
+                               impl="ref", n_block=32)
+    assert stats["pool_rows"] == 32 + 4          # last block is ragged
+    with pytest.raises(ValueError, match="block_live"):
+        ops.gated_greedy_round(x, mind, c, np.ones(3, np.int64),
+                               np.zeros(3, np.int64), n_block=32)
 
 
 # -------------------------------------------------------- flash attention ----

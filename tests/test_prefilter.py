@@ -1,0 +1,332 @@
+"""Centroid-gated prefilter + mmap shard spill (PR 6): summary
+construction/maintenance invariants, gated top-k and gated greedy
+bit-identity against the ``prefilter: false`` full-scan oracle (including
+ragged/degenerate edges), and spilled-column bit-identity against
+RAM-resident buffers — deterministically here and under random pools and
+budgets (hypothesis, slow lane)."""
+import numpy as np
+import pytest
+
+from repro.core import prefilter as pf
+from repro.core.selection import ColumnSpill, grow_append
+from repro.service.backends import MLPBackend
+from repro.service.config import ALServiceConfig
+from repro.service.server import ALServer
+
+GATED = ("lc", "mc", "rc", "es", "kcg", "coreset")
+
+
+def _mlp_server(replicas=1, **cfg):
+    return ALServer(ALServiceConfig(batch_size=16, replicas=replicas, **cfg),
+                    backend=MLPBackend(in_dim=192, feat_dim=32))
+
+
+def _vec_pool(n, seed=0, d=192):
+    return np.random.default_rng(seed).normal(size=(n, d)).astype(np.float32)
+
+
+def _pair(replicas, n=96, seed=1, **pf_cfg):
+    """(oracle, gated) servers fed the identical pool."""
+    X = _vec_pool(n, seed)
+    cfg = dict(prefilter=True, prefilter_min_rows=8, prefilter_clusters=6)
+    cfg.update(pf_cfg)
+    off = _mlp_server(replicas)
+    on = _mlp_server(replicas, **cfg)
+    keys = off.push_data(list(X))
+    assert on.push_data(list(X)) == keys
+    return off, on, keys, X
+
+
+# ------------------------------------------------------ summary building --
+def test_build_summary_partitions_rows_and_bounds_radii():
+    rng = np.random.default_rng(3)
+    feats = rng.normal(size=(57, 16)).astype(np.float32)
+    s = pf.build_summary(feats, k=5, salt="t")
+    assert s.covered == 57 and s.starts[0] == 0 and s.starts[-1] == 57
+    assert sorted(s.rowid.tolist()) == list(range(57))   # a permutation
+    np.testing.assert_array_equal(s.xperm, feats[s.rowid])
+    for j in range(s.k):
+        seg = s.rowid[int(s.starts[j]):int(s.starts[j + 1])]
+        # ascending within a cluster: within-cluster argmax tie-breaks
+        # must match pool order
+        assert np.all(np.diff(seg) > 0) or seg.size <= 1
+        if seg.size:
+            d2 = ((feats[seg].astype(np.float64)
+                   - s.cents[j]) ** 2).sum(-1)
+            assert np.sqrt(d2).max() <= s.radii[j] + 1e-9
+    # deterministic per (salt, rows, k)
+    s2 = pf.build_summary(feats, k=5, salt="t")
+    np.testing.assert_array_equal(s.rowid, s2.rowid)
+    assert pf.build_summary(feats, k=5, salt="u").builds == s.builds
+
+
+def test_maintain_summary_epochs_and_caps_cow():
+    cfg = pf.PrefilterConfig(clusters=4, min_rows=16)
+    rng = np.random.default_rng(4)
+    feats = rng.normal(size=(40, 8)).astype(np.float32)
+    probs = rng.dirichlet(np.ones(4), size=40).astype(np.float32)
+    assert pf.maintain_summary(None, feats[:10], probs[:10], 0, cfg) is None
+    s = pf.maintain_summary(None, feats[:24], probs[:24], 0, cfg)
+    assert s is not None and s.covered == 24 and s.builds == 1
+    assert s.caps is not None and s.caps_head_epoch == 0
+    # small tail: same summary object (caps fresh, no rebuild)
+    assert pf.maintain_summary(s, feats[:30], probs[:30], 0, cfg) is s
+    # head bump: copy-on-write caps — NEW object, shared geometry
+    s2 = pf.maintain_summary(s, feats[:30], probs[:30], 1, cfg)
+    assert s2 is not s and s2.xperm is s.xperm and s2.builds == s.builds
+    assert s.caps_head_epoch == 0 and s2.caps_head_epoch == 1
+    # tail outgrows the covered prefix (40 - 24 > min(24, 16) fails;
+    # force it with a tiny covered prefix)
+    small = pf.maintain_summary(None, feats[:17], probs[:17], 0, cfg)
+    big = pf.maintain_summary(small, feats, probs, 0, cfg)
+    assert big.covered == 40 and big.builds == 2
+    # caps are true per-cluster maxima over covered rows
+    from repro.core.strategies.uncertainty import SCORE_FNS
+    for kind, fn in SCORE_FNS.items():
+        sc = np.asarray(fn(probs[:s.covered]))
+        for j in range(s.k):
+            seg = s.rowid[int(s.starts[j]):int(s.starts[j + 1])]
+            if seg.size:
+                assert s.caps[kind][j] == sc[seg].max(), (kind, j)
+
+
+def test_auto_k_clamps():
+    assert pf.PrefilterConfig().auto_k(100_000) == 64
+    assert pf.PrefilterConfig().auto_k(300) == 4
+    assert pf.PrefilterConfig(clusters=9).auto_k(5) == 5   # k <= rows
+    assert pf.PrefilterConfig().auto_k(1) == 1
+
+
+# ------------------------------------------- bit-identity vs the oracle --
+@pytest.mark.parametrize("replicas", (1, 3))
+def test_gated_selections_bit_identical(replicas):
+    """Every gated strategy must match the full-scan oracle through a
+    realistic label/train/push/query script."""
+    off, on, keys, X = _pair(replicas, n=96)
+    for srv in (off, on):
+        srv.label(keys[:20], [i % 4 for i in range(20)])
+        srv.train_and_eval()
+    for s in GATED:
+        assert on.query(budget=7, strategy=s, rng_seed=5)["keys"] == \
+            off.query(budget=7, strategy=s, rng_seed=5)["keys"], s
+    # ingest after the summary built: tail rows must stay selectable
+    X2 = _vec_pool(24, seed=9)
+    for srv in (off, on):
+        srv.push_data(list(X2))
+    for s in GATED:
+        assert on.query(budget=7, strategy=s, rng_seed=8)["keys"] == \
+            off.query(budget=7, strategy=s, rng_seed=8)["keys"], s
+    assert max(on.stats()["artifacts"]["summary_builds"]) >= 1
+    on.session().close(), off.session().close()
+
+
+def test_loose_slack_is_the_full_scan():
+    """A degenerate bound (huge slack: nothing ever pruned) must reproduce
+    the oracle bit-for-bit — the exactness escape hatch."""
+    off, on, keys, _ = _pair(1, n=80, prefilter_slack=1e9)
+    for srv in (off, on):
+        srv.label(keys[:16], [i % 4 for i in range(16)])
+        srv.train_and_eval()
+    for s in GATED:
+        assert on.query(budget=9, strategy=s, rng_seed=2)["keys"] == \
+            off.query(budget=9, strategy=s, rng_seed=2)["keys"], s
+
+
+def test_prefilter_ignored_by_weighted_strategies():
+    """Fresh per-slot weights defeat distance-only bounds: the weighted
+    strategies accept the knob and run ungated — still oracle-identical."""
+    off, on, keys, _ = _pair(3, n=72)
+    for srv in (off, on):
+        srv.label(keys[:16], [i % 4 for i in range(16)])
+        srv.train_and_eval()
+    for s in ("badge", "margin_density", "weighted_kcenter"):
+        assert on.query(budget=5, strategy=s, rng_seed=4)["keys"] == \
+            off.query(budget=5, strategy=s, rng_seed=4)["keys"], s
+
+
+# ----------------------------------------------------- degenerate edges --
+def test_empty_shard_edge():
+    """A pool smaller than the replica count leaves shards empty; the
+    gated path must agree with the oracle anyway."""
+    off, on, keys, _ = _pair(3, n=2, prefilter_min_rows=1,
+                             prefilter_clusters=2)
+    for s in ("lc", "kcg"):
+        assert on.query(budget=2, strategy=s, rng_seed=1)["keys"] == \
+            off.query(budget=2, strategy=s, rng_seed=1)["keys"], s
+
+
+def test_shards_smaller_than_one_centroid():
+    """clusters > shard rows: auto_k clamps to the row count (one-row
+    clusters), selections stay oracle-identical."""
+    off, on, keys, _ = _pair(3, n=10, prefilter_min_rows=1,
+                             prefilter_clusters=64)
+    for s in GATED:
+        assert on.query(budget=4, strategy=s, rng_seed=3)["keys"] == \
+            off.query(budget=4, strategy=s, rng_seed=3)["keys"], s
+
+
+def test_all_rows_labeled_pool():
+    """Labeling the whole pool leaves zero candidates — both engines must
+    behave identically (no crash in the gated path)."""
+    off, on, keys, _ = _pair(1, n=24, prefilter_min_rows=1)
+    for srv in (off, on):
+        srv.label(keys, [i % 4 for i in range(len(keys))])
+        srv.train_and_eval()
+    res = {}
+    for name, srv in (("off", off), ("on", on)):
+        try:
+            res[name] = srv.query(budget=4, strategy="lc",
+                                  rng_seed=1)["keys"]
+        except Exception as e:
+            res[name] = type(e).__name__
+    assert res["on"] == res["off"]
+
+
+def test_below_min_rows_full_scans():
+    """Pools under prefilter_min_rows never build summaries (full-scan
+    fallback), and selections still match the oracle."""
+    off, on, keys, _ = _pair(1, n=40, prefilter_min_rows=4096)
+    assert on.stats()["artifacts"]["summary_builds"] == [0]
+    for s in ("lc", "kcg"):
+        assert on.query(budget=5, strategy=s, rng_seed=6)["keys"] == \
+            off.query(budget=5, strategy=s, rng_seed=6)["keys"], s
+
+
+# ------------------------------------------------------- mmap shard spill --
+def test_column_spill_allocate_release_adopt(tmp_path):
+    sp = ColumnSpill(str(tmp_path / "s"), ram_bytes=64)
+    small = np.ones((2, 4), np.float32)          # 32 B: stays in RAM
+    assert sp.adopt(small) is small
+    big = np.arange(64, dtype=np.float32).reshape(4, 16)   # 256 B: spills
+    m = sp.adopt(big)
+    assert isinstance(m, np.memmap)
+    np.testing.assert_array_equal(m, big)
+    assert sp.spill_events == 1 and sp.spilled_bytes == big.nbytes
+    view = m[:2]                                 # pinned snapshot
+    sp.release(m)                                # unlink: view survives
+    assert sp.spilled_bytes == 0
+    np.testing.assert_array_equal(view, big[:2])
+    import os
+    assert not os.path.exists(m.filename)
+    sp.release(small)                            # RAM array: no-op
+
+
+def test_grow_append_spills_past_budget(tmp_path):
+    sp = ColumnSpill(str(tmp_path / "g"), ram_bytes=200)
+    buf, n = grow_append(None, 0, np.ones((3, 4), np.float32), sp)
+    assert not isinstance(buf, np.memmap)        # 48 B cap: RAM
+    view = buf[:n].copy()
+    for i in range(6):                           # growth crosses the budget
+        buf, n = grow_append(buf, n, np.full((3, 4), i, np.float32), sp)
+    assert isinstance(buf, np.memmap)
+    assert sp.spill_events >= 1
+    np.testing.assert_array_equal(buf[:3], view)  # rows survived the moves
+    # appending to a spilled buffer keeps extending it
+    buf2, n2 = grow_append(buf, n, np.full((2, 4), 9, np.float32), sp)
+    assert n2 == n + 2
+    np.testing.assert_array_equal(buf2[n2 - 2:n2], 9.0)
+
+
+@pytest.mark.parametrize("replicas", (1, 3))
+def test_spilled_server_bit_identical(replicas, tmp_path):
+    """shard_ram_bytes small enough that every column buffer spills: the
+    full push/query/label/train/push script must select identically to
+    the RAM-resident server, and the spill must actually happen."""
+    X = _vec_pool(64, seed=12)
+    ram = _mlp_server(replicas)
+    spl = _mlp_server(replicas, shard_ram_bytes=1024,
+                      shard_spill_dir=str(tmp_path))
+    keys = ram.push_data(list(X[:40]))
+    assert spl.push_data(list(X[:40])) == keys
+    for s in ("lc", "kcg", "coreset", "badge"):
+        assert spl.query(budget=6, strategy=s, rng_seed=2)["keys"] == \
+            ram.query(budget=6, strategy=s, rng_seed=2)["keys"], s
+    for srv in (ram, spl):
+        srv.label(keys[:12], [i % 4 for i in range(12)])
+        srv.train_and_eval()
+        srv.push_data(list(X[40:]))
+    for s in ("lc", "kcg", "coreset", "badge"):
+        assert spl.query(budget=6, strategy=s, rng_seed=7)["keys"] == \
+            ram.query(budget=6, strategy=s, rng_seed=7)["keys"], s
+    art = spl.stats()["artifacts"]
+    assert art["spill_events"] > 0 and art["spilled_bytes"] > 0
+    assert ram.stats()["artifacts"]["spill_events"] == 0
+    spl.session().close()
+    import os
+    assert not os.listdir(str(tmp_path))     # close removed the spill dir
+
+
+def test_spilled_snapshot_pinned_across_push(tmp_path):
+    """The PR-5 pinned-snapshot contract must hold over memmap buffers:
+    rows appended after the pin stay invisible, pinned rows stay readable
+    after growth relocates (and unlinks) the old file."""
+    X = _vec_pool(30, seed=13)
+    srv = _mlp_server(shard_ram_bytes=512, shard_spill_dir=str(tmp_path))
+    srv.push_data(list(X[:20]))
+    sess = srv.session()
+    feats_l, probs_l, rows_l, index = sess._artifact_snapshot()
+    pinned = feats_l[0][:5].copy()
+    srv.push_data(list(X[20:]))                  # growth after the pin
+    assert feats_l[0].shape[0] == 20
+    np.testing.assert_array_equal(feats_l[0][:5], pinned)
+    assert sess._artifact_snapshot()[0][0].shape[0] == 30
+    sess.close()
+
+
+def test_spill_with_prefilter_bit_identical(tmp_path):
+    """Both tentpole halves together: spilled columns + gated selection
+    still match the plain-RAM, ungated oracle."""
+    X = _vec_pool(72, seed=14)
+    plain = _mlp_server(3)
+    both = _mlp_server(3, shard_ram_bytes=1024,
+                       shard_spill_dir=str(tmp_path), prefilter=True,
+                       prefilter_min_rows=8, prefilter_clusters=6)
+    keys = plain.push_data(list(X))
+    assert both.push_data(list(X)) == keys
+    for srv in (plain, both):
+        srv.label(keys[:16], [i % 4 for i in range(16)])
+        srv.train_and_eval()
+    for s in GATED:
+        assert both.query(budget=6, strategy=s, rng_seed=9)["keys"] == \
+            plain.query(budget=6, strategy=s, rng_seed=9)["keys"], s
+    art = both.stats()["artifacts"]
+    assert art["spill_events"] > 0 and max(art["summary_builds"]) >= 1
+    both.session().close()
+
+
+# ------------------------------------------------ random pools (slow) ----
+@pytest.mark.slow
+def test_random_pools_gated_matches_oracle():
+    """Hypothesis: across random pool sizes, cluster counts, budgets,
+    slacks and replicas, ``prefilter: true`` selections equal the
+    ``prefilter: false`` oracle for every gated strategy."""
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=10, deadline=None)
+    @given(n=st.integers(12, 120), replicas=st.sampled_from([1, 3]),
+           clusters=st.integers(1, 12), budget=st.integers(1, 10),
+           slack=st.sampled_from([0.0, 0.05, 1.0]),
+           seed=st.integers(0, 9), labeled=st.integers(0, 10))
+    def run(n, replicas, clusters, budget, slack, seed, labeled):
+        X = _vec_pool(n, seed=seed)
+        off = _mlp_server(replicas)
+        on = _mlp_server(replicas, prefilter=True, prefilter_min_rows=4,
+                         prefilter_clusters=clusters,
+                         prefilter_slack=slack)
+        keys = off.push_data(list(X))
+        on.push_data(list(X))
+        lab = min(labeled, n - 1)
+        if lab:
+            for srv in (off, on):
+                srv.label(keys[:lab], [i % 4 for i in range(lab)])
+                srv.train_and_eval()
+        budget = min(budget, n - lab)
+        for s in ("lc", "es", "kcg", "coreset"):
+            assert on.query(budget=budget, strategy=s,
+                            rng_seed=seed)["keys"] == \
+                off.query(budget=budget, strategy=s,
+                          rng_seed=seed)["keys"], s
+        on.session().close(), off.session().close()
+
+    run()

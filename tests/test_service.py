@@ -283,6 +283,29 @@ def test_yaml_lists():
     assert d["ys"][0] == {"a": 1}
 
 
+def test_yaml_prefilter_and_spill_knobs():
+    text = """
+active_learning:
+  prefilter: true
+  prefilter_slack: 0.1
+  prefilter_clusters: 32
+  prefilter_min_rows: 128
+al_worker:
+  replicas: 3
+  shard_ram_bytes: 4096
+  shard_spill_dir: "/tmp/spill"
+"""
+    cfg = ALServiceConfig.from_dict(parse_yaml(text))
+    assert cfg.prefilter is True and cfg.prefilter_slack == 0.1
+    assert cfg.prefilter_clusters == 32 and cfg.prefilter_min_rows == 128
+    assert cfg.shard_ram_bytes == 4096
+    assert cfg.shard_spill_dir == "/tmp/spill"
+    # defaults: gate off (the oracle), unlimited RAM (no spill)
+    d = ALServiceConfig()
+    assert d.prefilter is False and d.shard_ram_bytes == 0
+    assert d.shard_spill_dir is None
+
+
 # ----------------------------------------------------------------- server --
 @pytest.fixture(scope="module")
 def pool():
