@@ -61,6 +61,16 @@
    driven through an interleaved push/query/label/retrain/push script and
    asserted bit-identical to the RAM-resident server at replicas 1 and 3,
    with the spill counters asserted nonzero (the spill path actually ran).
+
+9. standing queries: a registered ``(budget, coreset)`` subscription is
+   streamed near-duplicate deltas; every emit rides the O(delta) replay
+   engine (persisted per-shard min-dist state + recorded per-slot winner
+   scores), op-accounted in pool-row units and asserted at >=10x fewer
+   rows than the full re-selection an emit costs with
+   ``standing_replay: false`` — while the final streamed selection is
+   asserted bit-identical to a one-shot query over the final pool on a
+   fresh server with every incremental engine off. CI re-asserts the
+   ratio from the uploaded JSON (scripts/assert_table2_standing.py).
 """
 from __future__ import annotations
 
@@ -474,11 +484,13 @@ def _prefilter_gated(n: int = 12288, clumps: int = 48, d: int = 192) -> list:
         srv.label([keys[i] for i in lab],
                   [i % 4 for i in range(len(lab))])
         srv.train_and_eval()
-        # warm query: artifact columns, centroid summaries and jit caches
-        # build OUTSIDE the tracked window — the summary is amortized
-        # across every later query, so its one-off k-means must not be
-        # billed to the pass it gates
+        # warm queries: artifact columns, centroid summaries, jit caches
+        # AND the persisted k-center min-dist state build OUTSIDE the
+        # tracked window — the summary's one-off k-means and the state's
+        # one-off warm fold are amortized across every later query, so
+        # neither is billed to the pass it serves
         srv.query(budget=1, strategy="lc")
+        srv.query(budget=1, strategy="coreset")
         picks, rows = {}, {}
         for strat, budget in (("lc", 16), ("es", 16),
                               ("coreset", 48), ("kcg", 48)):
@@ -563,6 +575,100 @@ def _shard_spill(n: int = 240, d: int = 192) -> list:
         f"spilled_bytes={spilled['bytes']};bit_identical=True")]
 
 
+def _standing_query(n: int = 4096, d: int = 192, budget: int = 32,
+                    n_deltas: int = 6, delta_rows: int = 64) -> list:
+    """9. standing queries: O(delta) streamed emits, asserted and
+    op-accounted.
+
+    Near-duplicate deltas (tiny perturbations of labeled rows — the
+    steady-state stream of a deployed collector re-observing known
+    regimes) can never displace a recorded per-slot winner, so every emit
+    must ride the replay engine: extend the persisted min-dist state over
+    the delta rows, fold the stored centers over JUST those rows, compare
+    against the recorded winner scores. Emits are driven by sync pushes +
+    polls on this thread because ``ops.track_ops`` is process-global.
+    """
+    from repro.kernels.pairwise import ops
+    from repro.service.backends import MLPBackend
+
+    rng = np.random.default_rng(29)
+    X = rng.normal(size=(n, d)).astype(np.float32)
+    n_lab = 96
+
+    def build(**cfg):
+        srv = ALServer(ALServiceConfig(batch_size=64, replicas=3, **cfg),
+                       backend=MLPBackend(in_dim=d, feat_dim=32))
+        keys = srv.push_data(list(X))
+        srv.label(keys[:n_lab], [i % 4 for i in range(n_lab)])
+        srv.train_and_eval()
+        return srv
+
+    deltas = [[X[(j * delta_rows + i) % n_lab]
+               + rng.normal(scale=1e-4, size=(d,)).astype(np.float32)
+               for i in range(delta_rows)] for j in range(n_deltas)]
+
+    srv = build()
+    reg = srv.standing_register(budget=budget, strategy="coreset",
+                                rng_seed=7)
+    seen, emit_rows, modes = reg["seq"], [], []
+    for delta in deltas:
+        srv.push_data(delta)               # sync: the POLL below emits
+        ops.reset_op_stats()
+        with ops.track_ops():
+            r = srv.standing_poll(reg["query_id"], since=seen)
+        emit_rows.append(ops.op_stats()["pool_rows"])
+        modes += [e["mode"] for e in r["emits"]]
+        seen = r["seq"]
+    final = srv.standing_poll(reg["query_id"])
+    sq_stats = srv.stats()["standing_queries"]
+    assert modes == ["replay"] * n_deltas, modes
+    assert sq_stats["replay_emits"] == n_deltas, sq_stats
+    # O(delta) contract: an emit touches a small multiple of the delta
+    # rows (state extend + budget-1 center folds), never the pool
+    assert max(emit_rows) <= 3 * delta_rows * (budget + 1), emit_rows
+    # reference cost: the same final emit with the replay engine OFF is a
+    # full re-selection over the whole unlabeled pool
+    ref = build(standing_replay=False)
+    reg2 = ref.standing_register(budget=budget, strategy="coreset",
+                                 rng_seed=7)
+    for delta in deltas[:-1]:
+        ref.push_data(delta)
+        ref.standing_poll(reg2["query_id"])
+    ref.push_data(deltas[-1])
+    ops.reset_op_stats()
+    with ops.track_ops():
+        r2 = ref.standing_poll(reg2["query_id"])
+    full_rows = ops.op_stats()["pool_rows"]
+    assert r2["keys"] == final["keys"], \
+        "replay emits diverged from the full-emit oracle"
+    ratio = full_rows / max(max(emit_rows), 1)
+    assert ratio >= 10.0, (
+        f"replay emit touched {max(emit_rows)} pool rows vs {full_rows} "
+        f"for the full emit (ratio {ratio:.1f}x, need >=10x)")
+    # bit-identity oracle: one-shot over the final pool, fresh server,
+    # every incremental engine off
+    cold = ALServer(
+        ALServiceConfig(batch_size=64, replicas=3, artifact_cache=False,
+                        strategy_state_cache=False, standing_replay=False),
+        backend=MLPBackend(in_dim=d, feat_dim=32))
+    keys = cold.push_data(list(X))
+    for delta in deltas:
+        cold.push_data(delta)
+    cold.label(keys[:n_lab], [i % 4 for i in range(n_lab)])
+    cold.train_and_eval()
+    one_shot = cold.query(budget=budget, strategy="coreset",
+                          rng_seed=7)["keys"]
+    assert final["keys"] == one_shot, \
+        "streamed cumulative selection diverged from the one-shot query"
+    return [row(
+        "table2/standing_query", 0.0,
+        f"pool={n};replicas=3;budget={budget};deltas={n_deltas}"
+        f"x{delta_rows};replay_emits={sq_stats['replay_emits']};"
+        f"rows_per_emit_max={max(emit_rows)};full_emit_rows={full_rows};"
+        f"rows_ratio={ratio:.1f}x;streamed_equals_one_shot=True;"
+        f"asserted_ge=10x")]
+
+
 def run() -> list:
     out = _pipeline_vs_serial()
     out += _concurrent_clients()
@@ -572,4 +678,5 @@ def run() -> list:
     out += _incremental_artifacts()
     out += _prefilter_gated()
     out += _shard_spill()
+    out += _standing_query()
     return out

@@ -1,0 +1,61 @@
+"""CI gate for the standing-query O(delta) emit accounting (tier-2).
+
+The table2 benchmark asserts the standing-query invariants in-process;
+this script re-asserts them from the UPLOADED JSON
+(``benchmarks.run --json``), so a regression that stops replay emits
+from firing, drops the rows-touched ratio below 10x, breaks the
+streamed == one-shot bit-identity, or silently removes the section
+fails the workflow on the artifact it publishes.
+
+    python scripts/assert_table2_standing.py BENCH_table2.json
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+MIN_RATIO = 10.0
+
+
+def parse_derived(derived: str) -> dict:
+    out = {}
+    for part in derived.split(";"):
+        if "=" in part:
+            k, _, v = part.partition("=")
+            out[k] = v
+    return out
+
+
+def main(path: str) -> None:
+    with open(path) as f:
+        doc = json.load(f)
+    rows = {r["name"]: parse_derived(r["derived"]) for r in doc["rows"]}
+    errors = []
+    name = "table2/standing_query"
+    d = rows.get(name)
+    if d is None:
+        errors.append(f"missing benchmark row {name!r}")
+    else:
+        if d.get("streamed_equals_one_shot") != "True":
+            errors.append(f"{name}: streamed selection no longer "
+                          f"bit-identical to the one-shot query")
+        replays = int(d.get("replay_emits", 0))
+        if replays <= 0:
+            errors.append(f"{name}: replay_emits={replays} — every emit "
+                          f"fell back to a full re-selection")
+        ratio = float(d.get("rows_ratio", "0x").rstrip("x"))
+        if ratio < MIN_RATIO:
+            errors.append(f"{name}: rows_ratio={ratio:.1f}x regressed "
+                          f"below {MIN_RATIO:.0f}x (emit no longer "
+                          f"O(delta))")
+    if errors:
+        print("standing-query regression:", file=sys.stderr)
+        for e in errors:
+            print(f"  - {e}", file=sys.stderr)
+        sys.exit(1)
+    print(f"standing-query accounting OK (replay_emits={d['replay_emits']}"
+          f", rows_ratio={d['rows_ratio']}, streamed==one-shot)")
+
+
+if __name__ == "__main__":
+    main(sys.argv[1] if len(sys.argv) > 1 else "BENCH_table2.json")

@@ -270,7 +270,8 @@ class _ShardEngine:
     permuted layout + the always-live tail, a shared queue of folded
     center entries, and per-segment pending cursors / bounds."""
 
-    def __init__(self, shard, slack: float, impl: str = "auto"):
+    def __init__(self, shard, slack: float, impl: str = "auto",
+                 warm_mind=None, warm_centers=None):
         self.impl = impl
         self.slack = float(slack)
         self.summary: Optional[CentroidSummary] = shard.summary
@@ -286,6 +287,16 @@ class _ShardEngine:
         in_view = np.zeros(n_pool, bool)
         in_view[pool_rows] = True
         self.entries: List[np.ndarray] = []      # queued center batches
+        # warm_mind: persisted pool-level min-dists vs warm_centers
+        # (core.selection.KCenterState). Segments/tail start from those
+        # floats with ZERO entries queued — the first propose is pure
+        # vector-op scoring, no (N, d) pool rows read (the ROADMAP's "lazy
+        # warm start" follow-up). warm_centers still tighten the triangle
+        # bounds exactly as queueing them would: T is a min over per-center
+        # bounds, independent of fold chunking.
+        if warm_mind is not None:
+            assert int(warm_mind.shape[0]) == n_pool
+            warm_mind = np.asarray(warm_mind, np.float32)
         summ = self.summary
         self.covered = 0 if summ is None else min(summ.covered, n_pool)
         if summ is not None:
@@ -295,7 +306,9 @@ class _ShardEngine:
             self.inv_perm = np.empty(self.covered, np.int64)
             self.inv_perm[self.rowid] = np.arange(self.covered)
             view_perm = in_view[self.rowid]
-            self.mind_x = np.where(view_perm, BIG, -1.0).astype(np.float32)
+            live = (BIG if warm_mind is None
+                    else warm_mind[self.rowid].astype(np.float64))
+            self.mind_x = np.where(view_perm, live, -1.0).astype(np.float32)
             self.seg_alive = np.array(
                 [int(view_perm[int(self.starts[j]):
                                int(self.starts[j + 1])].sum())
@@ -304,10 +317,15 @@ class _ShardEngine:
             self.T_sqrt = np.full(k, np.inf, np.float64)
             self.M = np.full(k, np.inf, np.float64)
         # the tail: rows past the covered prefix, always scanned
-        self.tail_mind = np.where(in_view[self.covered:], BIG,
+        tail_live = (BIG if warm_mind is None
+                     else warm_mind[self.covered:].astype(np.float64))
+        self.tail_mind = np.where(in_view[self.covered:], tail_live,
                                   -1.0).astype(np.float32)
         self.tail_alive = int(in_view[self.covered:].sum())
         self.tail_pending = 0
+        if warm_mind is not None and warm_centers is not None \
+                and len(warm_centers):
+            self._tighten(np.asarray(warm_centers, np.float32))
 
     # ------------------------------------------------------------ state --
     def row_vec(self, pool_row: int) -> np.ndarray:
@@ -427,23 +445,35 @@ class _ShardEngine:
 
 def gated_greedy_select(rng, budget: int, shards: Sequence, *,
                         init_centers=None, slack: float = 0.05,
-                        executor=None, impl: str = "auto") -> np.ndarray:
+                        executor=None, impl: str = "auto",
+                        state=None) -> np.ndarray:
     """Replica-sharded greedy k-center with the centroid gate — same
     local-propose / global-merge round structure as
     ``selection.replica_greedy_select``, same rng schedule, same
-    (value desc, global index asc) merges."""
+    (value desc, global index asc) merges.
+
+    ``state`` (a ``core.selection.KCenterState``) seeds each engine's
+    segment/tail min-dists from the session's persisted pool-level fold,
+    so the warm start streams ZERO pool rows instead of every row once."""
     N = selection.replica_total(shards)
     nsh = len(shards)
-    engines = [(_ShardEngine(s, slack, impl) if s.n else None)
-               for s in shards]
+    warm = init_centers is not None and init_centers.shape[0] > 0
+    init = np.asarray(init_centers, np.float32) if warm else None
+    engines = [(_ShardEngine(s, slack, impl,
+                             warm_mind=(state.pool_mind(i)
+                                        if state is not None and warm
+                                        else None),
+                             warm_centers=init if state is not None else None)
+                if s.n else None)
+               for i, s in enumerate(shards)]
     sel = np.zeros((budget,), np.int64)
-    if init_centers is not None and init_centers.shape[0] > 0:
-        init = np.asarray(init_centers, np.float32)
-        for i, e in enumerate(engines):
-            if e is not None:
-                rb = ops.autotuned_blocks(shards[i].n,
-                                          init.shape[1]).r_block
-                e.add_warm_start(init, rb)
+    if warm:
+        if state is None:
+            for i, e in enumerate(engines):
+                if e is not None:
+                    rb = ops.autotuned_blocks(shards[i].n,
+                                              init.shape[1]).r_block
+                    e.add_warm_start(init, rb)
         start = 0
     else:
         # same rng call over the same N as the ungated path: same seed row

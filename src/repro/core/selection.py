@@ -365,7 +365,7 @@ class ShardColumns:
 
     __slots__ = ("keys", "rows_epoch", "feats", "feats_rows", "feats_epoch",
                  "probs", "probs_rows", "probs_head_epoch", "builds",
-                 "spill", "summary")
+                 "spill", "summary", "lineage")
 
     def __init__(self, spill: Optional[ColumnSpill] = None):
         self.keys: list = []          # shard-local key order == global order
@@ -379,6 +379,9 @@ class ShardColumns:
         self.builds = 0               # refresh events that touched this shard
         self.spill = spill            # None = RAM-only columns
         self.summary = None           # CentroidSummary (core.prefilter)
+        self.lineage = 0              # bumps when rows [0:feats_rows] are
+        #                               no longer append-extensions of what a
+        #                               cached per-row state saw (reset())
 
     def reset(self) -> None:
         """Drop both columns (the non-incremental full-rebuild path)."""
@@ -390,6 +393,7 @@ class ShardColumns:
         self.feats, self.feats_rows, self.feats_epoch = None, 0, 0
         self.probs, self.probs_rows, self.probs_head_epoch = None, 0, -1
         self.summary = None
+        self.lineage += 1
 
     def feats_view(self, d: int) -> np.ndarray:
         if self.feats is None:
@@ -505,7 +509,8 @@ def replica_greedy_select(shards: Sequence[ShardView],
                           mind_list: Sequence[Optional[jax.Array]],
                           sel: np.ndarray, start: int,
                           weight_for_slot: Callable[[int, int], Optional[jax.Array]],
-                          executor=None, impl: str = "auto") -> np.ndarray:
+                          executor=None, impl: str = "auto",
+                          capture: Optional[list] = None) -> np.ndarray:
     """Local-propose / global-dedup greedy rounds over replica shards —
     ``distributed_k_center``'s round structure generalized to hash-sharded
     pools and per-slot weights (static weights for weighted k-center,
@@ -518,6 +523,11 @@ def replica_greedy_select(shards: Sequence[ShardView],
     candidate for ``slot``. Bit-identical to the single-pool greedy loop:
     the per-row floats are slice-invariant and both tie-break layers reduce
     to the lowest global index.
+
+    ``capture`` (optional list) records the merged winner's score per slot
+    in slot order — the standing-query replay engine (service layer) stores
+    them so a later emit over a grown pool can prove "no new row beats any
+    recorded winner" by streaming only the delta rows.
     """
     from repro.kernels.pairwise import ops
     nsh = len(shards)
@@ -533,7 +543,9 @@ def replica_greedy_select(shards: Sequence[ShardView],
 
     props = replica_map(propose, range(nsh), executor)
     for slot in range(start, budget):
-        _, g, win_shard, win_local = _merge_proposals(props)
+        v, g, win_shard, win_local = _merge_proposals(props)
+        if capture is not None:
+            capture.append(float(v))
         sel[slot] = g
         center = emb_list[win_shard][win_local]
 
@@ -552,3 +564,173 @@ def replica_greedy_select(shards: Sequence[ShardView],
 
         props = replica_map(fold, range(nsh), executor)
     return sel
+
+
+# ===========================================================================
+# Persistent per-session k-center strategy state (O(delta) warm starts)
+# ===========================================================================
+
+@dataclasses.dataclass
+class KCenterState:
+    """One query's view of the persisted min-dist state.
+
+    ``minds[si]`` is the shard's (rows,) float32 min squared distance of
+    every POOL row (labeled and unlabeled alike) to the folded center set.
+    The arrays are owned by the cache and treated as immutable — consumers
+    gather or copy, never write.
+    """
+    minds: Sequence[np.ndarray]
+    rows: Sequence[int]
+    # standing-query replay capture: when set, ``sharded_k_center`` threads
+    # it into ``replica_greedy_select(capture=...)``
+    capture: Optional[list] = None
+
+    def view_minds(self, shards) -> list:
+        """Per-shard min-dists gathered down to the query's (unlabeled)
+        view rows, as jnp arrays ready for the greedy loop. Requires
+        ``ShardView.pool_rows``. Row gathers reproduce the exact floats a
+        from-scratch ``warm_start_min_dist`` over the view would compute:
+        per-(row, center) distances are slice-invariant (module contract)
+        and the min fold is exact."""
+        out = []
+        for i, s in enumerate(shards):
+            if s.n == 0:
+                out.append(None)
+                continue
+            out.append(jnp.asarray(self.minds[i][np.asarray(s.pool_rows)]))
+        return out
+
+    def pool_mind(self, i: int) -> np.ndarray:
+        return self.minds[i]
+
+
+class KCenterStateCache:
+    """Per-session persisted k-center min-dist vectors (ROADMAP: carry the
+    artifact epoch-stamping into strategy state).
+
+    The cache keys per-shard min-dist columns on the same append-only
+    discipline as ``ShardColumns``: a vector computed over rows
+    ``[0:rows]`` against centers ``locs[:k]`` stays exact when rows are
+    appended (extend by folding ALL centers over just the new rows) or
+    centers are appended (fold just the new centers over all rows and take
+    the elementwise min) — both O(delta), both bitwise equal to a
+    from-scratch fold because per-(row, center) squared distances are
+    invariant to which other rows/centers share the call and ``min`` is an
+    exact, order-independent fold. Validity stamps:
+
+      * shard ``lineage`` — a ``ShardColumns.reset()`` invalidates the
+        shard (its feats rows are no longer an append-extension);
+      * ``head_version`` — a head retrain invalidates everything (the
+        spec's conservative row of the invalidation matrix; labeling a
+        sample invalidates NOTHING since pool rows and feats are
+        untouched, it only appends centers);
+      * center ``locs`` prefix — cached center order must be a prefix of
+        the query's fold order, else rebuild.
+
+    Thread contract: ``prepare`` is the only mutator and serializes on an
+    internal lock (PSHEA candidate races); handed-out arrays are never
+    written again (extends allocate fresh arrays).
+    """
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._minds: dict = {}       # si -> np (rows,) f32
+        self._rows: dict = {}        # si -> int
+        self._lineage: dict = {}     # si -> int
+        self._locs: tuple = ()       # ((si, li), ...) centers in fold order
+        self._head_version = -1
+        self.counters = {
+            "rebuilds": 0, "extends": 0, "center_extends": 0,
+            "invalidations": 0, "hits": 0,
+            "rows_extended": 0, "rows_reused": 0,
+        }
+
+    def _drop_all(self):
+        if self._minds or self._locs:
+            self.counters["invalidations"] += 1
+        self._minds, self._rows, self._lineage = {}, {}, {}
+        self._locs = ()
+
+    def invalidate(self) -> None:
+        """Head retrain: min-dists are conservatively dropped on every
+        shard; feats columns are untouched so nothing re-embeds."""
+        with self._lock:
+            self._drop_all()
+            self._head_version = -1
+
+    def stats(self) -> dict:
+        with self._lock:
+            return dict(self.counters)
+
+    def prepare(self, *, feats_l, rows_l, lineages, head_version, locs,
+                centers, capture=None) -> Optional[KCenterState]:
+        """Produce this query's :class:`KCenterState`, reusing cached
+        vectors where the stamps allow and folding only the row/center
+        deltas. ``centers[k]`` must be the feats row at ``locs[k]``."""
+        from repro.kernels.pairwise import ops
+        locs = tuple(tuple(p) for p in locs)
+        k = len(locs)
+        if k == 0:
+            return None
+        centers = np.asarray(centers, np.float32)
+        nsh = len(feats_l)
+        with self._lock:
+            if head_version != self._head_version:
+                self._drop_all()
+                self._head_version = head_version
+            kc = len(self._locs)
+            if self._locs != locs[:kc]:
+                # non-prefix center reorder (e.g. a relabel changed fold
+                # order) — exactness is unprovable incrementally
+                self._drop_all()
+                kc = 0
+            new_centers = centers[kc:]
+            reused = False
+            minds, rows_out = [], []
+            for si in range(nsh):
+                rows = int(rows_l[si])
+                feats = np.asarray(feats_l[si])[:rows]
+                m = self._minds.get(si)
+                if m is not None and self._lineage.get(si) != lineages[si]:
+                    self.counters["invalidations"] += 1
+                    m = None
+                if m is None:
+                    if rows:
+                        m = np.asarray(ops.warm_start_min_dist(
+                            jnp.asarray(feats), jnp.asarray(centers)),
+                            np.float32)
+                    else:
+                        m = np.zeros((0,), np.float32)
+                    self.counters["rebuilds"] += 1
+                else:
+                    reused = True
+                    rc = int(self._rows[si])
+                    if len(new_centers) and rc:
+                        # center delta: fold only the new centers over the
+                        # cached rows; elementwise min == one joint fold
+                        nm = np.asarray(ops.warm_start_min_dist(
+                            jnp.asarray(feats[:rc]),
+                            jnp.asarray(new_centers)), np.float32)
+                        m = np.minimum(m[:rc], nm)
+                        self.counters["center_extends"] += 1
+                    if rows > rc:
+                        # row delta: fold ALL centers over just the new rows
+                        ext = np.asarray(ops.warm_start_min_dist(
+                            jnp.asarray(feats[rc:rows]),
+                            jnp.asarray(centers)), np.float32)
+                        m = np.concatenate([m[:rc], ext])
+                        self.counters["extends"] += 1
+                        self.counters["rows_extended"] += rows - rc
+                    self.counters["rows_reused"] += min(rows, rc)
+                if rows >= int(self._rows.get(si, -1)):
+                    # store the newest view (a raced query pinned at older
+                    # rows serves a slice without shrinking the cache)
+                    self._minds[si] = m
+                    self._rows[si] = max(rows, int(self._rows.get(si, 0)))
+                    self._lineage[si] = lineages[si]
+                minds.append(m[:rows])
+                rows_out.append(rows)
+            self._locs = locs
+            if reused:
+                self.counters["hits"] += 1
+            return KCenterState(minds=minds, rows=rows_out, capture=capture)

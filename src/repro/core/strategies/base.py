@@ -39,7 +39,7 @@ class Strategy:
 
     def select_sharded(self, rng, budget: int, shards, *,
                        labeled_embeddings=None, executor=None,
-                       prefilter=None):
+                       prefilter=None, state=None):
         """Run the strategy over replica shards (``core.selection``'s
         ``ShardView`` list). Returns global pool positions, bit-identical
         to ``select`` over the concatenated pool.
@@ -48,13 +48,21 @@ class Strategy:
         centroid-gated sublinear scan for the strategies that support it
         (uncertainty top-k, unweighted k-center lineage); shards without a
         usable summary — and strategies that need fresh per-slot weights —
-        fall back to the full scan, never to a wrong answer."""
+        fall back to the full scan, never to a wrong answer.
+
+        ``state`` (a ``core.selection.KCenterState``) hands warm-started
+        k-center strategies the session's persisted min-dist vectors so
+        the warm fold costs O(new rows) instead of O(pool); strategies
+        outside the warm k-center lineage accept and ignore it (same
+        contract as ``prefilter``). Bit-identity is unchanged — the state
+        holds the exact floats the from-scratch fold would produce."""
         if self.sharded_fn is None:
             raise NotImplementedError(
                 f"strategy {self.name!r} has no sharded implementation")
         return self.sharded_fn(rng, budget, shards,
                                labeled_embeddings=labeled_embeddings,
-                               executor=executor, prefilter=prefilter)
+                               executor=executor, prefilter=prefilter,
+                               state=state)
 
 
 def top_k_select(scores: jax.Array, budget: int) -> jax.Array:

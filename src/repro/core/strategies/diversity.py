@@ -167,7 +167,7 @@ def _random_select(rng, budget, *, probs=None):
 # ------------------------------------------------- replica-sharded paths --
 def sharded_k_center(rng, budget: int, shards, *, init_centers=None,
                      weights_list=None, executor=None, impl: str = "auto",
-                     prefilter=None):
+                     prefilter=None, state=None):
     """Replica-sharded ``k_center_greedy``: per-shard fused rounds +
     cross-shard (value, global index) merges — selections bit-identical to
     the single-pool path for every shard count (see core.selection).
@@ -176,15 +176,24 @@ def sharded_k_center(rng, budget: int, shards, *, init_centers=None,
     centroid-gated engine (core.prefilter) when any shard carries a
     summary; weighted rounds rank by ``min_dist * weight``, which the
     distance-only triangle bound cannot cap, so they always take the full
-    path."""
+    path.
+
+    ``state`` (a ``core.selection.KCenterState`` prepared by the session's
+    ``KCenterStateCache``) replaces the warm-start fold on the warm path:
+    the persisted pool-level min-dists are gathered down to the view rows
+    instead of streaming every row against every labeled center. Same
+    floats (slice-invariant distances + exact min fold), O(delta) cost.
+    Ignored on the seeded path — there is no warm fold to save."""
     from repro.core import selection
     from repro.kernels.pairwise import ops
+    warm = init_centers is not None and init_centers.shape[0] > 0
     if prefilter is not None and weights_list is None \
             and any(s.summary is not None for s in shards):
         from repro.core import prefilter as pf
         return pf.gated_greedy_select(
             rng, budget, shards, init_centers=init_centers,
-            slack=prefilter.slack, executor=executor, impl=impl)
+            slack=prefilter.slack, executor=executor, impl=impl,
+            state=state if warm else None)
     N = selection.replica_total(shards)
     emb_list = [jnp.asarray(s.feats, jnp.float32) for s in shards]
     sel = np.zeros((budget,), np.int64)
@@ -194,10 +203,15 @@ def sharded_k_center(rng, budget: int, shards, *, init_centers=None,
     else:
         def weight_for_slot(slot, i):
             return weights_list[i]
-    if init_centers is not None and init_centers.shape[0] > 0:
-        init = jnp.asarray(init_centers, jnp.float32)
-        mind = [ops.warm_start_min_dist(emb_list[i], init, impl=impl)
-                if s.n else None for i, s in enumerate(shards)]
+    capture = None
+    if warm:
+        if state is not None:
+            mind = state.view_minds(shards)
+            capture = state.capture
+        else:
+            init = jnp.asarray(init_centers, jnp.float32)
+            mind = [ops.warm_start_min_dist(emb_list[i], init, impl=impl)
+                    if s.n else None for i, s in enumerate(shards)]
         start = 0
     else:
         # the random seed IS the first returned center, as in the single
@@ -208,24 +222,28 @@ def sharded_k_center(rng, budget: int, shards, *, init_centers=None,
         start = 1
     return selection.replica_greedy_select(
         shards, emb_list, budget, mind_list=mind, sel=sel, start=start,
-        weight_for_slot=weight_for_slot, executor=executor, impl=impl)
+        weight_for_slot=weight_for_slot, executor=executor, impl=impl,
+        capture=capture)
 
 
 def _kcg_sharded(rng, budget, shards, *, labeled_embeddings=None,
-                 executor=None, prefilter=None):
+                 executor=None, prefilter=None, state=None):
+    # kcg never warm-starts (no init centers), so the persisted min-dist
+    # state has nothing to save it; accepted and ignored
     return sharded_k_center(rng, budget, shards, executor=executor,
                             prefilter=prefilter)
 
 
 def _coreset_sharded(rng, budget, shards, *, labeled_embeddings=None,
-                     executor=None, prefilter=None):
+                     executor=None, prefilter=None, state=None):
     return sharded_k_center(rng, budget, shards,
                             init_centers=labeled_embeddings,
-                            executor=executor, prefilter=prefilter)
+                            executor=executor, prefilter=prefilter,
+                            state=state)
 
 
 def _dbal_sharded(rng, budget, shards, *, labeled_embeddings=None,
-                  executor=None, beta: int = 10, prefilter=None):
+                  executor=None, beta: int = 10, prefilter=None, state=None):
     """Sharded DBAL: shards propose their local LC top-(beta*budget), the
     merged prefilter subset is gathered to the coordinator, and the k-means
     + weighted matching tail is the exact single-pool code over it."""
@@ -245,7 +263,7 @@ def _dbal_sharded(rng, budget, shards, *, labeled_embeddings=None,
 
 
 def _random_sharded(rng, budget, shards, *, labeled_embeddings=None,
-                    executor=None, prefilter=None):
+                    executor=None, prefilter=None, state=None):
     from repro.core import selection
     n = selection.replica_total(shards)
     return np.asarray(jax.random.permutation(rng, n)[:budget])

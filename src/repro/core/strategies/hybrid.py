@@ -143,9 +143,11 @@ def sharded_kmeans_pp(rng, x_list, shards, k: int, executor=None,
 
 
 def _badge_sharded(rng, budget, shards, *, labeled_embeddings=None,
-                   executor=None, prefilter=None):
+                   executor=None, prefilter=None, state=None):
     # prefilter accepted-and-ignored: D² sampling draws fresh Gumbel
-    # weights per slot, which no distance-only centroid bound can cap
+    # weights per slot, which no distance-only centroid bound can cap.
+    # state likewise: BADGE's geometry is the uncertainty-scaled gradient
+    # embedding, not the raw feats the persisted min-dists were folded over
     from repro.core import selection
     g_list = selection.replica_map(
         lambda s: (lc_scores(jnp.asarray(s.probs))[:, None]
@@ -175,8 +177,9 @@ def density_scores_sharded(rng, shards, executor=None, n_ref: int = 256):
 
 
 def _margin_density_sharded(rng, budget, shards, *, labeled_embeddings=None,
-                            executor=None, prefilter=None):
-    # prefilter accepted-and-ignored: weighted rounds (see sharded_k_center)
+                            executor=None, prefilter=None, state=None):
+    # prefilter accepted-and-ignored: weighted rounds (see sharded_k_center).
+    # state accepted-and-ignored: margin_density never warm-starts
     from repro.core import selection
     from repro.core.strategies.diversity import sharded_k_center
     k_ref, k_sel = jax.random.split(rng)
@@ -191,8 +194,11 @@ def _margin_density_sharded(rng, budget, shards, *, labeled_embeddings=None,
 
 def _weighted_kcenter_sharded(rng, budget, shards, *,
                               labeled_embeddings=None, executor=None,
-                              prefilter=None):
-    # prefilter accepted-and-ignored: weighted rounds (see sharded_k_center)
+                              prefilter=None, state=None):
+    # prefilter accepted-and-ignored: weighted rounds (see sharded_k_center).
+    # state IS forwarded: the warm-start min-dist fold is unweighted (weights
+    # only rank the per-slot argmax), so the persisted vectors are the exact
+    # floats this strategy's warm fold would recompute
     from repro.core import selection
     from repro.core.strategies.diversity import sharded_k_center
     lc_list = selection.replica_map(
@@ -200,7 +206,8 @@ def _weighted_kcenter_sharded(rng, budget, shards, *,
     w_list = unit_weights_parts(lc_list)
     return sharded_k_center(rng, budget, shards,
                             init_centers=labeled_embeddings,
-                            weights_list=w_list, executor=executor)
+                            weights_list=w_list, executor=executor,
+                            state=state)
 
 
 badge = Strategy("badge", ("probs", "embeddings"), _badge_select,

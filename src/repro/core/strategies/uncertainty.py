@@ -57,7 +57,9 @@ def _make(kind: str) -> Strategy:
         return top_k_select(SCORE_FNS[kind](probs), budget)
 
     def sharded_fn(rng, budget, shards, *, labeled_embeddings=None,
-                   executor=None, prefilter=None):
+                   executor=None, prefilter=None, state=None):
+        # ``state`` (persisted k-center min-dists) accepted and ignored:
+        # uncertainty scoring is stateless per row
         from repro.core import selection
         if prefilter is not None:
             # cap-gated cluster scan: bit-identical to the full scan by

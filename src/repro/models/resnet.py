@@ -73,8 +73,14 @@ def _conv(x, w, stride=1):
 
 
 def _norm(x, scale):
-    mu = jnp.mean(x, axis=(0, 1, 2), keepdims=True)
-    var = jnp.var(x, axis=(0, 1, 2), keepdims=True)
+    # Per-sample (spatial-only) statistics, NOT batch statistics: each row's
+    # features must be a pure function of that row so re-embedding a sample
+    # in a different batch (cache eviction, push chunking) reproduces the
+    # exact floats. The frozen extractor has no running BN stats to use, and
+    # batch statistics at inference would leak co-batched rows into every
+    # embedding — breaking the service's content-addressed embedding cache.
+    mu = jnp.mean(x, axis=(1, 2), keepdims=True)
+    var = jnp.var(x, axis=(1, 2), keepdims=True)
     return (x - mu) * jax.lax.rsqrt(var + 1e-5) * scale
 
 

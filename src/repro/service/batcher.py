@@ -26,10 +26,16 @@ class DynamicBatcher:
     """batch_fn: (stacked np.ndarray, n_valid) -> per-item results list."""
 
     def __init__(self, batch_fn: Callable[[np.ndarray, int], Sequence[Any]],
-                 max_batch: int = 64, timeout_s: float = 0.005):
+                 max_batch: int = 64, timeout_s: float = 0.005,
+                 pad_to_max: bool = False):
         self.batch_fn = batch_fn
         self.max_batch = max_batch
         self.timeout_s = timeout_s
+        # pad_to_max gives the scorer ONE canonical shape (max_batch) instead
+        # of pow-2 buckets: the embedding path needs it so a row's features
+        # never depend on how many neighbours happened to share its batch
+        # (shape-canonical + row-local forward => bitwise batch-insensitive).
+        self.pad_to_max = pad_to_max
         self._pending: List = []
         self._lock = threading.Condition()
         self._stop = False
@@ -68,7 +74,8 @@ class DynamicBatcher:
             items = [b[0] for b in batch]
             futs = [b[1] for b in batch]
             n = len(items)
-            b = bucket_size(n, self.max_batch)
+            b = self.max_batch if self.pad_to_max else bucket_size(
+                n, self.max_batch)
             stacked = np.stack(items + [np.zeros_like(items[0])] * (b - n))
             try:
                 results = self.batch_fn(stacked, n)

@@ -74,6 +74,16 @@ def serve_tcp(server: ALServer, host: str = "127.0.0.1",
         "stats": lambda p, s, c: server.stats(session=s),
         "train_eval": lambda p, s, c: {
             "accuracy": server.train_and_eval(session=s)},
+        # standing queries: register once, the server emits as the pool
+        # streams in; poll returns emits since a sequence number
+        "standing_register": lambda p, s, c: server.standing_register(
+            int(p["budget"]), p.get("strategy"),
+            int(p.get("rng_seed") or 0), session=s),
+        "standing_cancel": lambda p, s, c: server.standing_cancel(
+            p["query_id"], p.get("reason") or "cancelled by client",
+            session=s) or {},
+        "standing_poll": lambda p, s, c: server.standing_poll(
+            p["query_id"], int(p.get("since") or 0), session=s),
         "open_session": open_session,
         "close_session": close_session,
     }
@@ -190,6 +200,41 @@ class ALClient:
         if self._local is not None:
             return self._local.train_and_eval(session=self._session)
         return self._call("train_eval", session=self._session)["accuracy"]
+
+    # ------------------------------------------------- standing queries --
+    def standing_register(self, budget: int, strategy: Optional[str] = None,
+                          rng_seed: int = 0) -> dict:
+        """Register a continuous query: the server keeps a ``budget``-sized
+        selection live as data streams in. Returns the initial emit
+        (``query_id``, ``seq``, ``keys``)."""
+        if self._local is not None:
+            return self._local.standing_register(budget, strategy, rng_seed,
+                                                 session=self._session)
+        return self._call("standing_register",
+                          {"budget": int(budget), "strategy": strategy,
+                           "rng_seed": int(rng_seed)},
+                          session=self._session)
+
+    def standing_cancel(self, query_id: str,
+                        reason: str = "cancelled by client") -> None:
+        if self._local is not None:
+            return self._local.standing_cancel(query_id, reason,
+                                               session=self._session)
+        self._call("standing_cancel",
+                   {"query_id": query_id, "reason": reason},
+                   session=self._session)
+
+    def standing_poll(self, query_id: str, since: int = 0) -> dict:
+        """Current cumulative selection + the emits with ``seq > since``
+        (each carries mode/added/removed and the pool/labels/head versions
+        it was computed at). Takes the server-side flush barrier first, so
+        a failed or dead async ingest raises here ticket-style."""
+        if self._local is not None:
+            return self._local.standing_poll(query_id, since,
+                                             session=self._session)
+        return self._call("standing_poll",
+                          {"query_id": query_id, "since": int(since)},
+                          session=self._session)
 
     def stats(self) -> dict:
         if self._local is not None:

@@ -146,6 +146,17 @@ class ALServiceConfig:
     prefilter_clusters: int = 0
     # shards below this row count skip summaries and always full-scan
     prefilter_min_rows: int = 256
+    # persist per-session k-center min-dist vectors across queries
+    # (core.selection.KCenterStateCache): warm-started strategies
+    # (coreset, weighted_kcenter) fold only the rows/centers appended since
+    # the last query. False = every query re-folds from scratch (the
+    # bit-identity oracle the cache is tested against)
+    strategy_state_cache: bool = True
+    # standing-query emits replay the previous selection against just the
+    # delta rows (O(new rows) when no new row displaces a recorded winner).
+    # False = every emit is a full re-selection (the bit-identity oracle;
+    # emitted selections are identical either way)
+    standing_replay: bool = True
     # RAM budget per artifact-column buffer: allocations past it go to
     # mmap-backed spill files (core.selection.ColumnSpill). 0 = unlimited
     # RAM (no spill)
@@ -182,6 +193,8 @@ class ALServiceConfig:
             artifact_cache=bool(al.get("artifact_cache", True)),
             incremental_artifacts=bool(al.get("incremental_artifacts", True)),
             server_workers=int(worker.get("workers", 16)),
+            strategy_state_cache=bool(al.get("strategy_state_cache", True)),
+            standing_replay=bool(al.get("standing_replay", True)),
             prefilter=bool(al.get("prefilter", False)),
             prefilter_slack=float(al.get("prefilter_slack", 0.05)),
             prefilter_clusters=int(al.get("prefilter_clusters", 0)),

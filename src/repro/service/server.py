@@ -61,8 +61,9 @@ import numpy as np
 
 from repro.core.agent.controller import run_pshea
 from repro.core.prefilter import PrefilterConfig, maintain_summary
-from repro.core.selection import (ColumnSpill, ShardColumns, ShardView,
-                                  grow_append, replica_map, replica_of)
+from repro.core.selection import (ColumnSpill, KCenterStateCache,
+                                  ShardColumns, ShardView, grow_append,
+                                  replica_map, replica_of)
 from repro.core.strategies.zoo import HYBRIDS, PAPER_SEVEN, get_strategy
 from repro.service.backends import FeatureBackend, HeadState, make_backend
 from repro.service.batcher import DynamicBatcher
@@ -71,6 +72,10 @@ from repro.service.config import ALServiceConfig
 from repro.service.pipeline import Stage, StagePipeline
 
 DEFAULT_SESSION = "default"
+
+# strategies whose sharded path starts from a warm (labeled-centers)
+# min-dist fold — the ones the persisted KCenterStateCache can feed
+_WARM_STATE_STRATEGIES = frozenset({"coreset", "weighted_kcenter"})
 
 
 def _strategy_seed(strategy: str, round_index: int) -> int:
@@ -133,6 +138,43 @@ class PushTicket:
                 ) from None
 
 
+class StandingQuery:
+    """One registered ``(budget, strategy)`` subscription on a session.
+
+    Every emit is the EXACT selection a one-shot ``query()`` would return
+    over the pool at that moment (provisional/replace semantics — emits
+    carry added/removed diffs against the previous emit), so the final
+    emit after the stream settles is bit-identical to a one-shot query
+    over the final pool. Between emits the replay engine (see
+    ``ALSession._standing_replay``) stores the previous selection plus the
+    per-slot merged winner scores captured by ``replica_greedy_select``;
+    when no delta row beats any recorded winner, the selection is provably
+    unchanged and the emit streams only the delta rows.
+
+    All mutable fields are guarded by ``lock``; an emit holds it end to
+    end, so concurrent triggers (ingest worker + a poll) serialize and the
+    second sees fresh versions and no-ops.
+    """
+
+    def __init__(self, qid: str, budget: int, strategy: str, rng_seed: int):
+        self.qid = qid
+        self.budget = int(budget)
+        self.strategy = strategy
+        self.rng_seed = int(rng_seed)
+        self.lock = threading.RLock()
+        self.emits: List[dict] = []
+        self.seq = 0
+        self.cancelled: Optional[str] = None      # cancellation reason
+        self.error: Optional[BaseException] = None
+        # -- replay state (valid when the last emit used the full budget) --
+        self.keys: Optional[List[str]] = None     # last emitted selection
+        self.values: Optional[List[float]] = None  # per-slot winner scores
+        self.n_unlabeled = 0      # unlabeled-list length at the last emit
+        self.pool_version = -1
+        self.labels_version = -1
+        self.head_version = -1
+
+
 class ALSession:
     """Per-tenant AL state: pool, labels, head, oracle, artifact cache."""
 
@@ -192,6 +234,17 @@ class ALSession:
                          for _ in range(self.replicas)]
         self._index: Dict[str, Tuple[int, int]] = {}  # key -> (shard, row)
         self._artifact_lock = threading.Lock()
+        # persisted k-center strategy state (strategy_state_cache): per-
+        # shard min-dist vectors delta-extended on push, dropped on retrain
+        self._kstate = KCenterStateCache()
+        # -- standing queries -------------------------------------------
+        # qid -> StandingQuery; the ingest worker emits after every
+        # integrated batch, polls emit lazily for sync mutations
+        self._standing: Dict[str, StandingQuery] = {}
+        self._standing_lock = threading.Lock()
+        self.standing_emits = 0
+        self.standing_replay_emits = 0
+        self.standing_full_emits = 0
         # -- async ingest queue -----------------------------------------
         # push_data(asynchronous=True) enqueues; a per-session worker
         # drains batches, embeds per shard, and bumps pool_version ONCE
@@ -217,11 +270,11 @@ class ALSession:
         if asynchronous:
             return self._push_async(items)
         self.flush()     # sync pushes order AFTER every pending async push
-        # sync embedding stays on ONE pipeline even at replicas>1: the
-        # jitted feature path is batch-composition-sensitive, so this is
-        # the determinism anchor that keeps a replicas=N server fed the
-        # same sync pushes byte-identical to the replicas=1 reference;
-        # per-shard parallel embedding is the ingest queue's job
+        # sync embedding stays on ONE pipeline even at replicas>1 (per-
+        # shard parallel embedding is the ingest queue's job). The feature
+        # path itself is batch-insensitive — row-local forward + one
+        # canonical batch shape (DynamicBatcher pad_to_max) — so any
+        # chunking of the same rows lands the identical feature bytes
         keys = [content_key(np.asarray(it)) for it in items]
         todo = [(k, it) for k, it in zip(keys, items)
                 if k not in self.server.cache]
@@ -309,6 +362,12 @@ class ALSession:
                         except BaseException as one_err:
                             err = one_err
                             fut.set_exception(one_err)
+            # standing-query emits ride the ingest worker: every integrated
+            # batch re-emits for each live subscription (still marked busy,
+            # so flush()-takers observe the emit as part of the drain).
+            # _standing_refresh never raises — an emit failure parks on the
+            # query's ticket for the next poll to surface
+            self._notify_standing()
             with self._ingest_cv:
                 self._ingest_busy = False
                 self.ingest_batches += 1
@@ -358,7 +417,13 @@ class ALSession:
 
     def close(self) -> None:
         """Stop the ingest worker (drains what is already queued) and
-        remove the session's spill directory, if any."""
+        remove the session's spill directory, if any. Standing queries are
+        cancelled FIRST, so the draining worker integrates the remaining
+        pushes without emitting to a subscription whose owner is gone."""
+        with self._standing_lock:
+            for sq in self._standing.values():
+                if sq.cancelled is None:
+                    sq.cancelled = "session closed"
         with self._ingest_cv:
             self._ingest_stop = True
             self._ingest_cv.notify_all()
@@ -397,7 +462,15 @@ class ALSession:
     def _feats_for(self, keys: Sequence[str]) -> np.ndarray:
         """Features for ``keys``, recomputing entries the EmbeddingCache
         evicted (tiny cache_bytes + no spill_dir) from the session's raw
-        copies instead of feeding None into np.stack."""
+        copies instead of feeding None into np.stack.
+
+        Recompute runs in the CANONICAL batch shape: ``batch_size``-row
+        chunks zero-padded to exactly ``batch_size`` — the same single
+        shape the ingest pipeline's ``DynamicBatcher(pad_to_max=True)``
+        feeds the jitted extractor. One shape + a row-local forward means
+        a recomputed row reproduces the ingest-time feature bytes no
+        matter how the pool was chunked when it was pushed or which
+        neighbours shared the original batch."""
         cache = self.server.cache
         out: Dict[str, np.ndarray] = {}
         missing: List[str] = []
@@ -412,13 +485,21 @@ class ALSession:
                 if k not in self._raw:
                     cache.require(k)   # no raw copy: canonical KeyError
             backend = self.server.backend
-            raw = np.stack([np.asarray(self._raw[k]) for k in missing])
-            feats = backend.features(backend.preprocess(raw))
+            bs = max(int(self.server.config.batch_size), 1)
+            for s in range(0, len(missing), bs):
+                grp = missing[s:s + bs]
+                raw = np.stack([np.asarray(self._raw[k]) for k in grp])
+                x = np.asarray(backend.preprocess(raw))
+                if len(grp) < bs:    # zero-pad to the one canonical shape
+                    x = np.concatenate(
+                        [x, np.zeros((bs - len(grp),) + x.shape[1:],
+                                     x.dtype)])
+                feats = np.asarray(backend.features(x))[:len(grp)]
+                for k, f in zip(grp, feats):
+                    f = np.asarray(f)
+                    cache.put(k, f)
+                    out[k] = f
             self.server.count_embeds(len(missing))
-            for k, f in zip(missing, feats):
-                f = np.asarray(f)
-                cache.put(k, f)
-                out[k] = f
         return np.stack([out[k] for k in keys])
 
     def _refresh_artifacts(self):
@@ -525,7 +606,8 @@ class ALSession:
         backend = self.server.backend
         if not self.server.config.artifact_cache:
             f, p, r, i = self._build_from_scratch()
-            return f, p, r, i, [None] * self.replicas, [-1] * self.replicas
+            return (f, p, r, i, [None] * self.replicas,
+                    [-1] * self.replicas, [0] * self.replicas)
         with self._artifact_lock:
             self._refresh_artifacts()
             feats_l = [c.feats_view(backend.feat_dim) for c in self._columns]
@@ -533,9 +615,10 @@ class ALSession:
                        for c in self._columns]
             summaries = [c.summary for c in self._columns]
             epochs = [c.probs_head_epoch for c in self._columns]
+            lineages = [c.lineage for c in self._columns]
             return feats_l, probs_l, \
                 [c.feats_rows for c in self._columns], self._index, \
-                summaries, epochs
+                summaries, epochs, lineages
 
     def _build_from_scratch(self):
         """The O(pool) reference engine: re-gather + re-forward every shard
@@ -575,6 +658,10 @@ class ALSession:
         with self._lock:
             self._head = backend.fit_head(feats, labels, head=None)
             self.head_version += 1
+        # the spec's invalidation matrix: a retrain drops the persisted
+        # min-dist vectors on every shard (feats columns are untouched, so
+        # the NEXT warm query re-folds but re-embeds nothing)
+        self._kstate.invalidate()
         if self._eval_set is None:  # no eval set: train-set accuracy proxy
             return backend.evaluate(feats, labels, self._head)
         return backend.evaluate(*self._eval_set, self._head)
@@ -596,14 +683,17 @@ class ALSession:
                                 target_accuracy or config.target_accuracy,
                                 workers)
 
-    def _query_one(self, unlabeled, budget, strategy, rng_seed) -> dict:
-        if self.replicas > 1 or self._prefilter_cfg is not None:
-            # the prefilter lives in the sharded paths (its gated engines
-            # ARE the per-shard propose step), so a prefilter-enabled
-            # server routes through them even at replicas=1 — the 1-shard
-            # case of the same bit-identical merge
+    def _query_one(self, unlabeled, budget, strategy, rng_seed,
+                   _capture=None) -> dict:
+        if (self.replicas > 1 or self._prefilter_cfg is not None
+                or self._use_kstate(strategy)):
+            # the prefilter and the persisted k-center state live in the
+            # sharded paths (their engines ARE the per-shard propose
+            # step), so either feature routes through them even at
+            # replicas=1 — the 1-shard case of the same bit-identical
+            # merge
             return self._query_one_sharded(unlabeled, budget, strategy,
-                                           rng_seed)
+                                           rng_seed, _capture=_capture)
         strat = get_strategy(strategy)
         feats_l, probs_l, rows_l, index = self._artifact_snapshot()
         feats_all, probs_all, n_rows = feats_l[0], probs_l[0], rows_l[0]
@@ -637,14 +727,23 @@ class ALSession:
                 "indices": idx.tolist(), "strategy": strategy,
                 "cache": self.server.cache.stats()}
 
+    def _use_kstate(self, strategy: str) -> bool:
+        """Whether this query should run with the persisted k-center
+        min-dist state. Requires the incremental artifact columns — their
+        lineage stamps are what proves a cached vector is still an
+        append-extension of the shard's feats."""
+        cfg = self.server.config
+        return bool(cfg.strategy_state_cache and cfg.artifact_cache
+                    and strategy in _WARM_STATE_STRATEGIES)
+
     def _query_one_sharded(self, unlabeled, budget, strategy,
-                           rng_seed) -> dict:
+                           rng_seed, _capture=None) -> dict:
         """One strategy over the replica-sharded pool: per-shard views of
         the unlabeled rows (global order preserved inside each shard) feed
         the strategy's sharded path — selections bit-identical to
         ``replicas=1`` by construction (tests/test_sharding.py)."""
         strat = get_strategy(strategy)
-        feats_l, probs_l, rows_l, index, summaries, epochs = \
+        feats_l, probs_l, rows_l, index, summaries, epochs, lineages = \
             self._artifact_snapshot_ex()
 
         def covered(k):   # pinned-snapshot bound, per shard
@@ -677,21 +776,31 @@ class ALSession:
                 probs=probs_l[si][r] if r.size else probs_l[si][:0],
                 gidx=np.asarray(gpos[si], np.int64),
                 summary=summ if pf_cfg is not None else None,
-                pool_rows=r if pf_cfg is not None else None,
-                pool_feats=feats_l[si] if pf_cfg is not None else None,
+                # pool-level context: the prefilter engines and the
+                # persisted-state gather both address rows by their
+                # shard-local pool position (cheap views, always set)
+                pool_rows=r,
+                pool_feats=feats_l[si],
                 probs_epoch=epochs[si]))
         labeled_emb = None
+        lab: List[Tuple[int, int]] = []
         if self._labeled_keys:
             lab = [index[k] for k in self._labeled_keys if covered(k)]
             if lab:
                 import jax.numpy as jnp
                 labeled_emb = jnp.asarray(
                     np.stack([feats_l[si][li] for si, li in lab]))
+        state = None
+        if self._use_kstate(strategy) and labeled_emb is not None:
+            state = self._kstate.prepare(
+                feats_l=feats_l, rows_l=rows_l, lineages=lineages,
+                head_version=self.head_version, locs=lab,
+                centers=np.asarray(labeled_emb), capture=_capture)
         idx = np.asarray(strat.select_sharded(
             jax.random.PRNGKey(rng_seed), budget, shards,
             labeled_embeddings=labeled_emb,
             executor=self.server.shard_executor(),
-            prefilter=pf_cfg))
+            prefilter=pf_cfg, state=state))
         return {"keys": [unlabeled[i] for i in idx],
                 "indices": idx.tolist(), "strategy": strategy,
                 "cache": self.server.cache.stats()}
@@ -750,6 +859,220 @@ class ALSession:
                 "history": result.history,
                 "budget_spent": result.budget_spent}
 
+    # --------------------------------------------------- standing queries --
+    def standing_register(self, budget: int, strategy: Optional[str] = None,
+                          rng_seed: int = 0) -> dict:
+        """Register a ``(budget, strategy)`` subscription: one initial emit
+        now, then the ingest worker re-emits after every integrated batch
+        and ``standing_poll`` re-emits lazily after sync mutations. Every
+        emit is the exact one-shot ``query()`` selection at that moment."""
+        config = self.server.config
+        strategy = strategy or config.strategy
+        if strategy == "auto":
+            raise ValueError(
+                "standing queries need a concrete strategy (the PSHEA "
+                "auto agent consumes oracle labels per round)")
+        get_strategy(strategy)            # unknown names fail at register
+        if int(budget) < 1:
+            raise ValueError("standing query budget must be >= 1")
+        self.flush()
+        sq = StandingQuery(uuid.uuid4().hex[:12], budget, strategy,
+                           rng_seed)
+        with self._standing_lock:
+            self._standing[sq.qid] = sq
+        self._standing_refresh(sq)
+        with sq.lock:
+            if sq.error is not None:
+                err = sq.error
+                with self._standing_lock:
+                    self._standing.pop(sq.qid, None)
+                raise RuntimeError(
+                    "standing query initial emit failed") from err
+            return {"query_id": sq.qid, "seq": sq.seq,
+                    "keys": list(sq.keys or [])}
+
+    def standing_cancel(self, query_id: str,
+                        reason: str = "cancelled by client") -> None:
+        """Cancel a subscription: later emits are suppressed (including
+        from an ingest worker mid-drain) and polls raise."""
+        with self._standing_lock:
+            sq = self._standing.get(query_id)
+        if sq is None:
+            raise KeyError(f"unknown standing query {query_id!r}")
+        with sq.lock:
+            if sq.cancelled is None:
+                sq.cancelled = reason
+
+    def standing_poll(self, query_id: str, since: int = 0) -> dict:
+        """Emits with ``seq > since`` plus the current cumulative
+        selection. Takes the flush() barrier FIRST, so a dead ingest
+        worker or a failed async push raises here ticket-style instead of
+        the poll serving a stale selection; sync mutations since the last
+        emit trigger a fresh emit on this thread."""
+        with self._standing_lock:
+            sq = self._standing.get(query_id)
+        if sq is None:
+            raise KeyError(f"unknown standing query {query_id!r}")
+        if sq.cancelled is not None:
+            raise RuntimeError(
+                f"standing query {query_id} cancelled: {sq.cancelled}")
+        self.flush()
+        self._standing_refresh(sq)
+        with sq.lock:
+            if sq.error is not None:
+                raise RuntimeError(
+                    "standing query emit failed") from sq.error
+            emits = [dict(e) for e in sq.emits if e["seq"] > int(since)]
+            return {"query_id": query_id, "seq": sq.seq,
+                    "keys": list(sq.keys or []), "emits": emits,
+                    "pool_version": sq.pool_version,
+                    "labels_version": sq.labels_version,
+                    "head_version": sq.head_version}
+
+    def _notify_standing(self) -> None:
+        """Ingest-worker hook: re-emit every live subscription after an
+        integrated batch. Swallows nothing it shouldn't — emit failures
+        park on the query's ticket (``sq.error``), never kill the
+        worker."""
+        with self._standing_lock:
+            sqs = [sq for sq in self._standing.values()
+                   if sq.cancelled is None]
+        for sq in sqs:
+            self._standing_refresh(sq)
+
+    def _standing_refresh(self, sq: StandingQuery) -> None:
+        """Emit iff the session moved since ``sq``'s last emit. Never
+        raises: failures park on ``sq.error`` for the next poll."""
+        if sq.cancelled is not None:
+            return
+        with sq.lock:
+            if sq.cancelled is not None:
+                return
+            try:
+                self._standing_emit_locked(sq)
+                sq.error = None
+            except BaseException as e:
+                sq.error = e
+
+    def _standing_emit_locked(self, sq: StandingQuery) -> None:
+        """One emit attempt; caller holds ``sq.lock``. Replays the stored
+        selection against just the delta rows when provably unchanged,
+        otherwise runs the full (bit-identical to ``query()``) path."""
+        with self._lock:
+            unlabeled = [k for k in self._keys if k not in self._labels]
+            pv, lv, hv = (self.pool_version, self.labels_version,
+                          self.head_version)
+        if sq.keys is not None and (pv, lv, hv) == (
+                sq.pool_version, sq.labels_version, sq.head_version):
+            return                           # nothing moved: stay quiet
+        keys = self._standing_replay(sq, unlabeled, lv, hv)
+        if keys is not None:
+            mode, values = "replay", sq.values
+        else:
+            cap: List[float] = []
+            res = self._query_one(unlabeled, sq.budget, sq.strategy,
+                                  sq.rng_seed, _capture=cap)
+            keys, mode = res["keys"], "full"
+            values = (cap if len(cap) == sq.budget
+                      and len(keys) == sq.budget else None)
+        prev = sq.keys or []
+        prev_set, new_set = set(prev), set(keys)
+        sq.seq += 1
+        sq.emits.append({
+            "seq": sq.seq, "mode": mode,
+            "pool_version": pv, "labels_version": lv, "head_version": hv,
+            "keys": list(keys),
+            "added": [k for k in keys if k not in prev_set],
+            "removed": [k for k in prev if k not in new_set]})
+        sq.keys = list(keys)
+        sq.values = values
+        sq.n_unlabeled = len(unlabeled)
+        sq.pool_version, sq.labels_version, sq.head_version = pv, lv, hv
+        with self._standing_lock:
+            self.standing_emits += 1
+            if mode == "replay":
+                self.standing_replay_emits += 1
+            else:
+                self.standing_full_emits += 1
+
+    def _standing_replay(self, sq: StandingQuery, unlabeled, lv,
+                         hv) -> Optional[List[str]]:
+        """O(delta) emit: prove the stored selection is unchanged over the
+        grown pool by streaming ONLY the delta rows, or return None for an
+        honest full recompute.
+
+        Eligibility: unweighted warm-started coreset with a full-budget
+        previous emit and unchanged labels/head — then the previous
+        unlabeled list is an exact prefix of the current one (append-only
+        keys), every old row's min-dist trajectory is unchanged, and the
+        stored per-slot winner scores remain the max over all old rows.
+        A delta row displaces slot j iff its score after folding centers
+        0..j-1 STRICTLY beats the stored winner score (ties lose on the
+        higher global index every appended row has), so ``budget`` fused
+        rounds over the delta rows decide the whole emit."""
+        cfg = self.server.config
+        if not (cfg.standing_replay and cfg.strategy_state_cache
+                and cfg.artifact_cache):
+            return None
+        if sq.strategy != "coreset" or self._prefilter_cfg is not None:
+            return None
+        if sq.keys is None or sq.values is None:
+            return None
+        if (sq.labels_version, sq.head_version) != (lv, hv):
+            return None
+        if len(sq.keys) != sq.budget or len(sq.values) != sq.budget:
+            return None
+        n_prev = sq.n_unlabeled
+        if len(unlabeled) < n_prev:
+            return None
+        delta = unlabeled[n_prev:]
+        if not delta:
+            return list(sq.keys)
+        feats_l, probs_l, rows_l, index, summaries, epochs, lineages = \
+            self._artifact_snapshot_ex()
+
+        def covered(k):
+            e = index.get(k)
+            return e is not None and e[1] < rows_l[e[0]]
+
+        if not all(covered(k) for k in delta):
+            return None                      # racing snapshot: full path
+        lab = [index[k] for k in self._labeled_keys if covered(k)]
+        if not lab:
+            return None
+        centers = np.stack([feats_l[si][li] for si, li in lab])
+        state = self._kstate.prepare(
+            feats_l=feats_l, rows_l=rows_l, lineages=lineages,
+            head_version=self.head_version, locs=lab, centers=centers)
+        if state is None:
+            return None
+        sel_centers = []
+        for k in sq.keys:
+            if not covered(k):
+                return None
+            si, li = index[k]
+            sel_centers.append(feats_l[si][li])
+        drows = [index[k] for k in delta]
+        import jax.numpy as jnp
+        from repro.kernels.pairwise import ops
+        # delta rows' persisted min-dists vs the labeled centers + their
+        # embeddings — O(delta) gathers, no pool stream
+        mj = jnp.asarray(np.asarray(
+            [state.minds[si][li] for si, li in drows], np.float32))
+        ej = jnp.asarray(np.stack([feats_l[si][li] for si, li in drows]),
+                         jnp.float32)
+        no_mask = jnp.full((1,), -1, jnp.int32)
+        best = float(jnp.max(ops.masked_weighted_score(mj)))
+        for j in range(sq.budget):
+            if best > sq.values[j]:
+                return None                  # slot j displaced: diverge
+            if j + 1 < sq.budget:
+                mj, _, lv_ = ops.greedy_round(
+                    ej, mj, jnp.asarray(sel_centers[j],
+                                        jnp.float32)[None, :], no_mask)
+                best = float(lv_)
+        return list(sq.keys)
+
     # -------------------------------------------------------------- misc --
     def stats(self) -> dict:
         with self._ingest_cv:
@@ -788,7 +1111,26 @@ class ALSession:
                 "replicas": self.replicas,
                 "ingest_pending": pending,
                 "ingest_batches": self.ingest_batches,
+                # persisted k-center min-dist state (KCenterStateCache):
+                # rebuilds = from-scratch folds, extends = O(delta-row)
+                # appends, center_extends = O(new-center) folds over old
+                # rows, invalidations = drops (retrain/lineage/center-
+                # prefix breaks), rows_reused vs rows_extended = the
+                # incremental win
+                "strategy_state": {
+                    "enabled": self.server.config.strategy_state_cache,
+                    **self._kstate.stats()},
+                "standing_queries": self._standing_stats(),
                 "pipeline": self.last_pipeline_stats}
+
+    def _standing_stats(self) -> dict:
+        with self._standing_lock:
+            live = sum(1 for sq in self._standing.values()
+                       if sq.cancelled is None)
+            return {"registered": len(self._standing), "live": live,
+                    "emits": self.standing_emits,
+                    "replay_emits": self.standing_replay_emits,
+                    "full_emits": self.standing_full_emits}
 
 
 class ALServer:
@@ -876,7 +1218,13 @@ class ALServer:
     # -------------------------------------------- shared feature pipeline --
     def _process(self, todo, *, pipelined: bool, chunk: int = 64):
         bs = max(self.config.batch_size, 1)
-        batcher = DynamicBatcher(self._infer_batch, max_batch=bs)
+        # pad_to_max: every inference batch is padded to the one canonical
+        # (bs, ...) shape, so with a row-local backend forward each row's
+        # features are bitwise independent of how pushes were chunked or
+        # interleaved (the batch-insensitivity contract standing queries
+        # and the content-addressed cache rely on)
+        batcher = DynamicBatcher(self._infer_batch, max_batch=bs,
+                                 pad_to_max=True)
 
         def fetch(chunk_items):
             if self.fetch_latency_s:
@@ -976,6 +1324,21 @@ class ALServer:
               pshea_workers: Optional[int] = None) -> dict:
         return self.session(session).query(budget, strategy, target_accuracy,
                                            rng_seed, pshea_workers)
+
+    def standing_register(self, budget: int, strategy: Optional[str] = None,
+                          rng_seed: int = 0,
+                          session: Optional[str] = None) -> dict:
+        return self.session(session).standing_register(
+            budget, strategy, rng_seed)
+
+    def standing_cancel(self, query_id: str,
+                        reason: str = "cancelled by client",
+                        session: Optional[str] = None) -> None:
+        return self.session(session).standing_cancel(query_id, reason)
+
+    def standing_poll(self, query_id: str, since: int = 0,
+                      session: Optional[str] = None) -> dict:
+        return self.session(session).standing_poll(query_id, since)
 
     @property
     def last_pipeline_stats(self):

@@ -306,6 +306,22 @@ al_worker:
     assert d.shard_spill_dir is None
 
 
+def test_yaml_strategy_state_and_standing_knobs():
+    """The standing-query / persisted-state knobs round-trip through the
+    YAML subset, and both default ON (their ``false`` settings are the
+    bit-identity oracles, not the production path)."""
+    text = """
+active_learning:
+  strategy_state_cache: false
+  standing_replay: false
+"""
+    cfg = ALServiceConfig.from_dict(parse_yaml(text))
+    assert cfg.strategy_state_cache is False
+    assert cfg.standing_replay is False
+    d = ALServiceConfig()
+    assert d.strategy_state_cache is True and d.standing_replay is True
+
+
 # ----------------------------------------------------------------- server --
 @pytest.fixture(scope="module")
 def pool():

@@ -1,0 +1,462 @@
+"""Standing queries (streaming continuous AL) + persisted k-center
+strategy state.
+
+The contracts under test, each against its knob-as-oracle twin:
+
+- every standing-query emit is the EXACT selection a one-shot ``query()``
+  returns over the pool at that moment, so the final emit after the
+  stream settles is bit-identical to a one-shot over the final pool
+  (``standing_replay: false`` forces full re-selections — same keys);
+- persisted min-dist state (``strategy_state_cache: true``) re-folds only
+  the rows/centers appended since the last warm query and selects
+  bit-identically to the ``false`` from-scratch oracle;
+- the invalidation matrix: a push extends only the shards it touched, a
+  retrain drops every shard's min-dist but re-embeds nothing, a label
+  drops nothing (op-accounted in embed rows + KCenterStateCache
+  counters);
+- the feature path is batch-insensitive: the same pool pushed in any
+  chunking yields bitwise-identical feats columns and selections, even
+  with a tiny EmbeddingCache forcing evicted-entry recomputes;
+- close_session / a dead ingest worker cancel standing queries cleanly
+  (polls raise ticket-style; no orphaned emits).
+"""
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.selection import replica_of
+from repro.data.synthetic import image_pool
+from repro.kernels.pairwise import ops
+from repro.service.backends import MLPBackend
+from repro.service.config import ALServiceConfig
+from repro.service.server import ALServer
+
+
+def _mlp_server(replicas=1, **cfg):
+    return ALServer(ALServiceConfig(batch_size=16, replicas=replicas, **cfg),
+                    backend=MLPBackend(in_dim=192, feat_dim=32))
+
+
+def _near_dups(X, n, scale=1e-4, seed=0):
+    """Tiny perturbations of existing rows: new content keys, but their
+    min-dist to the already-labeled centers is ~0, so they can never
+    displace a recorded per-slot winner (the replay-eligible delta)."""
+    rng = np.random.default_rng(seed)
+    return [np.asarray(X[i % len(X)], np.float32)
+            + rng.normal(scale=scale, size=np.shape(X[0])).astype(np.float32)
+            for i in range(n)]
+
+
+# ------------------------------------------------ streamed == one-shot --
+@pytest.mark.parametrize("replicas", (1, 3))
+def test_standing_stream_matches_one_shot(replicas):
+    """Register once, stream pushes/labels/retrains; every poll's
+    cumulative selection equals a one-shot query at that moment, and the
+    final emit equals a one-shot over the final pool on a FRESH server
+    with every incremental engine disabled."""
+    X, Y = image_pool(60, seed=11)
+    srv = _mlp_server(replicas)
+    keys = srv.push_data(list(X[:24]))
+    srv.label(keys[:6], Y[:6])
+    srv.train_and_eval()
+    reg = srv.standing_register(budget=5, strategy="coreset", rng_seed=3)
+    assert reg["keys"] == srv.query(budget=5, strategy="coreset",
+                                    rng_seed=3)["keys"]
+    seen = reg["seq"]
+    cumulative = list(reg["keys"])
+    for lo, hi in ((24, 36), (36, 48), (48, 60)):
+        srv.push_data(list(X[lo:hi]), asynchronous=True).result()
+        r = srv.standing_poll(reg["query_id"], since=seen)
+        # the emit log replays to the cumulative selection via added/removed
+        for e in r["emits"]:
+            cumulative = [k for k in cumulative
+                          if k not in set(e["removed"])] + list(e["added"])
+            assert sorted(cumulative) == sorted(e["keys"])
+        seen = r["seq"]
+        assert r["keys"] == srv.query(budget=5, strategy="coreset",
+                                      rng_seed=3)["keys"]
+    # sync mutations emit lazily at the next poll
+    srv.label(keys[6:12], Y[6:12])
+    srv.train_and_eval()
+    final = srv.standing_poll(reg["query_id"], since=seen)
+    assert final["seq"] > seen
+    # oracle: one-shot over the final pool, all incremental engines off
+    ref = _mlp_server(replicas, artifact_cache=False,
+                      strategy_state_cache=False, standing_replay=False)
+    rkeys = ref.push_data(list(X))
+    assert rkeys == srv.session()._keys
+    ref.label(keys[:12], Y[:12])
+    ref.train_and_eval()
+    assert final["keys"] == ref.query(budget=5, strategy="coreset",
+                                      rng_seed=3)["keys"]
+
+
+@pytest.mark.parametrize("replicas", (1, 3))
+def test_standing_replay_fires_and_matches_oracle(replicas):
+    """Near-duplicate deltas take the O(delta) replay path (mode
+    ``replay``, no full re-selection) and the emitted keys still match
+    the ``standing_replay: false`` full-emit oracle bit for bit."""
+    X, Y = image_pool(40, seed=12)
+    dups = _near_dups(X[:8], 10, seed=12)
+    on = _mlp_server(replicas)
+    off = _mlp_server(replicas, standing_replay=False)
+    regs = {}
+    for srv in (on, off):
+        keys = srv.push_data(list(X))
+        srv.label(keys[:8], Y[:8])
+        srv.train_and_eval()
+        regs[srv] = srv.standing_register(budget=5, strategy="coreset")
+    for srv in (on, off):
+        srv.push_data(dups[:5], asynchronous=True).result()
+        srv.push_data(dups[5:], asynchronous=True).result()
+    a = on.standing_poll(regs[on]["query_id"])
+    b = off.standing_poll(regs[off]["query_id"])
+    assert a["keys"] == b["keys"]
+    assert any(e["mode"] == "replay" for e in a["emits"])
+    assert all(e["mode"] == "full" for e in b["emits"])
+    sa, sb = (s.stats()["standing_queries"] for s in (on, off))
+    assert sa["replay_emits"] >= 1
+    assert sb["replay_emits"] == 0 and sb["full_emits"] == sb["emits"]
+
+
+def test_standing_replay_diverges_to_full_emit():
+    """A delta row that DOES displace a winner must force an honest full
+    re-selection (replay detects the divergence and bows out)."""
+    X, Y = image_pool(30, seed=13)
+    srv = _mlp_server()
+    keys = srv.push_data(list(X))
+    srv.label(keys[:6], Y[:6])
+    srv.train_and_eval()
+    reg = srv.standing_register(budget=4, strategy="coreset")
+    # far-out rows: guaranteed to beat every recorded winner score
+    far = [np.full_like(np.asarray(X[0], np.float32), 40.0 + i)
+           for i in range(3)]
+    srv.push_data(far, asynchronous=True).result()
+    r = srv.standing_poll(reg["query_id"], since=reg["seq"])
+    assert [e["mode"] for e in r["emits"]] == ["full"]
+    assert set(e for em in r["emits"] for e in em["added"]) & set(
+        srv.session()._keys[-3:])          # the new rows actually won
+    assert r["keys"] == srv.query(budget=4, strategy="coreset")["keys"]
+
+
+def test_standing_register_validation():
+    srv = _mlp_server()
+    srv.push_data(list(image_pool(8, seed=1)[0]))
+    with pytest.raises(ValueError, match="concrete strategy"):
+        srv.standing_register(budget=2, strategy="auto")
+    with pytest.raises(KeyError):
+        srv.standing_register(budget=2, strategy="nope")
+    with pytest.raises(ValueError, match="budget"):
+        srv.standing_register(budget=0, strategy="lc")
+    with pytest.raises(KeyError, match="unknown standing query"):
+        srv.standing_poll("deadbeef")
+
+
+# ------------------------------------- persisted k-center min-dist state --
+@pytest.mark.parametrize("replicas", (1, 3))
+@pytest.mark.parametrize("strategy", ("coreset", "weighted_kcenter"))
+def test_persisted_state_bit_identical_to_cold(replicas, strategy):
+    """Warm-started selections with the persisted min-dist state must be
+    bit-identical to the ``strategy_state_cache: false`` from-scratch
+    oracle across pushes, labels and retrains — and the cache must show
+    O(delta) work (extends, not rebuilds) on the push-then-query step."""
+    X, Y = image_pool(56, seed=14)
+    warm = _mlp_server(replicas)
+    cold = _mlp_server(replicas, strategy_state_cache=False)
+    for srv in (warm, cold):
+        keys = srv.push_data(list(X[:40]))
+        srv.label(keys[:10], Y[:10])
+        srv.train_and_eval()
+    for seed in (0, 1):
+        assert warm.query(budget=6, strategy=strategy,
+                          rng_seed=seed)["keys"] == \
+            cold.query(budget=6, strategy=strategy,
+                       rng_seed=seed)["keys"]
+    st = warm.stats()["strategy_state"]
+    assert st["enabled"] and st["rebuilds"] >= 1 and st["hits"] >= 1
+    for srv in (warm, cold):
+        srv.push_data(list(X[40:]))
+    assert warm.query(budget=6, strategy=strategy, rng_seed=2)["keys"] == \
+        cold.query(budget=6, strategy=strategy, rng_seed=2)["keys"]
+    st2 = warm.stats()["strategy_state"]
+    assert st2["extends"] >= 1                    # delta rows appended...
+    assert st2["rebuilds"] == st["rebuilds"]      # ...nothing re-folded
+    assert st2["rows_extended"] >= 16
+    for srv in (warm, cold):
+        srv.label(keys[10:16], Y[10:16])
+        srv.train_and_eval()
+    assert warm.query(budget=6, strategy=strategy, rng_seed=3)["keys"] == \
+        cold.query(budget=6, strategy=strategy, rng_seed=3)["keys"]
+
+
+def test_state_invalidation_matrix():
+    """The spec's matrix, counter by counter, at replicas=3:
+
+    push    -> extends ONLY the touched shards' vectors (embeds only the
+               delta rows);
+    train   -> drops every shard's min-dist, re-embeds NOTHING;
+    label   -> drops nothing — the new centers fold into the live vectors
+               (center_extends), no rebuild, no invalidation."""
+    X, Y = image_pool(48, seed=15)
+    srv = _mlp_server(3)
+    sess = srv.session()
+    keys = srv.push_data(list(X[:36]))
+    srv.label(keys[:8], Y[:8])
+    srv.train_and_eval()
+    srv.query(budget=4, strategy="coreset")          # state warm
+    s0 = srv.stats()["strategy_state"]
+    assert s0["rebuilds"] == 3                       # one cold fold per shard
+
+    # -- push: O(delta) embeds, extends only the touched shards ----------
+    e0 = srv.embed_rows
+    new_keys = srv.push_data(list(X[36:]))
+    assert srv.embed_rows - e0 == 12
+    srv.query(budget=4, strategy="coreset")
+    s1 = srv.stats()["strategy_state"]
+    touched = {replica_of(k, 3) for k in new_keys}
+    assert s1["rebuilds"] == s0["rebuilds"]          # no from-scratch folds
+    assert s1["invalidations"] == s0["invalidations"]
+    assert s1["extends"] - s0["extends"] == len(touched)
+    assert s1["rows_extended"] - s0["rows_extended"] == 12
+
+    # -- train: min-dist dropped everywhere, zero re-embeds --------------
+    e1 = srv.embed_rows
+    srv.train_and_eval()
+    srv.query(budget=4, strategy="coreset")
+    s2 = srv.stats()["strategy_state"]
+    assert srv.embed_rows == e1                      # retrain embeds nothing
+    assert s2["invalidations"] > s1["invalidations"]
+    assert s2["rebuilds"] == s1["rebuilds"] + 3      # cold again, all shards
+
+    # -- label: nothing dropped, new centers fold into live vectors ------
+    srv.label(new_keys[:4], Y[36:40])
+    srv.query(budget=4, strategy="coreset")
+    s3 = srv.stats()["strategy_state"]
+    assert srv.embed_rows == e1
+    assert s3["invalidations"] == s2["invalidations"]
+    assert s3["rebuilds"] == s2["rebuilds"]
+    assert s3["center_extends"] - s2["center_extends"] == 3
+    assert sess.artifact_builds == srv.stats()["artifacts"]["builds"]
+
+
+def test_standing_emit_cost_is_o_delta():
+    """Replay emits are op-accounted O(new rows): pool_rows touched by a
+    near-duplicate delta emit must be a small multiple of the delta size,
+    far below the full O(pool x budget) re-selection cost."""
+    X, Y = image_pool(48, seed=16)
+    srv = _mlp_server()
+    keys = srv.push_data(list(X))
+    srv.label(keys[:8], Y[:8])
+    srv.train_and_eval()
+    reg = srv.standing_register(budget=6, strategy="coreset")
+    delta = _near_dups(X[:8], 4, seed=16)
+    # SYNC push: no worker-thread emit (track_ops is process-global), the
+    # next poll emits on THIS thread inside the tracked window
+    srv.push_data(delta)
+    with ops.track_ops() as stats:
+        r = srv.standing_poll(reg["query_id"], since=reg["seq"])
+    stats = dict(stats)          # track_ops yields the live global dict
+    assert [e["mode"] for e in r["emits"]] == ["replay"]
+    n_pool, n_delta, budget = 48 + 4, len(delta), 6
+    # prepare() extends the cached vector over the delta rows, the replay
+    # folds budget-1 centers over the delta rows — all O(delta)
+    assert stats["pool_rows"] <= 3 * n_delta * (budget + 1)
+    assert stats["pool_rows"] < n_pool * budget // 2
+    # reference: the same emit with replay disabled is a full re-selection
+    srv2 = _mlp_server(standing_replay=False)
+    k2 = srv2.push_data(list(X))
+    srv2.label(k2[:8], Y[:8])
+    srv2.train_and_eval()
+    reg2 = srv2.standing_register(budget=6, strategy="coreset")
+    srv2.push_data(delta)
+    with ops.track_ops() as full_stats:
+        r2 = srv2.standing_poll(reg2["query_id"], since=reg2["seq"])
+    assert r2["keys"] == r["keys"]
+    assert full_stats["pool_rows"] >= (n_pool - 8) * (budget - 1)
+    assert full_stats["pool_rows"] > 4 * stats["pool_rows"]
+
+
+# ------------------------------------------------- batch-insensitivity --
+@pytest.mark.parametrize("replicas", (1, 3))
+def test_feature_path_batch_insensitive(replicas):
+    """The same pool pushed in chunk sizes {1, 3, 17, all} — under a tiny
+    EmbeddingCache that forces evicted-entry recomputes — must yield
+    bitwise-identical feats columns and identical selections. This is the
+    invariant that lets a streamed pool select exactly like a one-shot
+    pool (rows never see their co-batch)."""
+    X, Y = image_pool(34, seed=17)
+    n = len(X)
+    servers, snaps = [], []
+    for chunk in (1, 3, 17, n):
+        srv = _mlp_server(replicas, cache_bytes=1 << 10)
+        for lo in range(0, n, chunk):
+            srv.push_data(list(X[lo:lo + chunk]))
+        keys = srv.session()._keys
+        srv.label(keys[:7], Y[:7])
+        srv.train_and_eval()
+        servers.append(srv)
+        feats_l, _, rows_l, _ = srv.session()._artifact_snapshot()
+        snaps.append([np.asarray(f[:r]) for f, r in zip(feats_l, rows_l)])
+    ref = snaps[0]
+    for snap in snaps[1:]:
+        for a, b in zip(ref, snap):
+            np.testing.assert_array_equal(a, b)      # bitwise, per shard
+    sels = [srv.query(budget=5, strategy="coreset", rng_seed=4)["keys"]
+            for srv in servers]
+    assert all(s == sels[0] for s in sels)
+    sels_lc = [srv.query(budget=5, strategy="lc", rng_seed=4)["keys"]
+               for srv in servers]
+    assert all(s == sels_lc[0] for s in sels_lc)
+
+
+# ------------------------------------------- cancellation / fault paths --
+def test_close_session_cancels_standing_queries():
+    """Closing a session cancels its standing queries first: the draining
+    worker must not emit to a subscription whose owner is gone, and polls
+    on a kept reference raise with the close reason."""
+    X, Y = image_pool(24, seed=18)
+    srv = _mlp_server()
+    sid = srv.create_session()
+    sess = srv.session(sid)
+    keys = srv.push_data(list(X[:16]), session=sid)
+    srv.label(keys[:4], Y[:4], session=sid)
+    reg = srv.standing_register(budget=3, strategy="coreset", session=sid)
+    emits_before = sess.standing_emits
+    srv.close_session(sid)
+    with pytest.raises(RuntimeError, match="session closed"):
+        sess.standing_poll(reg["query_id"])
+    with pytest.raises(KeyError):                    # session itself gone
+        srv.standing_poll(reg["query_id"], session=sid)
+    assert sess.standing_emits == emits_before       # no orphaned emits
+    assert sess._standing[reg["query_id"]].cancelled == "session closed"
+
+
+def test_dead_ingest_worker_fails_polls_ticket_style():
+    """A dead worker with pushes pending must surface at the next poll
+    exactly like ``flush()`` (fail fast, no stale selection served)."""
+    X, Y = image_pool(20, seed=19)
+    srv = _mlp_server()
+    sess = srv.session()
+    keys = srv.push_data(list(X[:16]))
+    srv.label(keys[:4], Y[:4])
+    reg = srv.standing_register(budget=3, strategy="coreset")
+    sess._ingest_loop = lambda: None       # worker thread exits immediately
+    sess.push_data(list(X[16:]), asynchronous=True)
+    deadline = time.time() + 10
+    while sess._ingest_thread.is_alive() and time.time() < deadline:
+        time.sleep(0.01)
+    t0 = time.perf_counter()
+    with pytest.raises(RuntimeError, match="worker died"):
+        srv.standing_poll(reg["query_id"])
+    assert time.perf_counter() - t0 < 5.0
+
+
+def test_failed_emit_parks_on_query_not_worker(monkeypatch):
+    """An emit that raises must not kill the ingest worker: the error
+    parks on the standing query and the NEXT poll raises it, while other
+    session ops keep working."""
+    X, Y = image_pool(24, seed=20)
+    srv = _mlp_server()
+    sess = srv.session()
+    keys = srv.push_data(list(X[:16]))
+    srv.label(keys[:4], Y[:4])
+    reg = srv.standing_register(budget=3, strategy="coreset")
+    boom = RuntimeError("emit exploded")
+    monkeypatch.setattr(sess, "_standing_emit_locked",
+                        lambda sq: (_ for _ in ()).throw(boom))
+    sess.push_data(list(X[16:]), asynchronous=True).result()
+    srv.flush()                                      # worker survived
+    with pytest.raises(RuntimeError, match="emit failed"):
+        srv.standing_poll(reg["query_id"])
+    monkeypatch.undo()
+    r = srv.standing_poll(reg["query_id"])           # error cleared on success
+    assert r["keys"] == srv.query(budget=3, strategy="coreset")["keys"]
+    assert srv.stats()["pool"] == 24                 # no rows lost
+
+
+# ------------------------------------------- random interleavings (slow) --
+@pytest.mark.slow
+def test_random_streams_standing_equals_one_shot():
+    """Hypothesis: under ANY interleaving of push (sync and async), label,
+    train and poll, at replicas in {1, 3}, every standing-query emit
+    equals the one-shot selection at that moment, and the final cumulative
+    selection is bit-identical to a one-shot coreset query over the final
+    pool on a fresh all-oracles-off server."""
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    X, Y = image_pool(66, seed=21)
+    chunks = [list(X[i * 6:(i + 1) * 6]) for i in range(11)]
+    ops_st = st.lists(
+        st.one_of(
+            st.tuples(st.just("push"), st.integers(0, 10)),
+            st.tuples(st.just("push_async"), st.integers(0, 10)),
+            st.tuples(st.just("label"), st.integers(1, 5)),
+            st.tuples(st.just("train"), st.just(0)),
+            st.tuples(st.just("poll"), st.just(0)),
+        ), min_size=4, max_size=12)
+
+    @settings(max_examples=10, deadline=None)
+    @given(ops=ops_st, replicas=st.sampled_from([1, 3]),
+           seed=st.integers(0, 99))
+    def run(ops, replicas, seed):
+        srv = _mlp_server(replicas)
+        # mirror server: every cache under test off — each poll's
+        # selection is checked against it, so the persisted min-dist
+        # state is oracle-tested under the same interleaving
+        cold = _mlp_server(replicas, strategy_state_cache=False,
+                           standing_replay=False)
+        sess = srv.session()
+        keys0 = srv.push_data(chunks[0])
+        cold.push_data(chunks[0])
+        for s in (srv, cold):
+            s.label(keys0[:3], [hash(k) % 10 for k in keys0[:3]])
+            s.train_and_eval()
+        reg = srv.standing_register(budget=4, strategy="coreset",
+                                    rng_seed=seed)
+        labeled_log = [(k, hash(k) % 10) for k in keys0[:3]]
+        for op, arg in ops:
+            if op == "push":
+                srv.push_data(chunks[arg])
+                cold.push_data(chunks[arg])
+            elif op == "push_async":
+                srv.push_data(chunks[arg], asynchronous=True)
+                cold.push_data(chunks[arg], asynchronous=True)
+            elif op == "label":
+                srv.flush()
+                todo = [k for k in sess._keys
+                        if k not in sess._labels][:arg]
+                ys = [hash(k) % 10 for k in todo]
+                srv.label(todo, ys)
+                cold.label(todo, ys)
+                labeled_log += list(zip(todo, ys))
+            elif op == "train":
+                srv.train_and_eval()
+                cold.train_and_eval()
+            else:
+                r = srv.standing_poll(reg["query_id"])
+                assert r["keys"] == srv.query(
+                    budget=4, strategy="coreset",
+                    rng_seed=seed)["keys"]
+                assert r["keys"] == cold.query(
+                    budget=4, strategy="coreset",
+                    rng_seed=seed)["keys"]
+        final = srv.standing_poll(reg["query_id"])
+        cold.flush()
+        assert cold.session()._keys == sess._keys
+        assert final["keys"] == cold.query(
+            budget=4, strategy="coreset", rng_seed=seed)["keys"]
+        # fresh oracle server: one-shot over the final pool, caches off
+        ref = _mlp_server(replicas, artifact_cache=False,
+                          strategy_state_cache=False, standing_replay=False)
+        for lo in range(0, len(sess._keys), 16):
+            ref.push_data([sess._raw[k]
+                           for k in sess._keys[lo:lo + 16]])
+        assert ref.session()._keys == sess._keys
+        ref.label(*zip(*labeled_log))
+        ref.train_and_eval()
+        assert final["keys"] == ref.query(
+            budget=4, strategy="coreset", rng_seed=seed)["keys"]
+
+    run()
