@@ -71,6 +71,17 @@
    asserted bit-identical to a one-shot query over the final pool on a
    fresh server with every incremental engine off. CI re-asserts the
    ratio from the uploaded JSON (scripts/assert_table2_standing.py).
+
+10. blockwise transformer embedding: the text/audio ingest backbone
+   (models/blockwise.py) is asserted (a) bitwise chunk-invisible —
+   chunked == unchunked feature bytes across block sizes including a
+   non-dividing one, (b) memory-flat — the analytic per-block activation
+   accounting is identical across sequence lengths {512, 2048, 8192} at a
+   fixed block while the unchunked comparator grows quadratically, and
+   (c) a text-AL scenario through ALServer (push, label, head train,
+   coreset + lc queries, a standing query streaming a delta) selects
+   bit-identically at replicas {1,3}. CI re-asserts (a)+(b) from the
+   uploaded JSON (scripts/assert_table2_transformer.py).
 """
 from __future__ import annotations
 
@@ -669,6 +680,89 @@ def _standing_query(n: int = 4096, d: int = 192, budget: int = 32,
         f"asserted_ge=10x")]
 
 
+def _transformer_embed(n: int = 48, seq: int = 64,
+                       budget: int = 8) -> list:
+    """10. blockwise transformer embedding: bitwise chunk-invisibility,
+    analytic memory flatness, and text-AL replica determinism.
+
+    (a) the same text pool is embedded at block sizes {7 (non-dividing),
+    16, 64 (=S), 96 (>S, the unchunked forward)} through one shared
+    backend config — feature bytes must be identical;
+    (b) ``activation_accounting`` at block=128/kv_chunk=128 must report
+    the same per-block peak for S in {512, 2048, 8192} while the
+    unchunked comparator (the (S,S) score matrix) grows quadratically;
+    (c) a text-AL scenario (push, label, head train, coreset + lc
+    queries, a standing query streaming a delta) must select
+    bit-identically at replicas {1, 3}.
+    """
+    from repro.data.synthetic import text_pool
+    from repro.models import blockwise
+    from repro.service.backends import TransformerBackend
+
+    toks, y = text_pool(n, num_classes=4, seq_len=seq, vocab=512, seed=13)
+
+    # --- (a) chunked == unchunked bit-identity across block sizes
+    blocks = (7, 16, seq, 96)
+    feats, us = {}, 0.0
+    for block in blocks:
+        be = TransformerBackend(block_size=block, seq_len=seq,
+                                kv_chunk=32)
+        x = be.preprocess(toks)
+        be.features(x[:1])                       # compile outside the timer
+        t0 = time.perf_counter()
+        feats[block] = be.features(x)
+        us = max(us, (time.perf_counter() - t0) * 1e6)
+    ref = feats[blocks[0]]
+    for block, f in feats.items():
+        assert np.array_equal(ref, f), \
+            f"block={block} changed feature bytes vs block={blocks[0]}"
+
+    # --- (b) analytic peak activation flat in sequence length
+    cfg = blockwise.tiny_encoder_config()
+    seq_lens = (512, 2048, 8192)
+    accts = {S: blockwise.activation_accounting(cfg, 16, S, 128, 128)
+             for S in seq_lens}
+    peaks = [accts[S]["peak_activation_bytes"] for S in seq_lens]
+    assert len(set(peaks)) == 1, f"peak activation not flat: {peaks}"
+    unchunked = [accts[S]["unchunked_peak_bytes"] for S in seq_lens]
+    assert unchunked[-1] > unchunked[0] * 100, unchunked
+    growth = unchunked[-1] / unchunked[0]
+
+    # --- (c) text-AL end to end, replicas {1,3} bit-identical
+    picks = {}
+    for reps in (1, 3):
+        srv = ALServer(
+            ALServiceConfig(model_name="transformer", batch_size=8,
+                            replicas=reps, model_seq_len=seq,
+                            model_block_size=16, strategy="coreset"))
+        keys = srv.push_data(list(toks[:n - budget]))
+        srv.label(keys[:12], [int(v) for v in y[:12]])
+        srv.train_and_eval()
+        reg = srv.standing_register(budget=budget, strategy="coreset",
+                                    rng_seed=3)
+        srv.push_data(list(toks[n - budget:]))
+        streamed = srv.standing_poll(reg["query_id"])["keys"]
+        one_shot = srv.query(budget=budget, strategy="coreset",
+                             rng_seed=3)["keys"]
+        assert streamed == one_shot, \
+            f"replicas={reps}: streamed selection diverged from one-shot"
+        picks[reps] = {s: srv.query(budget, s)["keys"]
+                       for s in ("coreset", "lc")}
+    assert picks[1] == picks[3], \
+        "text-AL selections differ across replica counts"
+
+    return [row(
+        "table2/transformer_embed", us,
+        f"pool={n};seq={seq};blocks={'+'.join(map(str, blocks))};"
+        f"bit_identical=True;acct_block=128;"
+        f"seq_lens={'+'.join(map(str, seq_lens))};"
+        f"peak_act_bytes={'+'.join(map(str, peaks))};peak_act_flat=True;"
+        f"unchunked_peak_bytes={'+'.join(map(str, unchunked))};"
+        f"unchunked_growth={growth:.0f}x;replicas=1+3;"
+        f"strategies=coreset+lc;replicas_identical=True;"
+        f"streamed_equals_one_shot=True")]
+
+
 def run() -> list:
     out = _pipeline_vs_serial()
     out += _concurrent_clients()
@@ -679,4 +773,5 @@ def run() -> list:
     out += _prefilter_gated()
     out += _shard_spill()
     out += _standing_query()
+    out += _transformer_embed()
     return out

@@ -1,0 +1,86 @@
+"""CI gate for the blockwise transformer embedding backbone (tier-2).
+
+The table2 benchmark asserts the blockwise-encoder invariants in-process;
+this script re-asserts the two headline claims from the UPLOADED JSON
+(``benchmarks.run --json``), so a regression that breaks the chunked ==
+unchunked bit-identity, lets the per-block peak activation grow with
+sequence length, or silently removes the section fails the workflow on
+the artifact it publishes.
+
+    python scripts/assert_table2_transformer.py BENCH_table2.json
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+MIN_BLOCK_SIZES = 3       # incl. a non-dividing block and the unchunked fwd
+MIN_SEQ_LENS = 3          # the {512, 2048, 8192} sweep
+MIN_UNCHUNKED_GROWTH = 100.0
+
+
+def parse_derived(derived: str) -> dict:
+    out = {}
+    for part in derived.split(";"):
+        if "=" in part:
+            k, _, v = part.partition("=")
+            out[k] = v
+    return out
+
+
+def main(path: str) -> None:
+    with open(path) as f:
+        doc = json.load(f)
+    rows = {r["name"]: parse_derived(r["derived"]) for r in doc["rows"]}
+    errors = []
+    name = "table2/transformer_embed"
+    d = rows.get(name)
+    if d is None:
+        errors.append(f"missing benchmark row {name!r}")
+    else:
+        # (a) chunked == unchunked feature bytes across block sizes
+        blocks = [b for b in d.get("blocks", "").split("+") if b]
+        if len(blocks) < MIN_BLOCK_SIZES:
+            errors.append(f"{name}: only {len(blocks)} block sizes swept "
+                          f"(need >= {MIN_BLOCK_SIZES})")
+        if d.get("bit_identical") != "True":
+            errors.append(f"{name}: chunked features no longer bitwise "
+                          f"identical to the unchunked forward")
+        # (b) per-block peak activation flat across sequence lengths
+        seq_lens = [s for s in d.get("seq_lens", "").split("+") if s]
+        if len(seq_lens) < MIN_SEQ_LENS:
+            errors.append(f"{name}: only {len(seq_lens)} sequence lengths "
+                          f"swept (need >= {MIN_SEQ_LENS})")
+        peaks = [int(p) for p in d.get("peak_act_bytes", "").split("+")
+                 if p]
+        if not peaks or len(set(peaks)) != 1:
+            errors.append(f"{name}: peak activation not flat across "
+                          f"sequence lengths: {peaks}")
+        if d.get("peak_act_flat") != "True":
+            errors.append(f"{name}: peak_act_flat flag dropped")
+        growth = float(d.get("unchunked_growth", "0x").rstrip("x"))
+        if growth < MIN_UNCHUNKED_GROWTH:
+            errors.append(f"{name}: unchunked comparator grew only "
+                          f"{growth:.0f}x across the sweep (need >= "
+                          f"{MIN_UNCHUNKED_GROWTH:.0f}x — is the "
+                          f"accounting still quadratic-aware?)")
+        if peaks and peaks[0] >= int(
+                d.get("unchunked_peak_bytes", "0").split("+")[0] or 0):
+            errors.append(f"{name}: blockwise peak {peaks[0]} is not "
+                          f"below the unchunked peak")
+        # (c) is asserted in-process; its flag riding the row is a
+        # cheap canary for the section being truncated
+        if d.get("replicas_identical") != "True":
+            errors.append(f"{name}: replicas_identical flag dropped")
+    if errors:
+        print("transformer-embed regression:", file=sys.stderr)
+        for e in errors:
+            print(f"  - {e}", file=sys.stderr)
+        sys.exit(1)
+    print(f"transformer embed OK (blocks={d['blocks']} bit-identical, "
+          f"peak {peaks[0]} B flat over S={{{d['seq_lens']}}}, "
+          f"unchunked grows {d['unchunked_growth']})")
+
+
+if __name__ == "__main__":
+    main(sys.argv[1] if len(sys.argv) > 1 else "BENCH_table2.json")

@@ -31,6 +31,53 @@ def lm_pool(n_seqs: int, seq_len: int, vocab: int, seed: int = 0,
     return toks, dom.astype(np.int32)
 
 
+def text_pool(n: int, num_classes: int = 10, seq_len: int = 64,
+              vocab: int = 512, seed: int = 0
+              ) -> Tuple[np.ndarray, np.ndarray]:
+    """(tokens (n, seq_len) i32 right-padded with -1, y (n,) i32).
+
+    Variable-length sequences (half to full ``seq_len``) of uniform noise
+    tokens with a class-specific 8-token motif planted on most 8-aligned
+    spans — a frozen random transformer mean-pools those motifs into
+    linearly separable features, the text analogue of ``image_pool``'s
+    localized activations. Fixed-width rows (pad = -1) so pushed items
+    share one shape per batch (the ingest pipeline stacks raw items)."""
+    rng = np.random.default_rng(seed)
+    y = rng.integers(0, num_classes, n)
+    lengths = rng.integers(max(seq_len // 2, 1), seq_len + 1, n)
+    motifs = rng.integers(0, vocab, (num_classes, 8))
+    toks = np.full((n, seq_len), -1, np.int32)
+    for i in range(n):
+        L = int(lengths[i])
+        t = rng.integers(0, vocab, L).astype(np.int32)
+        for s in range(0, L - 8 + 1, 8):
+            if rng.random() < 0.7:
+                t[s:s + 8] = motifs[y[i]]
+        toks[i, :L] = t
+    return toks, y.astype(np.int32)
+
+
+def audio_pool(n: int, num_classes: int = 10, n_frames: int = 64,
+               n_mels: int = 16, seed: int = 0, noise: float = 0.3
+               ) -> Tuple[np.ndarray, np.ndarray]:
+    """(x (n, n_frames, n_mels) f32, y (n,) i32) synthetic log-mel frames.
+
+    Each class gets a fixed spectral band boost plus a slow tone in a
+    second band — class-dependent signal a frozen random encoder + linear
+    head genuinely separates."""
+    rng = np.random.default_rng(seed)
+    y = rng.integers(0, num_classes, n)
+    x = rng.normal(size=(n, n_frames, n_mels)).astype(np.float32) * noise
+    t = np.arange(n_frames, dtype=np.float32)
+    for c in range(num_classes):
+        m = y == c
+        band = c % n_mels
+        x[m, :, band] += 1.5
+        x[m, :, (band + 3) % n_mels] += 0.8 * np.sin(
+            2.0 * np.pi * t * (c + 1) / n_frames)[None, :]
+    return x, y.astype(np.int32)
+
+
 def image_pool(n: int, num_classes: int = 10, hw: int = 8, seed: int = 0,
                noise: float = 0.15) -> Tuple[np.ndarray, np.ndarray]:
     """(x (n,hw,hw,3) f32, y (n,) i32) with class-dependent signal."""

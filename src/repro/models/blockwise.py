@@ -1,0 +1,201 @@
+"""Blockwise-chunked transformer encoder for ingest embedding.
+
+The blockwise-parallel-transformer pattern (BPT; SNIPPETS.md Snippet 2):
+per layer, attention runs block-by-block over the query axis — the flash
+kernel on TPU (`kernels/flash_attention`), the chunked online-softmax scan
+elsewhere — and the feed-forward runs over the same fixed-size row blocks
+under ``jax.checkpoint``. At a fixed block size the per-block *activation*
+working set (the (block, kv_chunk) score tile, the (block, d_ff) MLP
+intermediate) is flat in sequence length; only the residual stream and the
+per-layer K/V projections remain O(S) state. ``activation_accounting``
+states that split analytically, in the same machine-independent spirit as
+``kernels.pairwise.ops``.
+
+Bitwise chunking contract (the PR-7 batch-insensitivity contract extended
+to the sequence axis): the block size is invisible in the output bytes.
+Every op outside attention is row-local; inside attention a query row's
+online-softmax trajectory depends only on the KV *chunk grid* — which is
+pinned by ``kv_chunk`` independently of the block size — never on how
+query rows are grouped into blocks. Trailing pad rows/keys introduced by
+block-multiple padding are exact no-ops for real rows (causal masking
+zeroes them before any reduction that could regroup). Hence
+``blockwise_encode(block=b)`` == ``blockwise_encode(block=b')`` bit-for-bit
+for any b, b', including b >= S (the unchunked forward). Asserted by
+tests/test_transformer_backend.py and benchmarks/table2_pipeline.py.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.param import ParamDecl, init_params
+from repro.configs.base import ArchConfig
+from repro.models import transformer as tf_lib
+from repro.models.layers import attention as attn_lib
+from repro.models.layers.mlp import mlp_apply
+from repro.models.layers.norms import apply_norm, norm_decls
+from repro.models.layers.rope import apply_rope
+
+
+def tiny_encoder_config(vocab: int = 512) -> ArchConfig:
+    """CPU-sized GQA encoder used by the service's transformer backend."""
+    return ArchConfig(
+        name="tiny_blockwise_encoder", family="dense",
+        n_layers=2, d_model=32, n_heads=4, n_kv_heads=2, d_ff=64,
+        vocab=vocab, norm="rms", mlp="swiglu", remat=True,
+        attention_impl="pallas")   # pallas on TPU, chunked-jnp fallback
+
+
+def encoder_decls(cfg: ArchConfig, input_dim: Optional[int] = None):
+    """Param tree: token embed (or audio frame projection) + a stacked
+    layer axis over the standard (norm1, attn, norm2, mlp) unit + final
+    norm. Reuses the exact layer declarations of models/transformer.py."""
+    unit = tf_lib._layer_decls(cfg, tf_lib.LayerSpec("attn", "dense"))
+    stacked = jax.tree.map(
+        lambda d: tf_lib._stack_decl(d, cfg.n_layers), unit,
+        is_leaf=lambda x: isinstance(x, ParamDecl))
+    decls = {
+        "layers": stacked,
+        "final_norm": norm_decls(cfg.norm, cfg.d_model),
+    }
+    if input_dim:
+        decls["frame_proj"] = ParamDecl((input_dim, cfg.d_model),
+                                        ("embed", None))
+    else:
+        decls["embed"] = ParamDecl((cfg.padded_vocab, cfg.d_model),
+                                   ("vocab", "embed"), init="embed")
+    return decls
+
+
+def init_encoder(cfg: ArchConfig, rng, input_dim: Optional[int] = None):
+    """f32 params (the serving feature path is all-f32 for determinism)."""
+    params = init_params(encoder_decls(cfg, input_dim), rng)
+    return jax.tree.map(lambda a: a.astype(jnp.float32), params)
+
+
+def embed_tokens(cfg: ArchConfig, params, tokens):
+    """tokens (B,S) int32, -1 = right-padding -> (B,S,d) f32. Row-local."""
+    safe = jnp.clip(tokens, 0, cfg.padded_vocab - 1)
+    return jnp.take(params["embed"], safe, axis=0).astype(jnp.float32)
+
+
+def embed_frames(params, frames):
+    """frames (B,S,F) f32 -> (B,S,d) f32 linear frontend. Row-local."""
+    return jnp.einsum("bsf,fd->bsd", frames.astype(jnp.float32),
+                      params["frame_proj"])
+
+
+def _attention(q, k, v, *, impl: str, block: int, kv_chunk: int):
+    if impl == "interpret":
+        # CI kernel lane: the same Pallas flash kernel the TPU path runs,
+        # executed through the interpreter
+        from repro.kernels.flash_attention.kernel import flash_attention_pallas
+        return flash_attention_pallas(q, k, v, causal=True,
+                                      kv_block=kv_chunk, interpret=True)
+    return attn_lib.attention(q, k, v, impl=impl, causal=True,
+                              q_chunk=block, kv_chunk=kv_chunk)
+
+
+def blockwise_encode(cfg: ArchConfig, params, x, *, block: int,
+                     kv_chunk: int, impl: Optional[str] = None):
+    """x: (B,S,d) embedded inputs -> (B,S,d) final-norm hidden states.
+
+    ``block`` chunks the query/FFN row axis (the activation knob);
+    ``kv_chunk`` pins the online-softmax KV grid and must stay fixed
+    across block sizes for the bitwise contract (the backend clamps it to
+    the canonical sequence length so it never varies with pad length).
+    """
+    B, S, d = x.shape
+    block = max(1, min(block, S))
+    nb = -(-S // block)
+    Sp = nb * block
+    if Sp != S:
+        x = jnp.pad(x, ((0, 0), (0, Sp - S), (0, 0)))
+    positions = jnp.arange(Sp)[None, :]        # (1, Sp), broadcast over batch
+    impl = impl or cfg.attention_impl
+
+    def unit(h, lp):
+        n1 = apply_norm(cfg.norm, lp["norm1"], h, cfg.norm_eps)
+        q, k, v = attn_lib.project_qkv(lp["mixer"], n1, cfg.n_heads,
+                                       cfg.n_kv_heads, cfg.hd, cfg.qk_norm,
+                                       cfg.norm_eps)
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+        o = _attention(q, k, v, impl=impl, block=block, kv_chunk=kv_chunk)
+        o = jnp.einsum("bse,ed->bsd", o.reshape(B, Sp, -1),
+                       lp["mixer"]["w_o"])
+        if "b_o" in lp["mixer"]:
+            o = o + lp["mixer"]["b_o"]
+        h = h + o
+        n2 = apply_norm(cfg.norm, lp["norm2"], h, cfg.norm_eps)
+
+        def ffn_block(_, hb):
+            return None, mlp_apply(lp["mlp"], hb, cfg.mlp)
+
+        step = jax.checkpoint(ffn_block) if cfg.remat else ffn_block
+        _, fo = jax.lax.scan(
+            step, None, jnp.moveaxis(n2.reshape(B, nb, block, d), 1, 0))
+        h = h + jnp.moveaxis(fo, 0, 1).reshape(B, Sp, d)
+        return h, None
+
+    step = jax.checkpoint(unit) if cfg.remat else unit
+    h, _ = jax.lax.scan(step, x, params["layers"])
+    h = apply_norm(cfg.norm, params["final_norm"], h, cfg.norm_eps)
+    return h[:, :S]
+
+
+def pool_hidden(h, mask, pooling: str):
+    """h (B,S,d), mask (B,S) bool -> (B,d) f32 features. Sample-local."""
+    mask = mask.astype(jnp.float32)
+    if pooling == "last":
+        idx = jnp.maximum(jnp.sum(mask, axis=-1).astype(jnp.int32) - 1, 0)
+        return jnp.take_along_axis(
+            h, idx[:, None, None].astype(jnp.int32), axis=1)[:, 0].astype(
+                jnp.float32)
+    denom = jnp.maximum(jnp.sum(mask, axis=-1, keepdims=True), 1.0)
+    return (jnp.sum(h * mask[..., None], axis=1) / denom).astype(jnp.float32)
+
+
+def activation_accounting(cfg: ArchConfig, batch: int, seq_len: int,
+                          block: int, kv_chunk: int,
+                          itemsize: int = 4) -> dict:
+    """Analytic per-forward memory split (bytes), machine-independent.
+
+    ``peak_activation_bytes`` is the largest per-block working set any
+    single blockwise step holds live (attention score tile + softmax carry
+    vs. the MLP intermediate) — independent of ``seq_len`` at a fixed
+    block size, which is the claim table2/transformer_embed asserts.
+    ``state_bytes`` is the O(S) part (residual stream + per-layer K/V
+    projections) that any exact-attention forward must keep.
+    ``unchunked_peak_bytes`` is the same accounting at block = kv_chunk =
+    the padded sequence — the (S, S) score matrix a naive forward holds.
+    """
+    B = batch
+    nb = -(-seq_len // max(block, 1))
+    Sp = nb * max(block, 1)
+    qc = min(block, Sp)
+    kc = min(kv_chunk, Sp)
+    H, KH, D = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    G = H // KH
+    ff_mult = 2 if cfg.mlp == "swiglu" else 1
+
+    def _peak(qc_, kc_):
+        scores = B * KH * G * qc_ * kc_          # (B,KH,G,qc,kc) f32 tile
+        carry = B * KH * G * qc_ * (2 + D)       # online-softmax m,l,acc
+        q_tile = B * qc_ * H * D
+        attn_tile = scores + carry + q_tile
+        mlp_tile = B * qc_ * (ff_mult * cfg.d_ff + 2 * cfg.d_model)
+        return max(attn_tile, mlp_tile) * itemsize
+
+    residual = B * Sp * cfg.d_model * itemsize
+    kv_state = 2 * B * Sp * KH * D * itemsize
+    return {
+        "peak_activation_bytes": _peak(qc, kc),
+        "state_bytes": residual + kv_state,
+        "unchunked_peak_bytes": _peak(Sp, Sp),
+        "blocks": nb,
+        "block": qc,
+        "kv_chunk": kc,
+    }

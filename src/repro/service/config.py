@@ -104,6 +104,17 @@ class ALServiceConfig:
     strategy: str = "auto"              # auto -> PSHEA agent
     model_name: str = "synthetic_cnn"   # backend scorer id
     batch_size: int = 16
+    # transformer backend knobs (model.name: transformer): the blockwise
+    # forward's row-block size (activation-memory lever; bitwise-invisible
+    # in the feature bytes), the canonical per-sample sequence length
+    # preprocess pads/truncates to, the pooling reduction (mean | last),
+    # the input modality (text | audio) and, for audio, the per-frame
+    # feature width
+    model_block_size: int = 64
+    model_seq_len: int = 128
+    model_pooling: str = "mean"
+    model_modality: str = "text"
+    model_input_dim: int = 0
     device: str = "CPU"
     protocol: str = "tcp"
     host: str = "127.0.0.1"
@@ -180,6 +191,11 @@ class ALServiceConfig:
             strategy=strat.get("type", "auto"),
             model_name=model.get("name", "synthetic_cnn"),
             batch_size=int(model.get("batch_size", 16)),
+            model_block_size=int(model.get("block_size", 64)),
+            model_seq_len=int(model.get("seq_len", 128)),
+            model_pooling=model.get("pooling", "mean"),
+            model_modality=model.get("modality", "text"),
+            model_input_dim=int(model.get("input_dim", 0)),
             device=str(al.get("device", "CPU")),
             protocol=worker.get("protocol", "tcp"),
             host=worker.get("host", "127.0.0.1"),

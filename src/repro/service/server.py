@@ -1149,7 +1149,8 @@ class ALServer:
             config = (ALServiceConfig.from_yaml(config_path)
                       if config_path else ALServiceConfig())
         self.config = config
-        self.backend = backend or make_backend(config.model_name)
+        self.backend = (backend if backend is not None
+                        else make_backend(config.model_name, config=config))
         self.cache = EmbeddingCache(config.cache_bytes,
                                     config.cache_spill_dir)
         self.fetch_fn = fetch_fn or (lambda x: x)

@@ -322,6 +322,32 @@ active_learning:
     assert d.strategy_state_cache is True and d.standing_replay is True
 
 
+def test_yaml_transformer_model_knobs():
+    """The transformer-backend knobs round-trip through the YAML subset
+    under ``active_learning.model`` (the committed configs/*.yml files
+    exercise the same schema end to end)."""
+    text = """
+active_learning:
+  model:
+    name: transformer
+    batch_size: 8
+    block_size: 32
+    seq_len: 96
+    pooling: last
+    modality: audio
+    input_dim: 12
+"""
+    cfg = ALServiceConfig.from_dict(parse_yaml(text))
+    assert cfg.model_name == "transformer"
+    assert cfg.model_block_size == 32 and cfg.model_seq_len == 96
+    assert cfg.model_pooling == "last" and cfg.model_modality == "audio"
+    assert cfg.model_input_dim == 12
+    d = ALServiceConfig()
+    assert (d.model_block_size, d.model_seq_len, d.model_pooling,
+            d.model_modality, d.model_input_dim) == (64, 128, "mean",
+                                                     "text", 0)
+
+
 # ----------------------------------------------------------------- server --
 @pytest.fixture(scope="module")
 def pool():

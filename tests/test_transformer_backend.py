@@ -1,0 +1,220 @@
+"""TransformerBackend: blockwise-chunked embedding for text/audio AL.
+
+The contract under test (the PR-7 batch-insensitivity contract extended to
+the sequence axis):
+
+- the block size is bitwise-invisible: chunked == unchunked feature bytes
+  at ANY block size, dividing or not;
+- the forward is row-local, so canonical-padding batch composition never
+  changes a sample's feature bytes (content-addressed cache safety);
+- text-AL and audio-AL run end to end through ALServer/ALClient — replicas
+  {1,3} select bit-identically, standing queries stream the exact one-shot
+  selections;
+- the analytic activation accounting is flat in sequence length at a fixed
+  block size (the memory claim table2/transformer_embed re-asserts).
+"""
+import numpy as np
+import pytest
+
+from repro.data.synthetic import audio_pool, text_pool
+from repro.models import blockwise
+from repro.service.backends import TransformerBackend, make_backend
+from repro.service.client import ALClient, serve_tcp
+from repro.service.config import ALServiceConfig
+from repro.service.server import ALServer
+
+SEQ = 48
+
+
+def _text_backend(block, **kw):
+    kw.setdefault("seq_len", SEQ)
+    kw.setdefault("kv_chunk", 16)
+    return TransformerBackend(block_size=block, **kw)
+
+
+# ------------------------------------------------------ bitwise chunking --
+@pytest.mark.parametrize("modality", ["text", "audio"])
+def test_block_size_bitwise_invisible(modality):
+    """blocks {5 (non-dividing), 16, 48 (=S), 64 (>S, unchunked)} produce
+    the same feature bytes."""
+    if modality == "text":
+        raw, _ = text_pool(10, num_classes=4, seq_len=SEQ, vocab=512, seed=0)
+        kw = {}
+    else:
+        raw, _ = audio_pool(10, num_classes=4, n_frames=SEQ, n_mels=8, seed=0)
+        kw = {"modality": "audio", "input_dim": 8}
+    feats = {}
+    for block in (5, 16, SEQ, 64):
+        be = _text_backend(block, **kw)
+        feats[block] = be.features(be.preprocess(raw))
+    ref = feats[5]
+    assert ref.dtype == np.float32 and ref.shape == (10, be.feat_dim)
+    for block, f in feats.items():
+        assert np.array_equal(ref, f), f"block={block} changed feature bytes"
+
+
+def test_batch_composition_row_local():
+    """A sample's feature bytes survive any batchmates under the canonical
+    batch_size padding (zero rows), exactly like the ResNet path."""
+    raw, _ = text_pool(8, num_classes=4, seq_len=SEQ, vocab=512, seed=1)
+    be = _text_backend(16)
+    x = be.preprocess(raw)
+    together = be.features(x[:4])
+    alone = be.features(
+        np.concatenate([x[:1], np.zeros((3,) + x.shape[1:], x.dtype)]))
+    assert np.array_equal(together[0], alone[0])
+
+
+def test_right_padding_invisible():
+    """Shorter raw rows and pre-padded rows preprocess to the same
+    canonical item, and pad positions never leak into pooled features."""
+    raw, _ = text_pool(6, num_classes=3, seq_len=30, vocab=512, seed=2)
+    padded = np.full((6, SEQ), -1, np.int32)
+    padded[:, :30] = raw
+    be = _text_backend(16)
+    a = be.features(be.preprocess(raw))
+    b = be.features(be.preprocess(padded))
+    assert np.array_equal(a, b)
+
+
+def test_pooling_knobs():
+    raw, _ = text_pool(6, num_classes=3, seq_len=SEQ, vocab=512, seed=3)
+    mean = _text_backend(16, pooling="mean")
+    last = _text_backend(16, pooling="last")
+    fm = mean.features(mean.preprocess(raw))
+    fl = last.features(last.preprocess(raw))
+    assert fm.shape == fl.shape and not np.array_equal(fm, fl)
+    with pytest.raises(ValueError, match="pooling"):
+        TransformerBackend(pooling="max")
+    with pytest.raises(ValueError, match="modality"):
+        TransformerBackend(modality="video")
+
+
+def test_preprocess_validation():
+    be = _text_backend(16)
+    with pytest.raises(ValueError, match="int"):
+        be.preprocess(np.zeros((4, 10), np.float32))
+    with pytest.raises(ValueError, match="out of range"):
+        be.preprocess(np.full((2, 4), 2_000_000, np.int64))
+    with pytest.raises(ValueError, match="tokens"):
+        be.preprocess(np.zeros((4,), np.int32))
+    aud = TransformerBackend(modality="audio", input_dim=8, seq_len=32)
+    with pytest.raises(ValueError, match="frames"):
+        aud.preprocess(np.zeros((4, 32, 5), np.float32))
+
+
+# ------------------------------------------------------------- accounting --
+def test_activation_accounting_flat_in_seq_len():
+    cfg = blockwise.tiny_encoder_config()
+    accts = {S: blockwise.activation_accounting(cfg, 16, S, 128, 128)
+             for S in (512, 2048, 8192)}
+    peaks = [a["peak_activation_bytes"] for a in accts.values()]
+    assert len(set(peaks)) == 1, f"peak activation not flat: {peaks}"
+    # the O(S) state grows, the unchunked peak grows quadratically — the
+    # blockwise forward is what keeps the working set flat
+    unchunked = [a["unchunked_peak_bytes"] for a in accts.values()]
+    assert unchunked[-1] > unchunked[0] * 100
+    assert accts[8192]["state_bytes"] > accts[512]["state_bytes"]
+    assert peaks[0] < unchunked[0]
+
+
+# ------------------------------------------------------------ end to end --
+def _text_config(**kw):
+    kw.setdefault("model_name", "transformer")
+    kw.setdefault("batch_size", 8)
+    kw.setdefault("model_block_size", 16)
+    kw.setdefault("model_seq_len", SEQ)
+    kw.setdefault("strategy", "coreset")
+    return ALServiceConfig(**kw)
+
+
+def test_text_al_replicas_bit_identical():
+    """Full text-AL loop via the config-built transformer backend: push,
+    label, head train, coreset + lc queries — replicas {1,3} select the
+    same keys (benchmark criterion (c), tier-1 sized)."""
+    toks, y = text_pool(60, num_classes=4, seq_len=SEQ, vocab=512, seed=0)
+    picks = {}
+    for reps in (1, 3):
+        srv = ALServer(config=_text_config(replicas=reps))
+        assert isinstance(srv.backend, TransformerBackend)
+        keys = srv.push_data(list(toks))
+        srv.label(keys[:10], list(y[:10]))
+        acc = srv.train_and_eval()
+        assert 0.0 <= acc <= 1.0
+        picks[reps] = {s: srv.query(8, s)["keys"] for s in ("coreset", "lc")}
+    assert picks[1] == picks[3]
+
+
+def test_audio_al_tcp_with_standing_query():
+    """Audio-AL over the TCP client, standing query streaming as the pool
+    grows; every cumulative selection matches the one-shot query."""
+    x, y = audio_pool(48, num_classes=4, n_frames=32, n_mels=8, seed=5)
+    srv = ALServer(config=_text_config(
+        model_modality="audio", model_input_dim=8, model_seq_len=32,
+        model_block_size=8))
+    rpc = serve_tcp(srv)
+    cli = ALClient(url=f"127.0.0.1:{rpc.port}")
+    try:
+        keys = cli.push_data(list(x[:24]))
+        assert len(keys) == 24
+        cli.label(keys[:8], list(y[:8]))
+        assert 0.0 <= cli.train_eval() <= 1.0
+        reg = cli.standing_register(budget=5, strategy="coreset")
+        seen = reg["seq"]
+        cli.push_data(list(x[24:]))
+        r = cli.standing_poll(reg["query_id"], since=seen)
+        assert r["emits"], "no emit after the streamed push"
+        assert r["keys"] == cli.query(5, "coreset")["keys"]
+        cli.standing_cancel(reg["query_id"])
+    finally:
+        cli.close()
+        rpc.stop()
+
+
+def test_yaml_config_drives_transformer_backend():
+    yml = """
+name: TEXT_AL
+active_learning:
+  strategy:
+    type: lc
+  model:
+    name: transformer
+    batch_size: 8
+    block_size: 16
+    seq_len: 48
+    pooling: mean
+    modality: text
+al_worker:
+  replicas: 2
+"""
+    cfg = ALServiceConfig.from_yaml(yml)
+    srv = ALServer(config=cfg)
+    be = srv.backend
+    assert isinstance(be, TransformerBackend)
+    assert (be.block_size, be.seq_len, be.pooling, be.modality) == \
+        (16, 48, "mean", "text")
+    toks, y = text_pool(30, num_classes=3, seq_len=SEQ, vocab=512, seed=7)
+    keys = srv.push_data(list(toks))
+    srv.label(keys[:6], list(y[:6]))
+    srv.train_and_eval()
+    assert len(srv.query(5, "lc")["keys"]) == 5
+
+
+def test_committed_config_examples_build_backends():
+    """The worked configs/ examples stay loadable and build the backend
+    they document."""
+    import pathlib
+    root = pathlib.Path(__file__).resolve().parents[1] / "configs"
+    text = ALServiceConfig.from_yaml(str(root / "text_al.yml"))
+    assert (text.model_name, text.model_modality) == ("transformer", "text")
+    audio = ALServiceConfig.from_yaml(str(root / "audio_al.yml"))
+    be = make_backend(audio.model_name, config=audio)
+    assert isinstance(be, TransformerBackend)
+    assert (be.modality, be.input_dim, be.pooling) == ("audio", 16, "last")
+
+
+def test_make_backend_registry():
+    be = make_backend("transformer", seq_len=16, block_size=4)
+    assert isinstance(be, TransformerBackend)
+    with pytest.raises(KeyError):
+        make_backend("transformer9000")
