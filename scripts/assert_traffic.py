@@ -1,0 +1,109 @@
+"""CI gate for the open-loop traffic harness (tier-2).
+
+``benchmarks/traffic.py`` asserts its invariants in-process; this script
+re-asserts them from the UPLOADED JSON (``--json``), so a regression that
+flattens the latency curve to a single point, breaks the kill-recovery
+bit-identity, stops the injected kills from exercising the recovery path,
+blows the bounded-degradation envelope, or loses rows during an ingest
+kill fails the workflow on the artifact it publishes.
+
+    python scripts/assert_traffic.py BENCH_traffic.json
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+# must match benchmarks.traffic.P99_DEGRADATION_BOUND
+MAX_P99_RATIO = 50.0
+
+
+def parse_derived(derived: str) -> dict:
+    out = {}
+    for part in derived.split(";"):
+        if "=" in part:
+            k, _, v = part.partition("=")
+            out[k] = v
+    return out
+
+
+def main(path: str) -> None:
+    with open(path) as f:
+        doc = json.load(f)
+    rows = {r["name"]: parse_derived(r["derived"]) for r in doc["rows"]}
+    errors = []
+
+    if doc.get("failures", 0):
+        errors.append(f"harness recorded {doc['failures']} in-process "
+                      f"failure(s)")
+
+    # --- the latency curve: >= 2 offered-load levels, each with per-op
+    # percentiles, plus a positive saturation throughput -------------------
+    loads = {n: d for n, d in rows.items()
+             if n.startswith("traffic/load_")}
+    if len(loads) < 2:
+        errors.append(f"only {len(loads)} offered-load row(s) — a curve "
+                      f"needs >= 2 levels")
+    for n, d in sorted(loads.items()):
+        for k in ("offered", "achieved", "p50_query_ms", "p99_query_ms",
+                  "p50_push_ms", "p99_push_ms"):
+            if k not in d:
+                errors.append(f"{n}: missing {k!r} in derived")
+
+    sat = rows.get("traffic/saturation")
+    if sat is None:
+        errors.append("missing benchmark row 'traffic/saturation'")
+    elif float(sat.get("throughput_ops_s", 0)) <= 0:
+        errors.append(f"traffic/saturation: throughput_ops_s="
+                      f"{sat.get('throughput_ops_s')} is not positive")
+
+    # --- graceful degradation under injected worker death -----------------
+    name = "traffic/degradation"
+    d = rows.get(name)
+    if d is None:
+        errors.append(f"missing benchmark row {name!r}")
+    else:
+        if d.get("killed_equals_clean") != "True":
+            errors.append(f"{name}: killed-worker selections no longer "
+                          f"bit-identical to the clean run")
+        if int(d.get("recoveries", 0)) < 1:
+            errors.append(f"{name}: recoveries="
+                          f"{d.get('recoveries')} — the injected kills "
+                          f"never exercised shard recovery")
+        if int(d.get("restarts", 0)) < 2:
+            errors.append(f"{name}: restarts={d.get('restarts')} — "
+                          f"expected the embed AND propose kills to each "
+                          f"restart a lane")
+        ratio = float(d.get("p99_ratio", "inf").rstrip("x"))
+        if ratio > MAX_P99_RATIO:
+            errors.append(f"{name}: p99_ratio={ratio:.1f}x exceeds the "
+                          f"{MAX_P99_RATIO:.0f}x bounded-degradation "
+                          f"envelope")
+
+    # --- kill during ingest drain: zero lost rows -------------------------
+    name = "traffic/ingest_kill"
+    d = rows.get(name)
+    if d is None:
+        errors.append(f"missing benchmark row {name!r}")
+    else:
+        if int(d.get("lost_rows", -1)) != 0:
+            errors.append(f"{name}: lost_rows={d.get('lost_rows')} — "
+                          f"rows went missing under kill-during-ingest")
+        if int(d.get("restarts", 0)) < 1:
+            errors.append(f"{name}: restarts={d.get('restarts')} — the "
+                          f"ingest kill never fired")
+
+    if errors:
+        print("traffic-harness regression:", file=sys.stderr)
+        for e in errors:
+            print(f"  - {e}", file=sys.stderr)
+        sys.exit(1)
+    deg = rows["traffic/degradation"]
+    print(f"traffic harness OK ({len(loads)} load levels, saturation="
+          f"{rows['traffic/saturation']['throughput_ops_s']} ops/s, "
+          f"killed==clean, p99_ratio={deg['p99_ratio']}, "
+          f"lost_rows=0)")
+
+
+if __name__ == "__main__":
+    main(sys.argv[1] if len(sys.argv) > 1 else "BENCH_traffic.json")

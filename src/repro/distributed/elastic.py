@@ -21,8 +21,17 @@ from repro.distributed import partition
 
 def largest_mesh_shape(n_devices: int, model_parallel: int = 1
                        ) -> Tuple[int, int]:
-    """(data, model) using as many devices as divisibility allows."""
-    model = model_parallel
+    """(data, model) using as many devices as divisibility allows.
+
+    ``model_parallel`` is clamped down to the largest divisor of
+    ``n_devices``; both arguments must be >= 1 (0 would divide by zero,
+    negatives would walk the divisor search forever)."""
+    if n_devices < 1:
+        raise ValueError(f"n_devices must be >= 1, got {n_devices}")
+    if model_parallel < 1:
+        raise ValueError(
+            f"model_parallel must be >= 1, got {model_parallel}")
+    model = min(model_parallel, n_devices)
     while n_devices % model != 0:
         model -= 1
     return n_devices // model, model

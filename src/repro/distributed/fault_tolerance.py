@@ -43,11 +43,13 @@ class StragglerMonitor:
             return None
         ratio = duration_s / max(self.ema, 1e-9)
         event = None
-        if self.n > self.warmup and ratio > self.threshold:
+        is_outlier = ratio > self.threshold
+        if is_outlier and self.n > self.warmup:
             event = StragglerEvent(step, duration_s, self.ema, ratio)
             self.events.append(event)
-            # don't poison the EMA with the straggler sample
-        else:
+        if not is_outlier:
+            # outlier samples never fold into the EMA — during warmup they
+            # are merely unreported, not accepted as the new baseline
             self.ema = (1 - self.alpha) * self.ema + self.alpha * duration_s
         return event
 
@@ -80,20 +82,28 @@ class SupervisorReport:
 
 def supervise(train_round: Callable[[int], int], *, total_steps: int,
               latest_step: Callable[[], Optional[int]],
-              max_restarts: int = 10) -> SupervisorReport:
+              max_restarts: int = 10,
+              monitor: Optional[StragglerMonitor] = None) -> SupervisorReport:
     """Run ``train_round(start_step) -> steps_completed`` until
     ``total_steps``, restarting from the last checkpoint on failure.
 
-    ``train_round`` must itself restore state from ``latest_step()``."""
+    ``train_round`` must itself restore state from ``latest_step()``.
+    Pass the ``StragglerMonitor`` the rounds feed their step times to and
+    the report's ``straggler_events`` reflects it (0 without one)."""
     restarts = 0
+
+    def report(final: int) -> SupervisorReport:
+        events = len(monitor.events) if monitor is not None else 0
+        return SupervisorReport(total_steps, restarts, events, final)
+
     while True:
         start = latest_step() or 0
         if start >= total_steps:
-            return SupervisorReport(total_steps, restarts, 0, start)
+            return report(start)
         try:
             reached = train_round(start)
             if reached >= total_steps:
-                return SupervisorReport(total_steps, restarts, 0, reached)
+                return report(reached)
         except SimulatedFailure:
             restarts += 1
             if restarts > max_restarts:

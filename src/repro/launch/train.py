@@ -105,7 +105,7 @@ def run_training(arch: str = "qwen1.5-4b", *, smoke: bool = True,
             return mgr.latest_step()
         n_fail = len(fail_at or [])
         rep = supervise(train_round, total_steps=steps, latest_step=latest,
-                        max_restarts=n_fail + 2)
+                        max_restarts=n_fail + 2, monitor=monitor)
         restarts[0] = rep.restarts
     else:
         train_round(0)

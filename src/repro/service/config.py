@@ -178,6 +178,20 @@ class ALServiceConfig:
     # hard cap on concurrent TCP client connections (one transport worker
     # per live connection; extra clients queue until one disconnects)
     server_workers: int = 16
+    # shard-worker runtime (distributed.worker, replicas > 1): "thread"
+    # runs each shard's rounds on a dedicated supervised lane thread;
+    # "process" additionally pairs each lane with an OS worker process
+    # that executes the registered embed jobs (true process isolation for
+    # the heavy step; closures stay on the lane thread)
+    worker_backend: str = "thread"
+    # a shard task past this wall-clock is presumed a dead worker: the
+    # lane restarts, the shard recovers (re-embed from raw + content
+    # keys), and the task retries
+    worker_timeout_s: float = 30.0
+    # bounded retries after a worker death before the failure propagates
+    worker_retries: int = 2
+    # linear backoff between retries (attempt * backoff seconds)
+    worker_backoff_s: float = 0.05
 
     @classmethod
     def from_dict(cls, d: Dict[str, Any]) -> "ALServiceConfig":
@@ -217,6 +231,10 @@ class ALServiceConfig:
             prefilter_min_rows=int(al.get("prefilter_min_rows", 256)),
             shard_ram_bytes=int(worker.get("shard_ram_bytes", 0)),
             shard_spill_dir=worker.get("shard_spill_dir"),
+            worker_backend=worker.get("backend", "thread"),
+            worker_timeout_s=float(worker.get("timeout_s", 30.0)),
+            worker_retries=int(worker.get("retries", 2)),
+            worker_backoff_s=float(worker.get("backoff_s", 0.05)),
         )
 
     @classmethod

@@ -59,7 +59,10 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 import jax
 import numpy as np
 
+import dataclasses
+
 from repro.core.agent.controller import run_pshea
+from repro.distributed.worker import (PhaseFailureInjector, ShardWorkerPool)
 from repro.core.prefilter import PrefilterConfig, maintain_summary
 from repro.core.selection import (ColumnSpill, KCenterStateCache,
                                   ShardColumns, ShardView, grow_append,
@@ -233,7 +236,13 @@ class ALSession:
         self._columns = [ShardColumns(self._spill)
                          for _ in range(self.replicas)]
         self._index: Dict[str, Tuple[int, int]] = {}  # key -> (shard, row)
-        self._artifact_lock = threading.Lock()
+        # RLock: the worker runtime's on_death recovery hook resets a
+        # shard's columns from INSIDE a refresh (which already holds the
+        # lock on the supervising thread) as well as from query threads
+        self._artifact_lock = threading.RLock()
+        # shard recoveries: worker deaths whose on_death hook reset this
+        # session's columns (the re-embed-from-raw path ran)
+        self.shard_recoveries = 0
         # persisted k-center strategy state (strategy_state_cache): per-
         # shard min-dist vectors delta-extended on push, dropped on retrain
         self._kstate = KCenterStateCache()
@@ -459,6 +468,19 @@ class ALSession:
                 self.labels_version += 1
 
     # --------------------------------------------------------- artifacts --
+    def _recover_shard(self, si: int) -> None:
+        """Worker-death recovery hook (distributed.worker ``on_death``):
+        the shard's in-flight state died with its worker, so drop the
+        shard's artifact columns entirely. The retried round then rebuilds
+        them through ``_feats_for`` — re-embedding from raw + content keys
+        in canonical batches, so the rebuilt bytes (and every later
+        selection) are bit-identical to the no-failure run. The lineage
+        bump ``reset()`` performs also invalidates any persisted k-center
+        state derived from the lost columns."""
+        with self._artifact_lock:
+            self._columns[si % self.replicas].reset()
+            self.shard_recoveries += 1
+
     def _feats_for(self, keys: Sequence[str]) -> np.ndarray:
         """Features for ``keys``, recomputing entries the EmbeddingCache
         evicted (tiny cache_bytes + no spill_dir) from the session's raw
@@ -489,12 +511,10 @@ class ALSession:
             for s in range(0, len(missing), bs):
                 grp = missing[s:s + bs]
                 raw = np.stack([np.asarray(self._raw[k]) for k in grp])
-                x = np.asarray(backend.preprocess(raw))
-                if len(grp) < bs:    # zero-pad to the one canonical shape
-                    x = np.concatenate(
-                        [x, np.zeros((bs - len(grp),) + x.shape[1:],
-                                     x.dtype)])
-                feats = np.asarray(backend.features(x))[:len(grp)]
+                feats = self.server._embed_chunk(
+                    raw, bs, shard_hint=(replica_of(grp[0], self.replicas)
+                                         if self.replicas > 1 else 0),
+                    backend=backend)
                 for k, f in zip(grp, feats):
                     f = np.asarray(f)
                     cache.put(k, f)
@@ -581,7 +601,10 @@ class ALSession:
             col.builds += 1
             return kind
 
-        kinds = replica_map(refresh, work, self.server.shard_executor())
+        kinds = replica_map(
+            refresh, work,
+            self.server.shard_scoped("embed", on_death=self._recover_shard,
+                                     shard_of=lambda i, it: it[0]))
         self.full_builds += sum(k == "full" for k in kinds)
         self.delta_builds += sum(k == "delta" for k in kinds)
         self.probs_refreshes += sum(k == "probs" for k in kinds)
@@ -638,7 +661,9 @@ class ALSession:
             feats = self._feats_for(ks)
             return feats, backend.probs(feats, head)
 
-        parts = replica_map(build, shard_keys, self.server.shard_executor())
+        parts = replica_map(
+            build, shard_keys,
+            self.server.shard_scoped("embed", on_death=self._recover_shard))
         index: Dict[str, Tuple[int, int]] = {}
         for si, ks in enumerate(shard_keys):
             for li, k in enumerate(ks):
@@ -799,7 +824,8 @@ class ALSession:
         idx = np.asarray(strat.select_sharded(
             jax.random.PRNGKey(rng_seed), budget, shards,
             labeled_embeddings=labeled_emb,
-            executor=self.server.shard_executor(),
+            executor=self.server.shard_scoped(
+                "propose", on_death=self._recover_shard),
             prefilter=pf_cfg, state=state))
         return {"keys": [unlabeled[i] for i in idx],
                 "indices": idx.tolist(), "strategy": strategy,
@@ -1109,6 +1135,9 @@ class ALSession:
                         for c in self._columns],
                 },
                 "replicas": self.replicas,
+                # worker deaths recovered by resetting this session's shard
+                # columns (re-embed from raw + content keys on retry)
+                "worker_recoveries": self.shard_recoveries,
                 "ingest_pending": pending,
                 "ingest_batches": self.ingest_batches,
                 # persisted k-center min-dist state (KCenterStateCache):
@@ -1144,20 +1173,26 @@ class ALServer:
                  config_path: Optional[str] = None,
                  backend: Optional[FeatureBackend] = None,
                  fetch_fn: Optional[Callable] = None,
-                 fetch_latency_s: float = 0.0):
+                 fetch_latency_s: float = 0.0,
+                 failure_injector: Optional[PhaseFailureInjector] = None):
         if config is None:
             config = (ALServiceConfig.from_yaml(config_path)
                       if config_path else ALServiceConfig())
         self.config = config
+        # process-backed embed jobs rebuild the backend from config in the
+        # worker process; only valid when OUR backend came from the same
+        # config (a hand-constructed backend object can't be reproduced)
+        self._backend_from_config = backend is None
         self.backend = (backend if backend is not None
                         else make_backend(config.model_name, config=config))
         self.cache = EmbeddingCache(config.cache_bytes,
                                     config.cache_spill_dir)
         self.fetch_fn = fetch_fn or (lambda x: x)
         self.fetch_latency_s = fetch_latency_s
+        self.failure_injector = failure_injector
         self._sessions: Dict[str, ALSession] = {}
         self._sessions_lock = threading.Lock()
-        self._shard_pool: Optional[cf.ThreadPoolExecutor] = None
+        self._shard_runtime: Optional[ShardWorkerPool] = None
         self._shard_pool_lock = threading.Lock()
         # op accounting: pool rows run through the feature extractor
         # (pipeline ingest + evicted-entry recompute; batcher padding rows
@@ -1174,17 +1209,40 @@ class ALServer:
             self.embed_rows += int(rows)
             self.embed_calls += 1
 
-    def shard_executor(self) -> Optional[cf.ThreadPoolExecutor]:
-        """Shared thread pool for per-shard fan-out (artifact builds,
-        per-shard scoring, ingest embedding). Lazy; None at replicas=1."""
+    def shard_runtime(self) -> Optional[ShardWorkerPool]:
+        """The shard-worker runtime (distributed.worker): one supervised
+        lane per replica shard — straggler-timed, failure-injectable,
+        restartable, device-pinned on multi-device hosts. Lazy; None at
+        replicas=1 (the serial path needs no workers)."""
         if self.config.replicas <= 1:
             return None
         with self._shard_pool_lock:
-            if self._shard_pool is None:
-                self._shard_pool = cf.ThreadPoolExecutor(
-                    max_workers=self.config.replicas,
-                    thread_name_prefix="shard")
-            return self._shard_pool
+            if self._shard_runtime is None:
+                cfg = self.config
+                self._shard_runtime = ShardWorkerPool(
+                    cfg.replicas, kind=cfg.worker_backend,
+                    timeout_s=cfg.worker_timeout_s,
+                    max_retries=cfg.worker_retries,
+                    backoff_s=cfg.worker_backoff_s,
+                    injector=self.failure_injector)
+            return self._shard_runtime
+
+    def shard_executor(self):
+        """Back-compat seam: the worker pool duck-types ``executor.map``,
+        so callers that predate the runtime keep working (default phase,
+        no recovery hook)."""
+        return self.shard_runtime()
+
+    def shard_scoped(self, phase: str, on_death: Optional[Callable] = None,
+                     shard_of: Optional[Callable] = None):
+        """Phase-scoped executor facade for ``replica_map`` fan-outs: a
+        worker death during ``phase`` triggers ``on_death(shard)`` (e.g.
+        the session's column-reset recovery) before the bounded retry.
+        None at replicas=1."""
+        rt = self.shard_runtime()
+        if rt is None:
+            return None
+        return rt.scoped(phase, on_death=on_death, shard_of=shard_of)
 
     # ---------------------------------------------------------- sessions --
     def create_session(self, session_id: Optional[str] = None) -> str:
@@ -1255,6 +1313,28 @@ class ALServer:
             batcher.close()
         return pipe.stats()
 
+    def _embed_chunk(self, raw: np.ndarray, bs: int, *, shard_hint: int,
+                     backend: FeatureBackend) -> np.ndarray:
+        """One canonical embed chunk (preprocess, zero-pad to the one
+        ``bs``-row shape, feature forward). On a process-backed worker
+        runtime the chunk ships to the shard's paired worker process as
+        the registered ``embed_batch`` job — the backend there is rebuilt
+        from the SAME config, so the bytes match the in-process path bit
+        for bit; any other configuration computes inline."""
+        rt = self.shard_runtime()
+        if (rt is not None and rt.kind == "process"
+                and self._backend_from_config):
+            feats = rt.run_job(shard_hint, "embed_batch", {
+                "config": dataclasses.asdict(self.config),
+                "raw": raw, "bs": bs})
+            return np.asarray(feats)
+        x = np.asarray(backend.preprocess(raw))
+        n = x.shape[0]
+        if n < bs:           # zero-pad to the one canonical shape
+            x = np.concatenate(
+                [x, np.zeros((bs - n,) + x.shape[1:], x.dtype)])
+        return np.asarray(backend.features(x))[:n]
+
     def _infer_batch(self, stacked: np.ndarray, n_valid: int):
         feats = self.backend.features(stacked)
         self.count_embeds(n_valid)
@@ -1273,7 +1353,11 @@ class ALServer:
         groups = [g for g in groups if g]
         if len(groups) == 1:
             return self._process(groups[0], pipelined=True)
-        executor = self.shard_executor()
+        # ingest-phase fan-out: a worker killed mid-drain restarts and the
+        # group's pipeline retries — cache puts are content-addressed and
+        # idempotent, and the rows append only after every group lands, so
+        # a recovered kill loses nothing
+        executor = self.shard_scoped("ingest")
         per_group = list(executor.map(
             lambda g: self._process(g, pipelined=True), groups))
         # keep the single-pipeline stats shape (one dict per stage): sum
@@ -1350,4 +1434,8 @@ class ALServer:
         s["cache"] = self.cache.stats()
         s["embeds"] = {"rows": self.embed_rows, "calls": self.embed_calls}
         s["sessions"] = len(self.session_ids())
+        rt = self._shard_runtime       # no lazy spin-up just for stats
+        s["workers"] = (rt.stats() if rt is not None else {
+            "backend": "inline", "lanes": 0, "tasks": 0, "restarts": 0,
+            "straggler_events": 0})
         return s

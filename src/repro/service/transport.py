@@ -8,9 +8,15 @@ per-connection ``ctx`` dict (third argument) lets handlers park state that
 must be reclaimed when the connection dies (``on_close(ctx)``).
 
 Connections are served from a bounded thread pool: one worker per LIVE
-connection, so ``max_workers`` is a hard cap on concurrent clients — client
-max_workers+1 queues until another disconnects, it is not interleaved
-per-request. Size it for the expected tenant count.
+connection, so ``max_workers`` is a hard cap on concurrently SERVED
+clients — client max_workers+1 is accepted (the listen backlog is a fixed
+128, independent of the pool size) and queues until another disconnects,
+it is not interleaved per-request. Size the pool for the expected tenant
+count.
+
+Responses echo the request's ``id``, and ``RPCClient.call`` poisons the
+connection on a mid-call timeout: a late response frame from a timed-out
+request can never be mistaken for the answer to a later call.
 """
 from __future__ import annotations
 
@@ -37,7 +43,9 @@ def _default(obj):
 
 def _object_hook(obj):
     if obj.get("__nd__"):
-        return np.frombuffer(obj["b"], dtype=obj["d"]).reshape(obj["s"])
+        # frombuffer returns a READ-ONLY view of the msgpack blob; decoded
+        # payloads must be mutable (backends preprocess in place), so copy
+        return np.frombuffer(obj["b"], dtype=obj["d"]).reshape(obj["s"]).copy()
     return obj
 
 
@@ -89,7 +97,9 @@ class RPCServer:
         self._sock.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
         self._sock.bind((self.host, self.port))
         self.port = self._sock.getsockname()[1]
-        self._sock.listen(self.max_workers)
+        # fixed backlog, decoupled from the worker pool: clients beyond
+        # max_workers must queue at accept, not get connection-refused
+        self._sock.listen(128)
         self._sock.settimeout(0.2)
         self._pool = cf.ThreadPoolExecutor(max_workers=self.max_workers,
                                            thread_name_prefix="rpc")
@@ -124,13 +134,16 @@ class RPCServer:
                     if msg is None:
                         return
                     op = msg.get("op")
+                    rid = msg.get("id")
                     try:
                         fn = self.handlers[op]
                         result = fn(msg.get("payload") or {},
                                     msg.get("session"), ctx)
-                        send_msg(conn, {"ok": True, "result": result})
+                        send_msg(conn, {"ok": True, "id": rid,
+                                        "result": result})
                     except Exception as e:
-                        send_msg(conn, {"ok": False, "error": repr(e)})
+                        send_msg(conn, {"ok": False, "id": rid,
+                                        "error": repr(e)})
         finally:
             with self._conns_lock:
                 self._conns.discard(conn)
@@ -160,22 +173,55 @@ class RPCClient:
     """One connection, serial request/response pairs. ``call`` holds a lock
     around the send+recv pair so multiple threads (e.g. the ALClient's
     async-push I/O thread and the caller's thread) can share the
-    connection without interleaving frames."""
+    connection without interleaving frames.
+
+    Requests carry a monotone ``id`` the server echoes. A ``call`` that
+    times out mid-recv leaves its response frame in flight — the next recv
+    on this socket would read THAT frame, a silent wrong answer — so a
+    timeout POISONS the connection: the socket is closed, the call raises
+    ``ConnectionError``, and every later call fails fast instead of
+    desyncing. Mismatched ids (defense in depth) are dropped, never
+    returned."""
 
     def __init__(self, host: str, port: int, timeout: float = 60.0):
         self.sock = socket.create_connection((host, port), timeout=timeout)
         self._lock = threading.Lock()
+        self._req_id = 0
+        self._poisoned: str = ""
 
     def call(self, op: str, payload: Any = None, session: Any = None):
         with self._lock:
-            send_msg(self.sock, {"op": op, "payload": payload,
-                                 "session": session})
-            resp = recv_msg(self.sock)
+            if self._poisoned:
+                raise ConnectionError(self._poisoned)
+            self._req_id += 1
+            rid = self._req_id
+            try:
+                send_msg(self.sock, {"op": op, "payload": payload,
+                                     "session": session, "id": rid})
+                resp = recv_msg(self.sock)
+                # a frame tagged for an OLDER request can only appear if a
+                # past timeout somehow didn't poison us; drop it
+                while resp is not None and resp.get("id") not in (None, rid):
+                    resp = recv_msg(self.sock)
+            except socket.timeout:
+                self._poison(f"request {rid} ({op}) timed out mid-call; "
+                             "connection closed to avoid response desync")
+                raise ConnectionError(self._poisoned) from None
+            except OSError as e:
+                self._poison(f"connection broken during {op}: {e!r}")
+                raise ConnectionError(self._poisoned) from e
         if resp is None:
             raise ConnectionError("server closed connection")
         if not resp["ok"]:
             raise RuntimeError(f"server error: {resp['error']}")
         return resp["result"]
+
+    def _poison(self, reason: str) -> None:
+        self._poisoned = reason
+        try:
+            self.sock.close()
+        except OSError:
+            pass
 
     def close(self):
         self.sock.close()

@@ -1,0 +1,125 @@
+"""Transport-layer regression tests: the timeout-desync poisoning, the
+writable decoded arrays, and the accept backlog decoupled from the worker
+pool."""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.service.transport import RPCClient, RPCServer
+
+
+def _serve(handlers, max_workers=4):
+    srv = RPCServer(handlers, "127.0.0.1", 0, max_workers=max_workers)
+    srv.start()
+    return srv
+
+
+def test_timeout_mid_call_poisons_connection_no_stale_frame():
+    # Pre-fix behavior: call 1 times out mid-recv, its response frame stays
+    # in flight, and call 2 silently reads THAT frame as its own answer.
+    # Post-fix: call 1 raises ConnectionError (socket closed), and every
+    # later call on the poisoned client fails fast instead of desyncing.
+    def slow(p, s, ctx):
+        time.sleep(0.6)
+        return {"answer": "slow"}
+
+    def fast(p, s, ctx):
+        return {"answer": "fast", "echo": p.get("x")}
+
+    srv = _serve({"slow": slow, "fast": fast})
+    try:
+        cli = RPCClient("127.0.0.1", srv.port, timeout=0.15)
+        with pytest.raises(ConnectionError, match="timed out mid-call"):
+            cli.call("slow")
+        # the stale 'slow' frame must never surface as a later answer
+        with pytest.raises(ConnectionError):
+            cli.call("fast", {"x": 1})
+        cli.close()
+        # a fresh connection is fully functional
+        cli2 = RPCClient("127.0.0.1", srv.port, timeout=5.0)
+        assert cli2.call("fast", {"x": 2})["echo"] == 2
+        assert cli2.call("slow")["answer"] == "slow"
+        cli2.close()
+    finally:
+        srv.stop()
+
+
+def test_response_frames_echo_request_ids():
+    def fast(p, s, ctx):
+        return {"ok": True}
+
+    srv = _serve({"fast": fast})
+    try:
+        cli = RPCClient("127.0.0.1", srv.port, timeout=5.0)
+        cli.call("fast")
+        cli.call("fast")
+        assert cli._req_id == 2       # monotone ids assigned per call
+        cli.close()
+    finally:
+        srv.stop()
+
+
+def test_decoded_arrays_are_writable_server_and_client_side():
+    # pre-fix: np.frombuffer views are read-only and in-place mutation
+    # server-side raised ValueError deep in the handler
+    def mutate(p, s, ctx):
+        x = p["x"]
+        x += 1                        # in-place on the decoded payload
+        return {"x": x}
+
+    srv = _serve({"mutate": mutate})
+    try:
+        cli = RPCClient("127.0.0.1", srv.port, timeout=5.0)
+        sent = np.arange(6, dtype=np.float32).reshape(2, 3)
+        out = cli.call("mutate", {"x": sent})["x"]
+        np.testing.assert_array_equal(out, sent + 1)
+        out += 1                      # client-side decode is writable too
+        np.testing.assert_array_equal(out, sent + 2)
+        cli.close()
+    finally:
+        srv.stop()
+
+
+def test_clients_beyond_max_workers_queue_instead_of_refusing():
+    # the accept backlog is fixed (128), decoupled from max_workers: with a
+    # 1-worker pool, clients 2 and 3 connect fine and are served once the
+    # busy connection frees its worker
+    gate = threading.Event()
+
+    def wait(p, s, ctx):
+        gate.wait(timeout=5.0)
+        return {"served": True}
+
+    def ping(p, s, ctx):
+        return {"served": True}
+
+    srv = _serve({"wait": wait, "ping": ping}, max_workers=1)
+    try:
+        c1 = RPCClient("127.0.0.1", srv.port, timeout=10.0)
+        t = threading.Thread(target=lambda: c1.call("wait"))
+        t.start()
+        time.sleep(0.1)               # c1 occupies the only worker
+        extra = [RPCClient("127.0.0.1", srv.port, timeout=10.0)
+                 for _ in range(3)]   # > max_workers: must not refuse
+        results = []
+
+        def ping_then_close(c):
+            results.append(c.call("ping")["served"])
+            c.close()                 # one worker per LIVE connection:
+            #                           disconnect so the next client runs
+
+        threads = [threading.Thread(target=ping_then_close, args=(c,))
+                   for c in extra]
+        for th in threads:
+            th.start()
+        time.sleep(0.2)
+        gate.set()
+        t.join(timeout=5.0)
+        c1.close()                    # disconnect frees the worker: drain
+        for th in threads:
+            th.join(timeout=9.0)
+        assert results == [True, True, True]
+    finally:
+        srv.stop()
