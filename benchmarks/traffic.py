@@ -8,8 +8,8 @@ push / label / query / standing-poll against a replica-sharded server and
 reports per-op p50/p99 latency plus achieved throughput AS A CURVE over
 offered load, with the saturation point called out.
 
-Two failure drills ride the same harness, asserted in-process and
-re-asserted by CI from the uploaded JSON (scripts/assert_traffic.py):
+Four drills ride the same harness, asserted in-process and re-asserted
+by CI from the uploaded JSON (scripts/assert_traffic.py):
 
   * graceful degradation — a deterministic op sequence runs on twin
     servers, one with shard workers killed mid-round (embed AND propose,
@@ -19,7 +19,17 @@ re-asserted by CI from the uploaded JSON (scripts/assert_traffic.py):
     restarts actually observed and p99 latency bounded vs the clean run;
   * kill-during-ingest — async pushes with a worker killed mid-drain must
     lose ZERO rows (retries re-run the idempotent content-addressed
-    pipeline before rows append).
+    pipeline before rows append) — run UNDER the bounded-ingest cap;
+  * overload — offered load >= 3x the measured saturation against the TCP
+    server with admission control + a capped shed-policy ingest queue:
+    queue memory stays bounded (ingest bytes high-water <= cap, scheduler
+    inflight high-water <= bound), admitted-op p99 stays inside the
+    envelope, per-tenant admitted throughput is fair (Jain >= JAIN_MIN),
+    every shed op carries a positive retry_after_s, and zero acked rows
+    are lost;
+  * admission twin — the same deterministic serial sequence over TCP with
+    admission OFF vs ON (tight bucket + client bounded retry): sheds and
+    retries actually happen, yet selections stay BIT-IDENTICAL.
 
   PYTHONPATH=src python benchmarks/traffic.py --json BENCH_traffic.json --smoke
 """
@@ -29,19 +39,32 @@ import argparse
 import concurrent.futures as cf
 import json
 import sys
+import threading
 import time
 
 import numpy as np
 
 from benchmarks.common import row
 from repro.distributed.worker import PhaseFailureInjector
+from repro.service.client import ALClient, serve_tcp
 from repro.service.config import ALServiceConfig
+from repro.service.errors import ServerOverloaded
 from repro.service.server import ALServer
 
 # p99 under injected worker death must stay within this factor of the
 # clean run (the recovery path is a bounded rebuild, not a meltdown);
 # scripts/assert_traffic.py re-asserts the same bound from the JSON
 P99_DEGRADATION_BOUND = 50.0
+# overload drill envelope: admitted ops (the ones admission let through)
+# must finish within this p99 even at 3x saturation offered — admission
+# keeps the dispatch queue short, so latency stays flat while excess
+# load is shed with retry_after_s instead of queueing without bound
+OVERLOAD_P99_BOUND_MS = 2000.0
+# Jain's fairness index floor on per-tenant admitted throughput
+JAIN_MIN = 0.9
+# bounded-ingest cap for the overload drill (bytes outstanding per
+# session; one 8x8x3 float32 row is 768B)
+OVERLOAD_INGEST_CAP_BYTES = 64 << 10
 
 OP_MIX = [("push", 0.45), ("label", 0.20), ("query", 0.25),
           ("poll", 0.10)]
@@ -155,7 +178,7 @@ def _load_curve(loads, n_ops, tenants, seed):
         "traffic/saturation", 0.0,
         f"throughput_ops_s={sat:.1f};levels={len(loads)};"
         f"loads={'/'.join(f'{ld:g}' for ld in loads)}"))
-    return out
+    return out, sat
 
 
 def _deterministic_ops(srv, sid, keys, seed, n_ops=18):
@@ -218,9 +241,11 @@ def _degradation(seed):
         f"recoveries={recoveries};restarts={restarts}")]
 
 
-def _ingest_kill(seed, n_push=40):
-    """Async pushes with a worker killed mid-drain: zero lost rows."""
-    srv = _make_server(replicas=2)
+def _ingest_kill(seed, n_push=40, cap_rows=8):
+    """Async pushes with a worker killed mid-drain AND the bounded-ingest
+    cap active (block policy): zero lost rows, cap held throughout."""
+    srv = _make_server(replicas=2, ingest_max_rows=cap_rows,
+                       ingest_policy="block")
     sid = srv.create_session("t0")
     srv.shard_runtime().injector = PhaseFailureInjector({"ingest": [0]})
     X = _rows(n_push, seed + 3)
@@ -231,17 +256,200 @@ def _ingest_kill(seed, n_push=40):
     st = srv.stats(session=sid)
     lost = len(uniq) - st["pool"]
     restarts = st["workers"]["restarts"]
+    rows_hw = st["ingest"]["rows_hw"]
     assert lost == 0, f"kill during ingest drain lost {lost} rows"
     assert restarts >= 1, "ingest kill never fired"
+    assert rows_hw <= cap_rows, (
+        f"ingest cap breached under kill: {rows_hw} > {cap_rows}")
     return [row("traffic/ingest_kill", 0.0,
                 f"pushed={len(uniq)};pool={st['pool']};lost_rows={lost};"
-                f"restarts={restarts}")]
+                f"restarts={restarts};rows_hw={rows_hw};"
+                f"cap_rows={cap_rows}")]
+
+
+def _jain(xs):
+    xs = [float(x) for x in xs]
+    denom = len(xs) * sum(x * x for x in xs)
+    return (sum(xs) ** 2 / denom) if denom else 0.0
+
+
+def _overload(seed, sat, tenants, n_ops, clients_per_tenant=4):
+    """Offered load >= 3x saturation against the TCP server with the full
+    overload stack on: admission (per-tenant buckets + inflight bound) and
+    a capped shed-policy ingest queue. Asserts the acceptance criteria
+    in-process; scripts/assert_traffic.py re-asserts them from the JSON."""
+    offered = 3.0 * max(sat, 1.0)
+    rate = max(sat / tenants, 4.0)          # binding per-tenant bucket
+    max_inflight = 16
+    srv = _make_server(replicas=2, admission=True,
+                       admission_max_inflight=max_inflight,
+                       admission_tenant_rate=rate,
+                       admission_tenant_burst=4.0,
+                       ingest_max_bytes=OVERLOAD_INGEST_CAP_BYTES,
+                       ingest_policy="shed")
+    rpc = serve_tcp(srv)
+    sids = [srv.create_session(f"t{i}") for i in range(tenants)]
+    warm = [_warm_tenant(srv, sid, seed + 11 * i)
+            for i, sid in enumerate(sids)]
+    # retries=0: a shed surfaces as ServerOverloaded at the call site, so
+    # the drill can observe every rejection's retry_after_s directly
+    clis = [[ALClient(url=f"127.0.0.1:{rpc.port}", session=sid, retries=0)
+             for _ in range(clients_per_tenant)] for sid in sids]
+    sched = _schedule(n_ops, offered, tenants, seed + 17)
+    fresh = _rows(n_ops, seed + 19)
+    lock = threading.Lock()
+    lat_admitted = []                        # completion - scheduled
+    admitted_by_tenant = [0] * tenants
+    shed_retry_after = []                    # one entry per shed op
+    acked_keys = [set() for _ in range(tenants)]
+
+    def execute(op, t, i, t_sched, t0):
+        cli = clis[t][i % clients_per_tenant]
+        keys, qid = warm[t]
+        try:
+            if op == "push":
+                ticket = cli.push_data([fresh[i]], asynchronous=True)
+                ticket.result(timeout=60)    # server acked the enqueue
+                with lock:
+                    acked_keys[t].update(ticket.keys)
+            elif op == "label":
+                k = keys[i % len(keys)]
+                cli.label([k], [i % 2])
+            elif op == "query":
+                cli.query(4, strategy="mc", rng_seed=i)
+            else:
+                cli.standing_poll(qid)
+        except ServerOverloaded as e:
+            with lock:
+                shed_retry_after.append(float(e.retry_after_s))
+            return
+        with lock:
+            lat_admitted.append(time.perf_counter() - (t0 + t_sched))
+            admitted_by_tenant[t] += 1
+
+    t0 = time.perf_counter()
+    with cf.ThreadPoolExecutor(max_workers=32) as pool:
+        futs = []
+        for i, (t_arr, op, t) in enumerate(sched):
+            now = time.perf_counter() - t0
+            if t_arr > now:
+                time.sleep(t_arr - now)
+            futs.append(pool.submit(execute, op, t, i, t_arr, t0))
+        for f in futs:
+            f.result()
+    wall = time.perf_counter() - t0
+    # drain: flush is itself subject to admission — retry until admitted
+    for t, sid in enumerate(sids):
+        deadline = time.time() + 60
+        while True:
+            try:
+                clis[t][0].flush()
+                break
+            except ServerOverloaded as e:
+                assert time.time() < deadline, "drain flush starved"
+                time.sleep(e.retry_after_s)
+    # ---- acceptance criteria, asserted in-process ----
+    sheds = len(shed_retry_after)
+    assert sheds > 0, "overload drill never shed (not actually overloaded)"
+    retry_ok = all(r > 0 for r in shed_retry_after)
+    assert retry_ok, "a shed op came back without a usable retry_after_s"
+    jain = _jain(admitted_by_tenant)
+    assert jain >= JAIN_MIN, (
+        f"admitted throughput unfair: Jain {jain:.3f} < {JAIN_MIN}"
+        f" (per-tenant {admitted_by_tenant})")
+    p99 = float(np.percentile(np.asarray(lat_admitted) * 1e3, 99))
+    assert p99 <= OVERLOAD_P99_BOUND_MS, (
+        f"admitted-op p99 {p99:.0f}ms outside the "
+        f"{OVERLOAD_P99_BOUND_MS:.0f}ms envelope")
+    adm = rpc.stats()
+    assert adm["inflight_hw"] <= max_inflight, (
+        f"inflight high-water {adm['inflight_hw']} breached the bound")
+    bytes_hw = 0
+    lost = 0
+    for t, sid in enumerate(sids):
+        st = srv.stats(session=sid)
+        bytes_hw = max(bytes_hw, st["ingest"]["bytes_hw"])
+        pool_keys = set(srv.session(sid)._keys)
+        lost += len(acked_keys[t] - pool_keys)
+    assert bytes_hw <= OVERLOAD_INGEST_CAP_BYTES, (
+        f"ingest queue memory unbounded: {bytes_hw} > cap")
+    assert lost == 0, f"overload lost {lost} acked rows"
+    for row_clients in clis:
+        for cli in row_clients:
+            cli.close()
+    rpc.stop()
+    return [row(
+        "traffic/overload", p99 * 1e3,
+        f"offered={offered:.1f};sat={sat:.1f};wall_s={wall:.2f};"
+        f"admitted={sum(admitted_by_tenant)};sheds={sheds};"
+        f"retry_after_all_positive={retry_ok};jain={jain:.4f};"
+        f"jain_min={JAIN_MIN};p99_admitted_ms={p99:.2f};"
+        f"p99_bound_ms={OVERLOAD_P99_BOUND_MS:.0f};"
+        f"inflight_hw={adm['inflight_hw']};max_inflight={max_inflight};"
+        f"ingest_bytes_hw={bytes_hw};"
+        f"ingest_cap_bytes={OVERLOAD_INGEST_CAP_BYTES};"
+        f"acked_rows={sum(len(s) for s in acked_keys)};lost_rows={lost};"
+        f"expired={adm['expired']}")]
+
+
+def _client_ops(cli, keys, seed, n_ops=12):
+    """The deterministic serial sequence of _deterministic_ops, driven
+    through an ALClient (sync pushes -> identical pool states)."""
+    fresh = _rows(n_ops, seed + 2)
+    sels = []
+    for i in range(n_ops):
+        kind = i % 3
+        if kind == 0:
+            cli.push_data([fresh[i]])
+        elif kind == 1:
+            cli.label([keys[i % len(keys)]], [i % 2])
+        else:
+            sels.append(cli.query(4, strategy="coreset",
+                                  rng_seed=i)["keys"])
+    return sels
+
+
+def _admission_twin(seed):
+    """Deterministic twin over TCP: admission OFF vs ON (tight per-tenant
+    bucket, so real sheds happen and the client's bounded retry does real
+    work) — selections must stay bit-identical. Admission decides WHEN an
+    op runs, never WHAT it computes."""
+    results = {}
+    for mode in ("off", "on"):
+        kw = {} if mode == "off" else dict(
+            admission=True, admission_max_inflight=16,
+            admission_tenant_rate=2.0, admission_tenant_burst=1.0)
+        srv = _make_server(replicas=2, **kw)
+        sid = srv.create_session("t0")
+        keys, _ = _warm_tenant(srv, sid, seed)
+        rpc = serve_tcp(srv)
+        cli = ALClient(url=f"127.0.0.1:{rpc.port}", session=sid,
+                       retries=10, retry_jitter_s=0.01)
+        sels = _client_ops(cli, keys, seed)
+        stats = rpc.stats()
+        cli.close()
+        rpc.stop()
+        results[mode] = (sels, stats)
+    sels_off, _ = results["off"]
+    sels_on, st_on = results["on"]
+    identical = sels_off == sels_on
+    sheds, retries = st_on["shed"], st_on["retries"]
+    assert identical, "admission control changed the selections"
+    assert sheds >= 1, "admission-on twin never shed (bucket not binding)"
+    assert retries >= 1, "client retry layer never exercised"
+    return [row(
+        "traffic/admission_twin", 0.0,
+        f"identical={identical};sheds={sheds};retries={retries};"
+        f"queries={len(sels_on)}")]
 
 
 def run(loads=(10.0, 30.0, 60.0), n_ops=150, tenants=3, seed=0):
-    yield from _load_curve(list(loads), n_ops, tenants, seed)
+    curve_rows, sat = _load_curve(list(loads), n_ops, tenants, seed)
+    yield from curve_rows
     yield from _degradation(seed)
     yield from _ingest_kill(seed)
+    yield from _overload(seed, sat, tenants, n_ops)
+    yield from _admission_twin(seed)
 
 
 def main() -> None:

@@ -4,8 +4,11 @@
 re-asserts them from the UPLOADED JSON (``--json``), so a regression that
 flattens the latency curve to a single point, breaks the kill-recovery
 bit-identity, stops the injected kills from exercising the recovery path,
-blows the bounded-degradation envelope, or loses rows during an ingest
-kill fails the workflow on the artifact it publishes.
+blows the bounded-degradation envelope, loses rows during an ingest
+kill, unbounds the overload drill's queue memory, starves a tenant
+(Jain's index), drops the retry_after_s contract from shed ops, or
+breaks the admission-on/off selection bit-identity fails the workflow on
+the artifact it publishes.
 
     python scripts/assert_traffic.py BENCH_traffic.json
 """
@@ -16,6 +19,8 @@ import sys
 
 # must match benchmarks.traffic.P99_DEGRADATION_BOUND
 MAX_P99_RATIO = 50.0
+# must match benchmarks.traffic.JAIN_MIN
+JAIN_MIN = 0.9
 
 
 def parse_derived(derived: str) -> dict:
@@ -92,6 +97,62 @@ def main(path: str) -> None:
         if int(d.get("restarts", 0)) < 1:
             errors.append(f"{name}: restarts={d.get('restarts')} — the "
                           f"ingest kill never fired")
+        if int(d.get("rows_hw", 1 << 60)) > int(d.get("cap_rows", 0)):
+            errors.append(f"{name}: ingest rows high-water "
+                          f"{d.get('rows_hw')} breached the "
+                          f"{d.get('cap_rows')}-row cap under kill")
+
+    # --- overload drill: bounded memory, fair + flat under 3x saturation --
+    name = "traffic/overload"
+    d = rows.get(name)
+    if d is None:
+        errors.append(f"missing benchmark row {name!r}")
+    else:
+        if int(d.get("sheds", 0)) < 1:
+            errors.append(f"{name}: sheds={d.get('sheds')} — the drill "
+                          f"never overloaded the server")
+        if d.get("retry_after_all_positive") != "True":
+            errors.append(f"{name}: a shed op was missing a positive "
+                          f"retry_after_s")
+        if float(d.get("jain", 0)) < JAIN_MIN:
+            errors.append(f"{name}: Jain's index {d.get('jain')} < "
+                          f"{JAIN_MIN} — a tenant was starved")
+        p99 = float(d.get("p99_admitted_ms", "inf"))
+        bound = float(d.get("p99_bound_ms", 0))
+        if p99 > bound:
+            errors.append(f"{name}: admitted-op p99 {p99:.0f}ms outside "
+                          f"the {bound:.0f}ms envelope")
+        if (int(d.get("ingest_bytes_hw", 1 << 60))
+                > int(d.get("ingest_cap_bytes", 0))):
+            errors.append(f"{name}: ingest queue bytes high-water "
+                          f"{d.get('ingest_bytes_hw')} exceeds the cap "
+                          f"{d.get('ingest_cap_bytes')} — queue memory "
+                          f"is unbounded again")
+        if (int(d.get("inflight_hw", 1 << 60))
+                > int(d.get("max_inflight", 0))):
+            errors.append(f"{name}: inflight high-water "
+                          f"{d.get('inflight_hw')} breached the "
+                          f"admission bound {d.get('max_inflight')}")
+        if int(d.get("lost_rows", -1)) != 0:
+            errors.append(f"{name}: lost_rows={d.get('lost_rows')} — "
+                          f"acked rows went missing under overload")
+
+    # --- admission on/off twin: scheduling must not change selections ----
+    name = "traffic/admission_twin"
+    d = rows.get(name)
+    if d is None:
+        errors.append(f"missing benchmark row {name!r}")
+    else:
+        if d.get("identical") != "True":
+            errors.append(f"{name}: selections diverged with admission "
+                          f"control on vs off")
+        if int(d.get("sheds", 0)) < 1:
+            errors.append(f"{name}: sheds={d.get('sheds')} — the "
+                          f"admission-on twin never shed (vacuous "
+                          f"bit-identity)")
+        if int(d.get("retries", 0)) < 1:
+            errors.append(f"{name}: retries={d.get('retries')} — the "
+                          f"client retry layer was never exercised")
 
     if errors:
         print("traffic-harness regression:", file=sys.stderr)
@@ -99,10 +160,12 @@ def main(path: str) -> None:
             print(f"  - {e}", file=sys.stderr)
         sys.exit(1)
     deg = rows["traffic/degradation"]
+    ovl = rows["traffic/overload"]
     print(f"traffic harness OK ({len(loads)} load levels, saturation="
           f"{rows['traffic/saturation']['throughput_ops_s']} ops/s, "
-          f"killed==clean, p99_ratio={deg['p99_ratio']}, "
-          f"lost_rows=0)")
+          f"killed==clean, p99_ratio={deg['p99_ratio']}, lost_rows=0, "
+          f"overload: jain={ovl['jain']} sheds={ovl['sheds']} "
+          f"p99={ovl['p99_admitted_ms']}ms, admission twin identical)")
 
 
 if __name__ == "__main__":

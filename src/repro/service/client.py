@@ -23,17 +23,31 @@ barrier after which every prior push is visible to query/label/stats
 (query and label also take it implicitly server-side). Over TCP the async
 push rides a single-thread I/O executor, so requests stay strictly FIFO
 on the shared connection.
+
+Overload handling: a server running admission control (or a capped
+ingest queue with ``ingest_policy: shed``) answers over-budget requests
+with ``ServerOverloaded`` carrying ``retry_after_s``. Such an op never
+ran server-side, so the client retries it up to ``retries`` times,
+sleeping the server's hint plus deterministic jitter. A
+``ConnectionError`` from a poisoned connection is NEVER retried — the op
+may have executed. ``op_timeout_s`` stamps an absolute deadline into
+every frame so the server sheds the op once the client has stopped
+waiting (``DeadlineExceeded``).
 """
 from __future__ import annotations
 
 import concurrent.futures as cf
+import random
 import threading
+import time
 from typing import List, Optional, Sequence
 
 import numpy as np
 
 from repro.service import transport
+from repro.service.admission import AdmissionConfig
 from repro.service.cache import content_key
+from repro.service.errors import ServerOverloaded
 from repro.service.server import ALServer, PushTicket
 
 
@@ -64,7 +78,8 @@ def serve_tcp(server: ALServer, host: str = "127.0.0.1",
         "push_data_async": lambda p, s, c: {
             "keys": server.push_data(list(p["items"]), session=s,
                                      asynchronous=True).keys},
-        "flush": lambda p, s, c: server.flush(session=s) or {},
+        "flush": lambda p, s, c: server.flush(
+            session=s, timeout=p.get("timeout")) or {},
         "query": lambda p, s, c: server.query(
             int(p["budget"]), p.get("strategy"),
             p.get("target_accuracy"), int(p.get("rng_seed") or 0),
@@ -89,22 +104,44 @@ def serve_tcp(server: ALServer, host: str = "127.0.0.1",
     }
     if max_workers is None:
         max_workers = server.config.server_workers
+    cfg = server.config
+    admission = AdmissionConfig(
+        enabled=bool(cfg.admission),
+        max_inflight=int(cfg.admission_max_inflight),
+        tenant_rate=float(cfg.admission_tenant_rate),
+        tenant_burst=float(cfg.admission_tenant_burst))
     rpc = transport.RPCServer(handlers, host, port, max_workers=max_workers,
-                              on_close=on_close)
+                              on_close=on_close,
+                              admission=admission,
+                              fairness_weights=cfg.fairness_weights,
+                              idle_timeout_s=cfg.idle_timeout_s,
+                              send_timeout_s=cfg.send_timeout_s)
     rpc.start()
+    # let ALServer.stats() report the transport's admission counters
+    server._transport_stats = rpc.stats
     return rpc
 
 
 class ALClient:
     def __init__(self, local: Optional[ALServer] = None,
                  url: Optional[str] = None,
-                 session: Optional[str] = None):
+                 session: Optional[str] = None,
+                 retries: int = 2,
+                 retry_jitter_s: float = 0.05,
+                 op_timeout_s: Optional[float] = None):
         assert (local is None) != (url is None), "pass local= xor url="
         self._local = local
         self._rpc = None
         self._io: Optional[cf.ThreadPoolExecutor] = None
         self._io_lock = threading.Lock()
         self._owns_session = False
+        # bounded retry on ServerOverloaded ONLY (the op never ran; see
+        # module docstring). Deterministic jitter rng: seeded, not wall-
+        # clock — two same-seed runs sleep identically
+        self.retries = max(int(retries), 0)
+        self.retry_jitter_s = float(retry_jitter_s)
+        self.op_timeout_s = op_timeout_s
+        self._jitter = random.Random(0xA1AA5)
         if url:
             host, port = url.rsplit(":", 1)
             self._rpc = transport.RPCClient(host, int(port))
@@ -116,15 +153,50 @@ class ALClient:
     def session(self) -> Optional[str]:
         return self._session
 
+    def _rpc_retrying(self, op: str, payload, session):
+        """One logical RPC: stamp the deadline, retry ServerOverloaded
+        sheds up to ``retries`` times honoring the server's
+        ``retry_after_s`` hint (+ jitter). Anything else — including
+        ConnectionError from a poisoned connection — propagates on the
+        first raise; those ops may have executed server-side."""
+        deadline = (time.time() + self.op_timeout_s
+                    if self.op_timeout_s else None)
+        attempt = 0
+        while True:
+            try:
+                return self._rpc.call(op, payload, session=session,
+                                      deadline=deadline, attempt=attempt)
+            except ServerOverloaded as e:
+                if attempt >= self.retries:
+                    raise
+                attempt += 1
+                time.sleep(e.retry_after_s
+                           + self._jitter.random() * self.retry_jitter_s)
+
+    def _local_retrying(self, fn, *args, **kwargs):
+        """Same bounded retry for the in-process path (a shed ingest
+        enqueue raises ServerOverloaded there too)."""
+        attempt = 0
+        while True:
+            try:
+                return fn(*args, **kwargs)
+            except ServerOverloaded as e:
+                if attempt >= self.retries:
+                    raise
+                attempt += 1
+                time.sleep(e.retry_after_s
+                           + self._jitter.random() * self.retry_jitter_s)
+
     def _call(self, op: str, payload=None, session=None):
         """One RPC round trip. Once an async push exists, every op rides
         the same single-thread executor so the shared socket sees strictly
         FIFO request/response pairs (a flush can never overtake a push
-        that was issued before it)."""
+        that was issued before it). Retries happen INSIDE the executor
+        slot, so a retried push still cannot be overtaken by a later op."""
         if self._io is not None:
-            return self._io.submit(self._rpc.call, op, payload,
+            return self._io.submit(self._rpc_retrying, op, payload,
                                    session).result()
-        return self._rpc.call(op, payload, session=session)
+        return self._rpc_retrying(op, payload, session)
 
     def open_session(self) -> str:
         """Claim a fresh isolated session and address it from now on."""
@@ -156,8 +228,9 @@ class ALClient:
         (or any query/label) is the barrier after which the rows are
         visible."""
         if self._local is not None:
-            return self._local.push_data(data_list, session=self._session,
-                                         asynchronous=asynchronous)
+            return self._local_retrying(
+                self._local.push_data, data_list, session=self._session,
+                asynchronous=asynchronous)
         items = [np.asarray(d) for d in data_list]
         if not asynchronous:
             return self._call("push_data", {"items": items},
@@ -166,16 +239,21 @@ class ALClient:
             if self._io is None:
                 self._io = cf.ThreadPoolExecutor(
                     max_workers=1, thread_name_prefix="alc-io")
-        fut = self._io.submit(self._rpc.call, "push_data_async",
+        # a shed enqueue retries inside the I/O slot; only after the
+        # bounded retries are exhausted does the ticket fail (with
+        # ServerOverloaded — retryable, nothing was enqueued)
+        fut = self._io.submit(self._rpc_retrying, "push_data_async",
                               {"items": items}, self._session)
         return PushTicket([content_key(it) for it in items], fut)
 
-    def flush(self) -> None:
+    def flush(self, timeout: Optional[float] = None) -> None:
         """Barrier: every ``push_data(asynchronous=True)`` issued before
-        this call is embedded and visible to query/label/stats."""
+        this call is embedded and visible to query/label/stats.
+        ``timeout=`` raises ``TimeoutError`` once the deadline passes with
+        the backlog intact (flush again to keep waiting)."""
         if self._local is not None:
-            return self._local.flush(session=self._session)
-        self._call("flush", session=self._session)
+            return self._local.flush(session=self._session, timeout=timeout)
+        self._call("flush", {"timeout": timeout}, session=self._session)
 
     def query(self, budget: int, strategy: Optional[str] = None,
               target_accuracy: Optional[float] = None,

@@ -175,9 +175,39 @@ class ALServiceConfig:
     # spill file directory (default: a per-session dir under the system
     # tempdir, removed on session close)
     shard_spill_dir: Optional[str] = None
-    # hard cap on concurrent TCP client connections (one transport worker
-    # per live connection; extra clients queue until one disconnects)
+    # handler threads shared across ALL connections (frame-level dispatch:
+    # idle connections cost nothing; extra clients queue, never refused)
     server_workers: int = 16
+    # -- overload-safe serving (transport admission layer) ----------------
+    # False (default) = admit everything: the bit-identity oracle the
+    # overload drill twins against. True = enforce the inflight bound and
+    # per-tenant token buckets; rejected frames carry retry_after_s
+    admission: bool = False
+    # server-wide bound on admitted-but-unfinished frames (queued +
+    # executing across all tenants)
+    admission_max_inflight: int = 64
+    # per-tenant token bucket: sustained ops/s (<= 0 disables the bucket
+    # check) and burst allowance
+    admission_tenant_rate: float = 0.0
+    admission_tenant_burst: float = 8.0
+    # per-tenant WFQ weights (session id -> relative share; default 1.0)
+    fairness_weights: Optional[Dict[str, float]] = None
+    # close an accepted connection silent for this long with nothing
+    # queued or executing (half-open client reclamation; 0 = never)
+    idle_timeout_s: float = 0.0
+    # a response send stalled this long (stopped-reading client) closes
+    # the connection instead of wedging a handler thread (0 = never)
+    send_timeout_s: float = 30.0
+    # -- bounded async ingest ---------------------------------------------
+    # caps on rows/bytes outstanding in a session's ingest queue (enqueue
+    # until integration); 0 = unbounded. An oversize single push is still
+    # admitted when nothing is outstanding
+    ingest_max_rows: int = 0
+    ingest_max_bytes: int = 0
+    # at the cap: "block" = backpressure the producer until the worker
+    # drains; "shed" = raise ServerOverloaded (retryable; the TCP
+    # PushTicket fails with it, nothing was enqueued)
+    ingest_policy: str = "block"
     # shard-worker runtime (distributed.worker, replicas > 1): "thread"
     # runs each shard's rounds on a dedicated supervised lane thread;
     # "process" additionally pairs each lane with an OS worker process
@@ -199,6 +229,10 @@ class ALServiceConfig:
         strat = (al.get("strategy", {}) or {})
         model = (al.get("model", {}) or {})
         worker = d.get("al_worker", {}) or {}
+        adm = worker.get("admission", {}) or {}
+        weights = adm.get("weights") or None
+        if weights is not None:
+            weights = {str(k): float(v) for k, v in weights.items()}
         return cls(
             name=d.get("name", "AL_SERVICE"),
             version=str(d.get("version", "0.1")),
@@ -235,6 +269,16 @@ class ALServiceConfig:
             worker_timeout_s=float(worker.get("timeout_s", 30.0)),
             worker_retries=int(worker.get("retries", 2)),
             worker_backoff_s=float(worker.get("backoff_s", 0.05)),
+            admission=bool(adm.get("enabled", False)),
+            admission_max_inflight=int(adm.get("max_inflight", 64)),
+            admission_tenant_rate=float(adm.get("tenant_rate", 0.0)),
+            admission_tenant_burst=float(adm.get("tenant_burst", 8.0)),
+            fairness_weights=weights,
+            idle_timeout_s=float(worker.get("idle_timeout_s", 0.0)),
+            send_timeout_s=float(worker.get("send_timeout_s", 30.0)),
+            ingest_max_rows=int(worker.get("ingest_max_rows", 0)),
+            ingest_max_bytes=int(worker.get("ingest_max_bytes", 0)),
+            ingest_policy=worker.get("ingest_policy", "block"),
         )
 
     @classmethod

@@ -72,6 +72,7 @@ from repro.service.backends import FeatureBackend, HeadState, make_backend
 from repro.service.batcher import DynamicBatcher
 from repro.service.cache import EmbeddingCache, content_key
 from repro.service.config import ALServiceConfig
+from repro.service.errors import ServerOverloaded
 from repro.service.pipeline import Stage, StagePipeline
 
 DEFAULT_SESSION = "default"
@@ -265,6 +266,16 @@ class ALSession:
         self._ingest_thread: Optional[threading.Thread] = None
         self._ingest_stop = False
         self._ingest_error: Optional[BaseException] = None
+        # bounded-ingest accounting (config ingest_max_rows/_bytes; 0 =
+        # unbounded). rows/bytes span enqueue -> batch INTEGRATED, so the
+        # cap bounds worker-held memory too, not just the queue
+        self._ingest_rows = 0
+        self._ingest_bytes = 0
+        self._ingest_rows_hw = 0
+        self._ingest_bytes_hw = 0
+        self._ingest_depth_hw = 0
+        self._ingest_shed = 0
+        self._ingest_drain_ema_s = 0.05   # smoothed per-batch drain time
         # drained batches; pool_version bumps once per drained batch THAT
         # APPENDS NEW ROWS (all-duplicate or failed batches drain without
         # a bump), so pool_version <= ingest_batches always
@@ -320,11 +331,45 @@ class ALSession:
     def _push_async(self, items: Sequence[np.ndarray]) -> PushTicket:
         items = [np.asarray(it) for it in items]
         keys = [content_key(it) for it in items]
+        rows = len(items)
+        nbytes = sum(int(it.nbytes) for it in items)
+        cfg = self.server.config
+        policy = cfg.ingest_policy
+        if policy not in ("block", "shed"):
+            raise ValueError(f"ingest_policy must be 'block' or 'shed', "
+                             f"got {policy!r}")
         fut: cf.Future = cf.Future()
         with self._ingest_cv:
             if self._ingest_stop:
                 raise RuntimeError(f"session {self.session_id!r} is closed")
+            while self._ingest_over_cap(rows, nbytes):
+                if policy == "shed":
+                    # nothing was enqueued: the push is cleanly retryable
+                    self._ingest_shed += 1
+                    raise ServerOverloaded(
+                        self._ingest_retry_after(),
+                        f"ingest queue full ({self._ingest_rows} rows / "
+                        f"{self._ingest_bytes} bytes outstanding); "
+                        f"retry after the worker drains")
+                # block: backpressure the producer until the worker drains
+                t = self._ingest_thread
+                if t is not None and not t.is_alive():
+                    raise RuntimeError(
+                        "ingest worker died with the queue at capacity; "
+                        "the session cannot drain")
+                self._ingest_cv.wait(timeout=0.1)
+                if self._ingest_stop:
+                    raise RuntimeError(
+                        f"session {self.session_id!r} is closed")
+            self._ingest_rows += rows
+            self._ingest_bytes += nbytes
+            self._ingest_rows_hw = max(self._ingest_rows_hw,
+                                       self._ingest_rows)
+            self._ingest_bytes_hw = max(self._ingest_bytes_hw,
+                                        self._ingest_bytes)
             self._ingest_queue.append((keys, items, fut))
+            self._ingest_depth_hw = max(self._ingest_depth_hw,
+                                        len(self._ingest_queue))
             if self._ingest_thread is None:
                 self._ingest_thread = threading.Thread(
                     target=self._ingest_loop, daemon=True,
@@ -332,6 +377,30 @@ class ALSession:
                 self._ingest_thread.start()
             self._ingest_cv.notify_all()
         return PushTicket(keys, fut, worker_alive=self._ingest_alive)
+
+    def _ingest_over_cap(self, rows: int, nbytes: int) -> bool:
+        """True when admitting (rows, nbytes) would exceed a configured
+        cap. An oversize single push is still admitted once nothing is
+        outstanding — it could otherwise never run. Caller holds
+        ``_ingest_cv``."""
+        if self._ingest_rows == 0 and self._ingest_bytes == 0:
+            return False
+        cfg = self.server.config
+        max_rows = int(cfg.ingest_max_rows)
+        max_bytes = int(cfg.ingest_max_bytes)
+        return ((max_rows > 0 and self._ingest_rows + rows > max_rows)
+                or (max_bytes > 0
+                    and self._ingest_bytes + nbytes > max_bytes))
+
+    def _ingest_retry_after(self) -> float:
+        """Shed-push retry hint: time for the worker to drain the current
+        backlog, from the smoothed per-batch drain time. Caller holds
+        ``_ingest_cv``."""
+        batches = (len(self._ingest_queue)
+                   / max(self.server.config.ingest_batch, 1)
+                   + (1 if self._ingest_busy else 0))
+        return min(max(self._ingest_drain_ema_s * (batches + 1.0), 0.01),
+                   5.0)
 
     def _ingest_alive(self) -> bool:
         """Liveness probe for PushTicket: a worker that exited with this
@@ -349,6 +418,7 @@ class ALSession:
                 batch = self._ingest_queue[:self.server.config.ingest_batch]
                 del self._ingest_queue[:len(batch)]
                 self._ingest_busy = True
+            t_drain = time.monotonic()
             err: Optional[BaseException] = None
             try:
                 self._integrate(batch)
@@ -380,6 +450,18 @@ class ALSession:
             with self._ingest_cv:
                 self._ingest_busy = False
                 self.ingest_batches += 1
+                # batch fully integrated (or failed): release its rows/
+                # bytes from the cap and wake any blocked producer
+                self._ingest_rows = max(
+                    self._ingest_rows
+                    - sum(len(keys) for keys, _, _ in batch), 0)
+                self._ingest_bytes = max(
+                    self._ingest_bytes
+                    - sum(int(it.nbytes) for _, items, _ in batch
+                          for it in items), 0)
+                dt = time.monotonic() - t_drain
+                self._ingest_drain_ema_s += 0.2 * (dt
+                                                   - self._ingest_drain_ema_s)
                 if err is not None:
                     self._ingest_error = err
                 self._ingest_cv.notify_all()
@@ -404,22 +486,37 @@ class ALSession:
                 [k for keys, _, _ in batch for k in keys],
                 [it for _, items, _ in batch for it in items])
 
-    def flush(self) -> None:
+    def flush(self, timeout: Optional[float] = None) -> None:
         """Ingest barrier: returns once every previously queued async push
         has been embedded and appended to the pool. label/query/sync-push
         call this on entry, so they linearize after pending ingests. A
         failed ingest re-raises here (once), and a DEAD worker with work
         still pending raises instead of waiting on a drain that can never
-        happen (same fail-fast contract as ``PushTicket.result``)."""
+        happen (same fail-fast contract as ``PushTicket.result``).
+
+        ``timeout`` bounds the wait: a queue not drained within it raises
+        ``TimeoutError`` (like ``PushTicket.result``) with the backlog
+        still intact — flush again to keep waiting; no rows are lost."""
         if self._ingest_thread is None:
             return
+        deadline = (None if timeout is None
+                    else time.monotonic() + float(timeout))
         with self._ingest_cv:
             while self._ingest_queue or self._ingest_busy:
                 if not self._ingest_thread.is_alive():
                     raise RuntimeError(
                         "ingest worker died with pushes pending; the "
                         "session cannot drain its queue")
-                self._ingest_cv.wait(timeout=0.1)
+                wait = 0.1
+                if deadline is not None:
+                    remaining = deadline - time.monotonic()
+                    if remaining <= 0:
+                        raise TimeoutError(
+                            f"flush(): ingest queue not drained within "
+                            f"{timeout}s ({len(self._ingest_queue)} pushes "
+                            f"still pending)")
+                    wait = min(wait, remaining)
+                self._ingest_cv.wait(timeout=wait)
             if self._ingest_error is not None:
                 err, self._ingest_error = self._ingest_error, None
                 raise RuntimeError("asynchronous ingest failed") from err
@@ -1104,6 +1201,18 @@ class ALSession:
         with self._ingest_cv:
             pending = len(self._ingest_queue) + (1 if self._ingest_busy
                                                  else 0)
+            ingest = {
+                "pending": pending,
+                "rows": self._ingest_rows,
+                "bytes": self._ingest_bytes,
+                "rows_hw": self._ingest_rows_hw,
+                "bytes_hw": self._ingest_bytes_hw,
+                "depth_hw": self._ingest_depth_hw,
+                "shed": self._ingest_shed,
+                "policy": self.server.config.ingest_policy,
+                "max_rows": self.server.config.ingest_max_rows,
+                "max_bytes": self.server.config.ingest_max_bytes,
+            }
         return {"pool": len(self._keys), "labeled": len(self._labeled_keys),
                 "pool_version": self.pool_version,
                 "head_version": self.head_version,
@@ -1140,6 +1249,9 @@ class ALSession:
                 "worker_recoveries": self.shard_recoveries,
                 "ingest_pending": pending,
                 "ingest_batches": self.ingest_batches,
+                # bounded-ingest observability: outstanding rows/bytes,
+                # high-waters, and the shed counter (policy == "shed")
+                "ingest": ingest,
                 # persisted k-center min-dist state (KCenterStateCache):
                 # rebuilds = from-scratch folds, extends = O(delta-row)
                 # appends, center_extends = O(new-center) folds over old
@@ -1202,6 +1314,9 @@ class ALServer:
         self.embed_rows = 0
         self.embed_calls = 0
         self._embed_lock = threading.Lock()
+        # serve_tcp points this at RPCServer.stats so stats() can report
+        # admission/fairness counters; None when served in-process
+        self._transport_stats: Optional[Callable[[], dict]] = None
         self.create_session(DEFAULT_SESSION)
 
     def count_embeds(self, rows: int) -> None:
@@ -1388,8 +1503,9 @@ class ALServer:
         return self.session(session).push_data(items, pipelined=pipelined,
                                                asynchronous=asynchronous)
 
-    def flush(self, session: Optional[str] = None) -> None:
-        return self.session(session).flush()
+    def flush(self, session: Optional[str] = None,
+              timeout: Optional[float] = None) -> None:
+        return self.session(session).flush(timeout=timeout)
 
     def attach_oracle(self, oracle: Callable[[Sequence[str]], Sequence[int]],
                       eval_x: np.ndarray, eval_y: np.ndarray,
@@ -1438,4 +1554,8 @@ class ALServer:
         s["workers"] = (rt.stats() if rt is not None else {
             "backend": "inline", "lanes": 0, "tasks": 0, "restarts": 0,
             "straggler_events": 0})
+        # transport admission/fairness counters (serve_tcp wires this;
+        # absent/in-process -> a disabled placeholder, same shape)
+        ts = self._transport_stats
+        s["admission"] = (ts() if ts is not None else {"enabled": False})
         return s

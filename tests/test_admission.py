@@ -1,0 +1,579 @@
+"""Overload-safe serving: admission control, per-tenant weighted fair
+queueing, deadline propagation, bounded ingest, and client retry — unit
+tests against a fake clock plus end-to-end TCP drills, and (hypothesis,
+slow lane) scheduler invariants under random per-tenant interleavings
+with a serial-replay bit-identity oracle."""
+import random
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.data.synthetic import image_pool
+from repro.service.admission import (AdmissionConfig, FrameScheduler,
+                                     TokenBucket, attach_stream)
+from repro.service.backends import MLPBackend
+from repro.service.client import ALClient, serve_tcp
+from repro.service.config import ALServiceConfig
+from repro.service.errors import DeadlineExceeded, ServerOverloaded
+from repro.service.server import ALServer
+from repro.service.transport import RPCClient, RPCServer
+
+
+class _Stream:
+    def __init__(self):
+        attach_stream(self)
+
+
+class _Clock:
+    def __init__(self, t=0.0):
+        self.t = t
+
+    def __call__(self):
+        return self.t
+
+
+def _mlp_server(**cfg):
+    return ALServer(ALServiceConfig(batch_size=16, **cfg),
+                    backend=MLPBackend(in_dim=192, feat_dim=32))
+
+
+# ------------------------------------------------------- token bucket --
+def test_token_bucket_rate_burst_and_exact_wait():
+    clk = _Clock()
+    b = TokenBucket(rate=2.0, burst=3.0, clock=clk)
+    assert all(b.try_take()[0] for _ in range(3))    # burst spends
+    ok, wait = b.try_take()
+    assert not ok and wait == pytest.approx(0.5)     # 1 token at 2/s
+    clk.t += 0.25
+    ok, wait = b.try_take()
+    assert not ok and wait == pytest.approx(0.25)    # accrual is exact
+    clk.t += 0.25
+    assert b.try_take()[0]
+    clk.t += 100.0
+    b.try_take()
+    assert b.tokens <= b.burst                       # banked at burst cap
+
+
+def test_token_bucket_zero_rate_never_admits_after_burst():
+    b = TokenBucket(rate=0.0, burst=1.0, clock=_Clock())
+    assert b.try_take()[0]
+    ok, wait = b.try_take()
+    assert not ok and wait > 0
+
+
+# ------------------------------------------- scheduler: admission -----
+def test_inflight_bound_sheds_with_retry_after_and_frees_on_done():
+    sched = FrameScheduler(AdmissionConfig(enabled=True, max_inflight=2))
+    s = _Stream()
+    assert sched.submit(s, "a", {"op": "x"})[0] == "admitted"
+    assert sched.submit(s, "a", {"op": "x"})[0] == "admitted"
+    verdict, code, retry = sched.submit(s, "a", {"op": "x"})
+    assert (verdict, code) == ("shed", "overloaded") and retry > 0
+    item = sched.next(timeout=0)
+    sched.done(item[0], 0.01)                        # slot freed
+    assert sched.submit(s, "a", {"op": "x"})[0] == "admitted"
+    st = sched.stats()
+    assert st["admitted"] == 3 and st["shed"] == 1
+    assert st["inflight_hw"] == 2
+
+
+def test_tenant_bucket_shed_carries_exact_wait():
+    clk = _Clock()
+    sched = FrameScheduler(
+        AdmissionConfig(enabled=True, max_inflight=100,
+                        tenant_rate=1.0, tenant_burst=1.0), clock=clk)
+    s = _Stream()
+    assert sched.submit(s, "a", {})[0] == "admitted"
+    verdict, code, retry = sched.submit(s, "a", {})
+    assert (verdict, code) == ("shed", "overloaded")
+    assert retry == pytest.approx(1.0)               # 1 token at 1/s
+    # buckets are per-tenant: tenant b is untouched by a's spend
+    assert sched.submit(_Stream(), "b", {})[0] == "admitted"
+
+
+def test_admission_disabled_never_sheds():
+    sched = FrameScheduler(AdmissionConfig(enabled=False, max_inflight=1,
+                                           tenant_rate=0.001))
+    s = _Stream()
+    for _ in range(50):
+        assert sched.submit(s, "a", {})[0] == "admitted"
+    assert sched.stats()["shed"] == 0
+
+
+def test_deadline_shed_is_independent_of_admission():
+    wall = _Clock(100.0)
+    sched = FrameScheduler(AdmissionConfig(enabled=False), wall=wall)
+    s = _Stream()
+    verdict, code, _ = sched.submit(s, "a", {"deadline": 99.0})
+    assert (verdict, code) == ("shed", "deadline")
+    st = sched.stats()
+    assert st["expired"] == 1 and st["shed"] == 1
+    assert sched.submit(s, "a", {"deadline": 101.0})[0] == "admitted"
+
+
+def test_retry_counter_tracks_attempt_frames():
+    sched = FrameScheduler()
+    s = _Stream()
+    sched.submit(s, "a", {"attempt": 1})
+    sched.submit(s, "a", {})
+    st = sched.stats()
+    assert st["retries"] == 1 and st["admitted"] == 2
+
+
+# ------------------------------------------- scheduler: fairness ------
+def _drain_counts(sched, n):
+    served = []
+    for _ in range(n):
+        item = sched.next(timeout=0)
+        if item is None:
+            break
+        served.append(item[1])
+        sched.done(item[0], 0.0, control=item[3])
+    return served
+
+
+def test_wfq_weight_shares_are_exact():
+    sched = FrameScheduler(weights={"heavy": 3.0, "light": 1.0})
+    sa, sb = _Stream(), _Stream()
+    for _ in range(40):
+        sched.submit(sa, "heavy", {})
+        sched.submit(sb, "light", {})
+    served = _drain_counts(sched, 40)
+    # stride scheduling: heavy gets exactly 3 of every 4 slots
+    assert served.count("heavy") == 30
+    assert served.count("light") == 10
+
+
+def test_equal_weights_interleave_no_starvation():
+    sched = FrameScheduler()
+    streams = {t: _Stream() for t in "abc"}
+    for _ in range(30):
+        for t, s in streams.items():
+            sched.submit(s, t, {})
+    served = _drain_counts(sched, 90)
+    # any 6-slot window holds every tenant: nobody waits a full rotation
+    for i in range(0, 84):
+        assert set(served[i:i + 6]) == set("abc")
+
+
+def test_idle_tenant_banks_no_credit():
+    sched = FrameScheduler()
+    sa, sb = _Stream(), _Stream()
+    for _ in range(50):
+        sched.submit(sa, "busy", {})
+    _drain_counts(sched, 50)                         # busy runs alone
+    # idle tenant activates: it resumes at the current virtual time and
+    # must NOT burst ahead on banked credit — slots alternate
+    for _ in range(10):
+        sched.submit(sa, "busy", {})
+        sched.submit(sb, "idle", {})
+    served = _drain_counts(sched, 20)
+    first_half = served[:10]
+    assert 4 <= first_half.count("idle") <= 6
+
+
+def test_per_stream_fifo_one_inflight_at_a_time():
+    sched = FrameScheduler()
+    s = _Stream()
+    for i in range(5):
+        sched.submit(s, "a", {"seq": i})
+    first = sched.next(timeout=0)
+    assert first[2]["seq"] == 0
+    # stream is inflight: its later frames are not offered yet
+    assert sched.next(timeout=0) is None
+    sched.done(s, 0.0)
+    assert sched.next(timeout=0)[2]["seq"] == 1
+
+
+def test_control_entries_bypass_admission_but_keep_fifo():
+    sched = FrameScheduler(AdmissionConfig(enabled=True, max_inflight=1))
+    s = _Stream()
+    assert sched.submit(s, "a", {"id": 1})[0] == "admitted"
+    assert sched.submit(s, "a", {"id": 2})[0] == "shed"
+    assert sched.submit_control(s, "a", {"resp": 2})
+    a = sched.next(timeout=0)
+    assert a[2]["id"] == 1 and not a[3]
+    sched.done(s, 0.0)
+    b = sched.next(timeout=0)                        # shed notice after
+    assert b[2] == {"resp": 2} and b[3]
+    sched.done(s, 0.0, control=True)
+    assert sched.stats()["inflight"] == 0
+
+
+def test_drop_stream_releases_inflight_slots():
+    sched = FrameScheduler(AdmissionConfig(enabled=True, max_inflight=2))
+    s = _Stream()
+    sched.submit(s, "a", {})
+    sched.submit(s, "a", {})
+    assert sched.submit(_Stream(), "b", {})[0] == "shed"
+    sched.drop_stream(s)                             # conn died
+    assert sched.submit(_Stream(), "b", {})[0] == "admitted"
+
+
+def test_cancel_pending_returns_everything_and_stops_admission():
+    sched = FrameScheduler()
+    s1, s2 = _Stream(), _Stream()
+    sched.submit(s1, "a", {"id": 1})
+    sched.submit(s2, "b", {"id": 2})
+    sched.submit_control(s2, "b", {"resp": 9})
+    out = sched.cancel_pending()
+    assert sorted(p.get("id", 9) for _, _, p, _ in out) == [1, 2, 9]
+    assert sched.submit(s1, "a", {})[0] == "shed"
+    assert sched.submit(s1, "a", {})[1] == "shutdown"
+    assert sched.stats()["inflight"] == 0
+
+
+def test_scheduler_random_interleavings_keep_fifo_and_drain(seed=0):
+    """Seeded smoke version of the slow hypothesis invariant test: random
+    per-tenant submissions with interleaved serving keep per-stream FIFO
+    order and every admitted frame is eventually served."""
+    rng = random.Random(seed)
+    for trial in range(10):
+        sched = FrameScheduler(
+            weights={t: rng.choice([1.0, 2.0]) for t in "abcd"})
+        streams = {t: _Stream() for t in "abcd"}
+        submitted = {t: [] for t in "abcd"}
+        served = {t: [] for t in "abcd"}
+        seq = 0
+        inflight = []
+        for _ in range(rng.randrange(50, 150)):
+            if inflight and rng.random() < 0.4:
+                stream, control = inflight.pop(rng.randrange(len(inflight)))
+                sched.done(stream, 0.0, control=control)
+            t = rng.choice("abcd")
+            sched.submit(streams[t], t, {"seq": seq})
+            submitted[t].append(seq)
+            seq += 1
+            if rng.random() < 0.6:
+                item = sched.next(timeout=0)
+                if item is not None:
+                    served[item[1]].append(item[2]["seq"])
+                    inflight.append((item[0], item[3]))
+        while True:                                   # drain
+            for stream, control in inflight:
+                sched.done(stream, 0.0, control=control)
+            inflight.clear()
+            item = sched.next(timeout=0)
+            if item is None:
+                break
+            served[item[1]].append(item[2]["seq"])
+            inflight.append((item[0], item[3]))
+        assert served == submitted                    # FIFO + no starvation
+        assert sched.stats()["inflight"] == 0
+
+
+# ------------------------------------------------- bounded ingest -----
+def test_ingest_shed_policy_raises_retryable_and_counts():
+    srv = _mlp_server(ingest_max_rows=4, ingest_policy="shed")
+    sess = srv.session()
+    X, _ = image_pool(8, seed=0)
+    with sess._ingest_cv:                  # stall the worker (RLock)
+        t = sess.push_data(list(X[:4]), asynchronous=True)
+        with pytest.raises(ServerOverloaded) as ei:
+            sess.push_data(list(X[4:5]), asynchronous=True)
+        assert ei.value.retry_after_s > 0
+    sess.flush()
+    assert t.done()
+    st = srv.stats()
+    assert st["pool"] == 4
+    assert st["ingest"]["shed"] == 1
+    assert st["ingest"]["rows_hw"] == 4
+    # drained: a retry of the shed push now succeeds — nothing was lost,
+    # nothing duplicated
+    sess.push_data(list(X[4:5]), asynchronous=True)
+    sess.flush()
+    assert srv.stats()["pool"] == 5
+
+
+def test_ingest_block_policy_backpressures_and_bounds_high_water():
+    srv = _mlp_server(ingest_max_rows=4, ingest_policy="block")
+    sess = srv.session()
+    X, _ = image_pool(12, seed=1)
+    done = threading.Event()
+
+    def producer():
+        for i in range(3):
+            sess.push_data(list(X[i * 4:(i + 1) * 4]), asynchronous=True)
+        done.set()
+
+    threading.Thread(target=producer, daemon=True).start()
+    assert done.wait(timeout=30)           # blocked pushes eventually admit
+    sess.flush()
+    st = srv.stats()
+    assert st["pool"] == 12
+    assert st["ingest"]["rows_hw"] <= 4    # cap held throughout
+    assert st["ingest"]["shed"] == 0
+
+
+def test_oversize_single_push_admitted_when_queue_empty():
+    srv = _mlp_server(ingest_max_rows=2, ingest_policy="shed")
+    X, _ = image_pool(6, seed=2)
+    t = srv.push_data(list(X), asynchronous=True)    # 6 rows > cap, empty
+    srv.flush()
+    assert t.done() and srv.stats()["pool"] == 6
+
+
+def test_bad_ingest_policy_rejected():
+    srv = _mlp_server(ingest_max_rows=4, ingest_policy="drop")
+    with pytest.raises(ValueError, match="block"):
+        srv.push_data([np.zeros((192,), np.float32)], asynchronous=True)
+
+
+# ------------------------------------------------- flush timeout ------
+def _stall_integrate(sess):
+    """Gate the ingest worker inside _integrate (cv released there), so
+    the queue genuinely cannot drain until the gate opens."""
+    gate = threading.Event()
+    orig = sess._integrate
+
+    def stalled(batch):
+        gate.wait(timeout=30)
+        return orig(batch)
+
+    sess._integrate = stalled
+    return gate
+
+
+def test_flush_timeout_raises_and_backlog_survives():
+    srv = _mlp_server()
+    sess = srv.session()
+    gate = _stall_integrate(sess)
+    X, _ = image_pool(4, seed=3)
+    sess.push_data(list(X), asynchronous=True)
+    t0 = time.perf_counter()
+    with pytest.raises(TimeoutError, match="not drained|pending"):
+        sess.flush(timeout=0.2)
+    assert time.perf_counter() - t0 < 2.0
+    gate.set()
+    sess.flush()                           # released: drains fine
+    assert srv.stats()["pool"] == 4
+
+
+def test_flush_timeout_over_tcp():
+    srv = _mlp_server()
+    rpc = serve_tcp(srv)
+    cli = ALClient(url=f"127.0.0.1:{rpc.port}")
+    try:
+        sess = srv.session()
+        gate = _stall_integrate(sess)
+        X, _ = image_pool(4, seed=4)
+        cli.push_data(list(X), asynchronous=True).result(timeout=30)
+        with pytest.raises(TimeoutError):
+            cli.flush(timeout=0.2)         # typed across the wire
+        gate.set()
+        cli.flush()
+        assert cli.stats()["pool"] == 4
+    finally:
+        cli.close()
+        rpc.stop()
+
+
+# ------------------------------------------------- client retry -------
+def _overloaded_then_ok(n_sheds, retry_after_s=0.01):
+    calls = {"n": 0}
+
+    def handler(p, s, ctx):
+        calls["n"] += 1
+        if calls["n"] <= n_sheds:
+            raise ServerOverloaded(retry_after_s, "synthetic overload")
+        return {}
+
+    return handler, calls
+
+
+def test_client_retries_overloaded_with_bounded_attempts():
+    handler, calls = _overloaded_then_ok(2)
+    srv = RPCServer({"flush": handler}, "127.0.0.1", 0, max_workers=2)
+    srv.start()
+    try:
+        cli = ALClient(url=f"127.0.0.1:{srv.port}", retries=2,
+                       retry_jitter_s=0.0)
+        cli.flush()                        # 2 sheds then success
+        assert calls["n"] == 3
+        # server-side per-tenant accounting saw the retry attempts
+        assert srv.stats()["retries"] == 2
+        cli.close()
+    finally:
+        srv.stop()
+
+
+def test_client_retry_budget_exhausts_to_typed_error():
+    handler, calls = _overloaded_then_ok(10)
+    srv = RPCServer({"flush": handler}, "127.0.0.1", 0, max_workers=2)
+    srv.start()
+    try:
+        cli = ALClient(url=f"127.0.0.1:{srv.port}", retries=1,
+                       retry_jitter_s=0.0)
+        with pytest.raises(ServerOverloaded) as ei:
+            cli.flush()
+        assert ei.value.retry_after_s > 0  # contract: hint always present
+        assert calls["n"] == 2             # initial + 1 retry, bounded
+        cli.close()
+    finally:
+        srv.stop()
+
+
+def test_connection_error_is_never_retried():
+    """The PR-9 poisoning contract survives the retry layer: a mid-call
+    timeout poisons the connection and raises ConnectionError — the op
+    may have executed, so the client must NOT resend it."""
+    calls = {"n": 0}
+
+    def slow(p, s, ctx):
+        calls["n"] += 1
+        time.sleep(0.6)
+        return {}
+
+    srv = RPCServer({"flush": slow}, "127.0.0.1", 0, max_workers=2)
+    srv.start()
+    try:
+        cli = ALClient(url=f"127.0.0.1:{srv.port}", retries=5)
+        cli._rpc.sock.settimeout(0.15)
+        with pytest.raises(ConnectionError):
+            cli.flush()
+        time.sleep(0.8)
+        assert calls["n"] == 1             # exactly one execution
+    finally:
+        srv.stop()
+
+
+# ------------------------------------------- deadline propagation -----
+def test_expired_deadline_sheds_before_dispatch():
+    ran = []
+    srv = RPCServer({"op": lambda p, s, c: ran.append(1) or {}},
+                    "127.0.0.1", 0, max_workers=2)
+    srv.start()
+    try:
+        cli = RPCClient("127.0.0.1", srv.port, timeout=5.0)
+        with pytest.raises(DeadlineExceeded):
+            cli.call("op", deadline=time.time() - 1.0)
+        assert not ran                     # never reached the handler
+        assert srv.stats()["expired"] == 1
+        cli.close()
+    finally:
+        srv.stop()
+
+
+def test_deadline_sheds_at_queue_head_behind_slow_op():
+    gate = threading.Event()
+    ran = []
+
+    def slow(p, s, ctx):
+        gate.wait(timeout=10)
+        return {}
+
+    def fast(p, s, ctx):
+        ran.append(1)
+        return {}
+
+    srv = RPCServer({"slow": slow, "fast": fast}, "127.0.0.1", 0,
+                    max_workers=1)        # single worker: forced queueing
+    srv.start()
+    try:
+        c1 = RPCClient("127.0.0.1", srv.port, timeout=10.0)
+        c2 = RPCClient("127.0.0.1", srv.port, timeout=10.0)
+        blocker = threading.Thread(target=c1.call, args=("slow",),
+                                   daemon=True)
+        blocker.start()
+        time.sleep(0.2)                   # slow op occupies the worker
+        results = []
+        t2 = threading.Thread(
+            target=lambda: results.append(_catch(c2)), daemon=True)
+        t2.start()
+        time.sleep(0.5)                   # deadline passes while queued
+        gate.set()
+        blocker.join(timeout=10)
+        t2.join(timeout=10)
+        assert results and isinstance(results[0], DeadlineExceeded)
+        assert not ran                    # shed at queue-head, never ran
+        assert srv.stats()["expired"] >= 1
+        c1.close()
+        c2.close()
+    finally:
+        srv.stop()
+
+
+def _catch(cli):
+    try:
+        return cli.call("fast", deadline=time.time() + 0.3)
+    except Exception as e:
+        return e
+
+
+# ------------------------------ hypothesis: scheduler invariants ------
+@pytest.mark.slow
+def test_fairness_scheduler_invariants_random_interleavings():
+    """Hypothesis: for any per-tenant op interleaving and weight map, the
+    scheduler preserves per-connection FIFO order, serves every admitted
+    op (no starvation), and — run end-to-end against an ALServer TCP twin
+    with fair scheduling active — selections are bit-identical to an
+    unscheduled serial replay of the same per-tenant op sequences."""
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    ops_st = st.lists(
+        st.tuples(st.sampled_from("abcd"), st.integers(0, 99)),
+        min_size=5, max_size=60)
+    weights_st = st.fixed_dictionaries(
+        {t: st.sampled_from([0.5, 1.0, 2.0, 4.0]) for t in "abcd"})
+
+    @settings(max_examples=25, deadline=None)
+    @given(ops=ops_st, weights=weights_st, serve_bias=st.floats(0.1, 0.9))
+    def run(ops, weights, serve_bias):
+        rng = random.Random(1234)
+        sched = FrameScheduler(weights=weights)
+        streams = {t: _Stream() for t in "abcd"}
+        submitted = {t: [] for t in "abcd"}
+        served = {t: [] for t in "abcd"}
+        inflight = []
+        for i, (t, _) in enumerate(ops):
+            sched.submit(streams[t], t, {"seq": i})
+            submitted[t].append(i)
+            while inflight and rng.random() < serve_bias:
+                stream, control = inflight.pop(0)
+                sched.done(stream, 0.0, control=control)
+            if rng.random() < serve_bias:
+                item = sched.next(timeout=0)
+                if item is not None:
+                    served[item[1]].append(item[2]["seq"])
+                    inflight.append((item[0], item[3]))
+        while True:
+            for stream, control in inflight:
+                sched.done(stream, 0.0, control=control)
+            inflight.clear()
+            item = sched.next(timeout=0)
+            if item is None:
+                break
+            served[item[1]].append(item[2]["seq"])
+            inflight.append((item[0], item[3]))
+        assert served == submitted        # per-stream FIFO, all served
+        assert sched.stats()["inflight"] == 0
+
+    run()
+
+    # end-to-end bit-identity: per-tenant AL op sequences through the
+    # fair-scheduled TCP server == unscheduled serial replay, per tenant
+    X, Y = image_pool(48, seed=11)
+    srv = _mlp_server(fairness_weights={"t0": 4.0, "t1": 1.0})
+    rpc = serve_tcp(srv)
+    clients = [ALClient(url=f"127.0.0.1:{rpc.port}", session="new")
+               for _ in range(2)]
+    try:
+        tcp_sel = []
+        for i, cli in enumerate(clients):
+            cli.push_data(list(X[i * 24:(i + 1) * 24]))
+            keys = cli.query(24, "lc")["keys"]
+            cli.label(keys[:8], Y[i * 24:i * 24 + 8])
+            tcp_sel.append(cli.query(6, "coreset")["keys"])
+        for i in range(2):
+            oracle = _mlp_server()
+            oracle.push_data(list(X[i * 24:(i + 1) * 24]))
+            keys = oracle.query(24, "lc")["keys"]
+            oracle.label(keys[:8], Y[i * 24:i * 24 + 8])
+            assert oracle.query(6, "coreset")["keys"] == tcp_sel[i]
+    finally:
+        for cli in clients:
+            cli.close()
+        rpc.stop()

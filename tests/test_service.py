@@ -370,6 +370,44 @@ al_worker:
                                                       0.05)
 
 
+def test_yaml_overload_serving_knobs():
+    """The overload-safe-serving knobs round-trip through the YAML subset:
+    admission (nested map incl. per-tenant fairness weights), socket
+    idle/send timeouts, and the bounded-ingest cap/policy. Defaults keep
+    every overload behaviour OFF — the bit-identity oracle."""
+    text = """
+al_worker:
+  idle_timeout_s: 12.5
+  send_timeout_s: 3.5
+  ingest_max_rows: 1024
+  ingest_max_bytes: 1048576
+  ingest_policy: shed
+  admission:
+    enabled: true
+    max_inflight: 32
+    tenant_rate: 50.0
+    tenant_burst: 16
+    weights:
+      tenant_a: 3.0
+      tenant_b: 1
+"""
+    cfg = ALServiceConfig.from_dict(parse_yaml(text))
+    assert cfg.admission is True
+    assert cfg.admission_max_inflight == 32
+    assert cfg.admission_tenant_rate == 50.0
+    assert cfg.admission_tenant_burst == 16.0
+    assert cfg.fairness_weights == {"tenant_a": 3.0, "tenant_b": 1.0}
+    assert cfg.idle_timeout_s == 12.5 and cfg.send_timeout_s == 3.5
+    assert cfg.ingest_max_rows == 1024
+    assert cfg.ingest_max_bytes == 1048576
+    assert cfg.ingest_policy == "shed"
+    d = ALServiceConfig()
+    assert d.admission is False and d.fairness_weights is None
+    assert d.idle_timeout_s == 0.0 and d.send_timeout_s == 30.0
+    assert (d.ingest_max_rows, d.ingest_max_bytes) == (0, 0)
+    assert d.ingest_policy == "block"
+
+
 # ----------------------------------------------------------------- server --
 @pytest.fixture(scope="module")
 def pool():

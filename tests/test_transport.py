@@ -123,3 +123,164 @@ def test_clients_beyond_max_workers_queue_instead_of_refusing():
         assert results == [True, True, True]
     finally:
         srv.stop()
+
+
+def test_silent_client_idle_timeout_fires_on_close():
+    # a half-open / connect-and-go-silent client must not hold server
+    # state forever: the idle timeout closes it and fires on_close
+    closed = []
+    srv = RPCServer({"ping": lambda p, s, c: {}}, "127.0.0.1", 0,
+                    max_workers=2, on_close=lambda ctx: closed.append(ctx),
+                    idle_timeout_s=0.3)
+    srv.start()
+    try:
+        import socket as _socket
+        silent = _socket.create_connection(("127.0.0.1", srv.port))
+        # an ACTIVE client on the same server stays connected throughout
+        cli = RPCClient("127.0.0.1", srv.port, timeout=5.0)
+        deadline = time.time() + 5.0
+        while not closed and time.time() < deadline:
+            cli.call("ping")
+            time.sleep(0.05)
+        assert len(closed) == 1       # the silent conn, not the active one
+        assert cli.call("ping") == {}
+        # server-side close is observable client-side as EOF
+        silent.settimeout(2.0)
+        assert silent.recv(1) == b""
+        silent.close()
+        cli.close()
+    finally:
+        srv.stop()
+
+
+def test_stalled_send_to_nonreading_client_frees_the_worker():
+    # a client that sends a request and never reads the (large) response
+    # must not wedge a handler thread forever: the send times out, the
+    # connection closes, on_close fires, and other clients keep working
+    closed = []
+    big = {"blob": np.zeros((64 << 20,), np.uint8)}  # 64MB >> socket bufs
+    srv = RPCServer({"big": lambda p, s, c: big,
+                     "ping": lambda p, s, c: {}},
+                    "127.0.0.1", 0, max_workers=1,
+                    on_close=lambda ctx: closed.append(ctx),
+                    send_timeout_s=0.5)
+    srv.start()
+    try:
+        from repro.service.transport import send_msg
+        import socket as _socket
+        dead = _socket.create_connection(("127.0.0.1", srv.port))
+        send_msg(dead, {"op": "big", "id": 1})       # request, never read
+        deadline = time.time() + 10.0
+        while not closed and time.time() < deadline:
+            time.sleep(0.05)
+        assert len(closed) == 1       # send stalled -> conn reclaimed
+        # the single worker is free again for a well-behaved client
+        cli = RPCClient("127.0.0.1", srv.port, timeout=5.0)
+        assert cli.call("ping") == {}
+        cli.close()
+        dead.close()
+    finally:
+        srv.stop()
+
+
+def test_stop_under_load_is_deterministic_no_leaked_threads():
+    # stop() while frames are queued and executing: in-flight handlers
+    # drain (their responses arrive), queued-not-started frames answer
+    # with a typed shutdown ConnectionError, on_close fires exactly once
+    # per connection, and no server thread outlives stop()
+    before = {t.name for t in threading.enumerate()}
+    closed = []
+    gate = threading.Event()
+
+    def slow(p, s, ctx):
+        gate.wait(timeout=10)
+        return {"done": True}
+
+    srv = RPCServer({"slow": slow}, "127.0.0.1", 0, max_workers=1,
+                    on_close=lambda ctx: closed.append(ctx))
+    srv.start()
+    clients = [RPCClient("127.0.0.1", srv.port, timeout=30.0)
+               for _ in range(3)]
+    results = []
+
+    def call(c):
+        try:
+            results.append(c.call("slow"))
+        except Exception as e:
+            results.append(e)
+
+    threads = [threading.Thread(target=call, args=(c,)) for c in clients]
+    for t in threads:
+        t.start()
+    time.sleep(0.3)                   # 1 executing, 2 queued
+    stopper = threading.Thread(target=srv.stop)
+    stopper.start()
+    time.sleep(0.2)
+    gate.set()                        # release the in-flight handler
+    stopper.join(timeout=20)
+    assert not stopper.is_alive()
+    for t in threads:
+        t.join(timeout=10)
+    served = [r for r in results if isinstance(r, dict)]
+    shut = [r for r in results if isinstance(r, ConnectionError)]
+    assert len(served) == 1           # the in-flight frame drained
+    assert len(shut) == 2             # queued frames: typed shutdown
+    assert all("shutting down" in str(e) or "closed" in str(e)
+               for e in shut)
+    assert len(closed) == 3           # on_close exactly once per conn
+    for c in clients:
+        c.close()
+    # no leaked rpc threads: everything the server started is joined
+    time.sleep(0.2)
+    leaked = {t.name for t in threading.enumerate()} - before
+    assert not {n for n in leaked if n.startswith("rpc-")}
+
+
+def test_stop_under_load_reclaims_sessions():
+    # serve_tcp + stop with live sessions: every per-connection session
+    # is reclaimed through on_close (no leaked server-side sessions)
+    from repro.data.synthetic import image_pool
+    from repro.service.backends import MLPBackend
+    from repro.service.client import ALClient, serve_tcp
+    from repro.service.config import ALServiceConfig
+    from repro.service.server import ALServer
+
+    srv = ALServer(ALServiceConfig(batch_size=16),
+                   backend=MLPBackend(in_dim=192, feat_dim=32))
+    rpc = serve_tcp(srv)
+    clis = [ALClient(url=f"127.0.0.1:{rpc.port}", session="new")
+            for _ in range(3)]
+    X, _ = image_pool(6, seed=0)
+    for cli in clis:
+        cli.push_data(list(X))
+    assert len(srv.session_ids()) == 4          # default + 3
+    rpc.stop()                                  # stop with clients live
+    assert srv.session_ids() == ["default"]     # all reclaimed
+    for cli in clis:
+        try:
+            cli.close()
+        except Exception:
+            pass
+
+
+def test_pipelined_frames_serve_in_fifo_order():
+    # frame-level dispatch must preserve per-connection ordering even
+    # with many workers: responses come back in request order
+    from repro.service.transport import send_msg, recv_msg
+    import socket as _socket
+
+    log = []
+    srv = RPCServer({"echo": lambda p, s, c: log.append(p["i"]) or
+                     {"i": p["i"]}}, "127.0.0.1", 0, max_workers=8)
+    srv.start()
+    try:
+        sock = _socket.create_connection(("127.0.0.1", srv.port))
+        sock.settimeout(10.0)
+        for i in range(20):           # pipelined: all sent before reads
+            send_msg(sock, {"op": "echo", "payload": {"i": i}, "id": i})
+        got = [recv_msg(sock)["result"]["i"] for _ in range(20)]
+        assert got == list(range(20)) # response order == request order
+        assert log == list(range(20)) # execution order too (FIFO, 1 at
+        sock.close()                  # a time per connection)
+    finally:
+        srv.stop()
